@@ -1,0 +1,42 @@
+"""Paper Figs. 7 + 8: sparse initialization — llh (total/word/doc split)
+and early-iteration sampling time vs random init."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import row
+from repro.core import LDATrainer, TrainConfig, LDAHyperParams
+from repro.data import synthetic_lda_corpus
+
+
+def main(iters: int = 8):
+    corpus, _ = synthetic_lda_corpus(
+        3, num_docs=400, num_words=700, num_topics=32, avg_doc_len=60
+    )
+    hyper = LDAHyperParams(num_topics=32, alpha=0.05, beta=0.01)
+    for init in ("random", "sparse_word", "sparse_doc"):
+        tr = LDATrainer(
+            corpus, hyper,
+            TrainConfig(algorithm="zen_sparse", init=init,
+                        sparse_init_degree=0.15, max_kw=64, max_kd=64),
+        )
+        st = tr.init_state(jax.random.key(0))
+        # early-iteration time (Fig. 8: the bottleneck the paper targets)
+        t0 = time.perf_counter()
+        st = tr.step(st)
+        first_iter = time.perf_counter() - t0
+        for _ in range(iters - 1):
+            st = tr.step(st)
+        split = tr.llh_split(st)
+        row(
+            f"fig7_8_init_{init}", first_iter * 1e6,
+            f"llh_total={float(split.total):.1f};"
+            f"llh_word={float(split.word):.1f};"
+            f"llh_doc={float(split.doc):.1f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

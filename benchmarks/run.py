@@ -1,0 +1,44 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
+
+  fig3/4   ZenLDA vs LightLDA vs SparseLDA time + llh   (bench_algorithms)
+  fig5/6   scalability: partitions and topic count       (bench_scaling)
+  fig7/8   sparse initialization                         (bench_init)
+  fig9     converged-token exclusion + §5.2 delta agg    (bench_exclusion)
+  fig10    redundant-computation elimination (Alg. 5)    (bench_redundant)
+  table1   per-algorithm work terms (complexity model)   (bench_table1)
+  sec41    partitioner quality (DBH+ et al.)             (bench_partition)
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section list (e.g. fig3,fig9)")
+    args = ap.parse_args()
+    sections = {
+        "fig3": lambda: __import__("benchmarks.bench_algorithms",
+                                   fromlist=["main"]).main(),
+        "fig5": lambda: __import__("benchmarks.bench_scaling",
+                                   fromlist=["main"]).main(),
+        "fig7": lambda: __import__("benchmarks.bench_init",
+                                   fromlist=["main"]).main(),
+        "fig9": lambda: __import__("benchmarks.bench_exclusion",
+                                   fromlist=["main"]).main(),
+        "fig10": lambda: __import__("benchmarks.bench_redundant",
+                                    fromlist=["main"]).main(),
+        "table1": lambda: __import__("benchmarks.bench_table1",
+                                     fromlist=["main"]).main(),
+        "sec41": lambda: __import__("benchmarks.bench_partition",
+                                    fromlist=["main"]).main(),
+    }
+    wanted = args.only.split(",") if args.only else list(sections)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        sections[name]()
+
+
+if __name__ == "__main__":
+    main()

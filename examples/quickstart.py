@@ -1,0 +1,37 @@
+"""Quickstart: train ZenLDA on a synthetic corpus and print topics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import LDAHyperParams, LDATrainer, TrainConfig
+from repro.data import synthetic_lda_corpus
+
+
+def main():
+    corpus, true_phi = synthetic_lda_corpus(
+        seed=0, num_docs=200, num_words=300, num_topics=10, avg_doc_len=50
+    )
+    hyper = LDAHyperParams(num_topics=10, alpha=0.1, beta=0.01)
+    trainer = LDATrainer(corpus, hyper, TrainConfig(algorithm="zen"))
+
+    state = trainer.init_state(jax.random.key(0))
+    print(f"corpus: {corpus.num_tokens} tokens, llh0 = {trainer.llh(state):.1f}")
+    for it in range(1, 31):
+        state = trainer.step(state)
+        if it % 10 == 0:
+            print(f"iter {it:3d}  llh {trainer.llh(state):12.1f}  "
+                  f"perplexity {trainer.perplexity(state):8.2f}  "
+                  f"change_rate {trainer.change_rate(state):.3f}")
+
+    # top words per learned topic
+    n_wk = np.asarray(state.n_wk)
+    print("\ntop words per topic:")
+    for k in range(hyper.num_topics):
+        top = np.argsort(-n_wk[:, k])[:8]
+        print(f"  topic {k:2d}: {top.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

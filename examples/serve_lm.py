@@ -1,0 +1,62 @@
+"""Serve a small LM with batched requests + RT-LDA topic inference side by
+side (the paper's online-inference story, §4.3).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import LDAHyperParams, LDATrainer, TrainConfig
+from repro.core.inference import rtlda_infer
+from repro.data import synthetic_lda_corpus
+from repro.models.model import init_params
+from repro.serving import ServeConfig, ServingEngine
+
+
+def serve_lm():
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config("qwen2-vl-2b-smoke"), num_layers=2)
+    params = init_params(jax.random.key(0), cfg)
+    engine = ServingEngine(params, cfg, ServeConfig(max_batch=4, max_len=64))
+    prompts = [[1, 2, 3], [9, 8], [100, 50, 25, 12], [7]]
+    t0 = time.time()
+    for p in prompts:
+        engine.submit(p, max_new=8)
+    done = engine.run_until_done()
+    dt = time.time() - t0
+    print(f"LM serving: {len(done)} requests, "
+          f"{sum(len(r.out) for r in done)} tokens in {dt:.2f}s")
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"  req {r.uid}: prompt {r.prompt} -> {r.out}")
+
+
+def serve_rtlda():
+    corpus, _ = synthetic_lda_corpus(0, num_docs=150, num_words=200,
+                                     num_topics=8, avg_doc_len=40)
+    hyper = LDAHyperParams(num_topics=8, alpha=0.1, beta=0.01)
+    tr = LDATrainer(corpus, hyper, TrainConfig(algorithm="zen"))
+    st = tr.init_state(jax.random.key(0))
+    for _ in range(20):
+        st = tr.step(st)
+    # millisecond-scale inference for "queries" (new docs)
+    infer = jax.jit(lambda words: rtlda_infer(st.n_wk, st.n_k, words, hyper))
+    query = jnp.asarray(np.random.default_rng(1).integers(0, 200, 12),
+                        jnp.int32)
+    theta = infer(query)  # compile
+    t0 = time.time()
+    for _ in range(50):
+        theta = infer(query)
+    jax.block_until_ready(theta)
+    dt = (time.time() - t0) / 50
+    print(f"RT-LDA inference: {dt*1e3:.2f} ms/query, "
+          f"theta argmax topic {int(jnp.argmax(theta))}")
+
+
+if __name__ == "__main__":
+    serve_lm()
+    serve_rtlda()

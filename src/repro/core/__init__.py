@@ -1,0 +1,17 @@
+"""ZenLDA core — the paper's primary contribution in JAX.
+
+Layers:
+  types/counts            state + count-matrix maintenance
+  decompositions          the CGS formula decompositions (paper Table 1)
+  alias                   Vose alias tables + F+ tree samplers
+  sampler                 dense vectorized sweeps (oracle + TPU dense path)
+  zen_sparse              faithful padded-sparse ZenLDA (Alg. 2)
+  baselines               SparseLDA / LightLDA on the same substrate
+  init/exclusion          sparse initialization, converged-token exclusion
+  likelihood/inference    metrics + RT-LDA serving inference
+  hyper/compactvector     topic dedup, CompactVector (Alg. 4)
+  graph/distributed       partitioning (DBH+) + multi-device iteration
+  trainer                 single-box driver
+"""
+from repro.core.types import CGSState, Corpus, LDAHyperParams  # noqa: F401
+from repro.core.trainer import LDATrainer, TrainConfig  # noqa: F401

@@ -1,0 +1,227 @@
+"""Alias tables (Walker/Vose) — the paper's O(1) samplers for gDense/wSparse.
+
+Two constructions are provided:
+
+* ``build_alias``        — jittable, fixed-iteration stack-based Vose in JAX.
+  Used inside the distributed sampler (tables are rebuilt once per iteration,
+  paper Alg. 2 lines 5-8 / 9-13).
+* ``build_alias_counts`` — host-side (numpy) *integer-exact* construction for
+  integer count vectors, implementing the paper's §5.3 refinement: scale every
+  probability by K so the average and the split probabilities stay integral,
+  avoiding the divide and float drift.  Only the H ("high") worklist is kept;
+  low items are placed into bins sequentially, exactly as described.
+
+TPU adaptation note (DESIGN.md §2): alias *sampling* is two random gathers,
+which the TPU dislikes; the production dense path therefore uses the fused
+Gumbel-max Pallas kernel instead. Alias tables remain the faithful path and
+win for very large K where an O(K) dense pass is wasteful.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AliasTable(NamedTuple):
+    prob: jax.Array  # (K,) float32 — threshold for keeping bin index
+    alias: jax.Array  # (K,) int32 — alternative outcome of each bin
+
+
+def build_alias(p: jax.Array) -> AliasTable:
+    """Jittable Vose alias construction. ``p`` is an unnormalized pmf (K,)."""
+    k = p.shape[0]
+    p = p.astype(jnp.float32)
+    total = jnp.sum(p)
+    # Degenerate all-zero pmf -> uniform.
+    q = jnp.where(total > 0, p * (k / jnp.maximum(total, 1e-30)), 1.0)
+
+    idx = jnp.arange(k, dtype=jnp.int32)
+    small0 = q < 1.0
+    # Stable partition of indices into the two stacks.
+    order_small = jnp.argsort(jnp.where(small0, idx, k)).astype(jnp.int32)
+    order_large = jnp.argsort(jnp.where(~small0, idx, k)).astype(jnp.int32)
+    n_small = jnp.sum(small0).astype(jnp.int32)
+    n_large = (k - n_small).astype(jnp.int32)
+
+    # Stacks are preallocated to 2K: every large can be demoted to small once.
+    pad = jnp.zeros((k,), jnp.int32)
+    small_stack = jnp.concatenate([order_small, pad])
+    large_stack = jnp.concatenate([order_large, pad])
+
+    prob = jnp.ones((k,), jnp.float32)
+    alias = idx
+
+    def body(_, carry):
+        q, prob, alias, ss, st, ls, lt = carry
+        can = (st > 0) & (lt > 0)
+        s = ss[jnp.maximum(st - 1, 0)]
+        l = ls[jnp.maximum(lt - 1, 0)]
+        new_prob = jnp.where(can, q[s], prob[s])
+        new_alias = jnp.where(can, l, alias[s])
+        prob = prob.at[s].set(new_prob)
+        alias = alias.at[s].set(new_alias)
+        ql = q[l] - (1.0 - q[s])
+        q = q.at[l].set(jnp.where(can, ql, q[l]))
+        l_small = ql < 1.0
+        # pop s; if the updated l became small it replaces s on the small
+        # stack, otherwise it simply stays on top of the large stack.
+        ss = ss.at[jnp.maximum(st - 1, 0)].set(
+            jnp.where(can & l_small, l, ss[jnp.maximum(st - 1, 0)])
+        )
+        st = jnp.where(can, jnp.where(l_small, st, st - 1), st)
+        lt = jnp.where(can, jnp.where(l_small, lt - 1, lt), lt)
+        return q, prob, alias, ss, st, ls, lt
+
+    carry = (q, prob, alias, small_stack, n_small, large_stack, n_large)
+    carry = jax.lax.fori_loop(0, 2 * k, body, carry)
+    _, prob, alias, _, _, _, _ = carry
+    return AliasTable(prob=prob, alias=alias)
+
+
+def sample_alias(table: AliasTable, u_bin: jax.Array, u_split: jax.Array) -> jax.Array:
+    """O(1) alias sampling: pick a bin with u_bin, resolve split with u_split.
+
+    ``u_bin``/``u_split`` are uniforms in [0,1) of any (matching) shape.
+    The paper's random-number-reuse trick (§5.3 "Others") — using one uniform
+    for both the bin index and the split — is available via
+    ``sample_alias_reuse``.
+    """
+    k = table.prob.shape[0]
+    bins = jnp.minimum((u_bin * k).astype(jnp.int32), k - 1)
+    keep = u_split < table.prob[bins]
+    return jnp.where(keep, bins, table.alias[bins])
+
+
+def sample_alias_reuse(table: AliasTable, u: jax.Array) -> jax.Array:
+    """Alias sampling reusing one uniform: fractional part resolves the split."""
+    k = table.prob.shape[0]
+    scaled = u * k
+    bins = jnp.minimum(scaled.astype(jnp.int32), k - 1)
+    frac = scaled - bins.astype(scaled.dtype)
+    keep = frac < table.prob[bins]
+    return jnp.where(keep, bins, table.alias[bins])
+
+
+def alias_pmf(table: AliasTable) -> jax.Array:
+    """Exact pmf realized by the table (for property tests)."""
+    k = table.prob.shape[0]
+    direct = table.prob / k
+    spill = jnp.zeros((k,)).at[table.alias].add((1.0 - table.prob) / k)
+    return direct + spill
+
+
+def build_alias_counts(counts: np.ndarray) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Host-side integer-exact alias build for integer count vectors (§5.3).
+
+    Implements the paper's refinement: scale every count by K so that the
+    average bin mass equals ``total`` and all split thresholds stay integral
+    (no divides, no float drift); maintain only the H (above-average)
+    worklist and place low bins sequentially.
+
+    Bin i keeps itself when ``u_int < prob_num[i]`` with ``u_int`` uniform
+    over [0, total). Returns (prob_num int64 (K,), alias int32 (K,), total).
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    k = counts.shape[0]
+    total = int(counts.sum())
+    if total == 0:
+        return np.full(k, 1, np.int64), np.arange(k, dtype=np.int32), 1
+    q = counts * k  # scaled masses; average bin mass == total (integer)
+    prob_num = np.full(k, total, dtype=np.int64)
+    alias = np.arange(k, dtype=np.int32)
+    high = [i for i in range(k) if q[i] > total]  # the only worklist kept
+    low = [i for i in range(k) if q[i] < total]  # consumed sequentially
+    while low and high:
+        s = low.pop()
+        l = high[-1]
+        prob_num[s] = q[s]
+        alias[s] = l
+        q[l] -= total - q[s]
+        if q[l] <= total:
+            high.pop()
+            if q[l] < total:
+                low.append(l)
+    # Integer arithmetic is exact: anything left has mass exactly ``total``.
+    return prob_num, alias, total
+
+
+def sample_alias_counts(
+    prob_num: np.ndarray, alias: np.ndarray, total: int, rng: np.random.Generator, n: int
+) -> np.ndarray:
+    """Host-side sampling from an integer alias table."""
+    k = prob_num.shape[0]
+    bins = rng.integers(0, k, size=n)
+    u = rng.integers(0, total, size=n)
+    return np.where(u < prob_num[bins], bins, alias[bins]).astype(np.int32)
+
+
+class FPlusTree(NamedTuple):
+    """F+ tree (complete binary tree over topic masses) — Table 1's sampler
+    for terms that change per sample (ZenLDAHybrid's N_kd*beta term).
+
+    ``tree``: (2 * cap,) float32 where cap = next_pow2(K); leaves at
+    [cap, cap+K). Build O(K), update O(log K), sample O(log K).
+    """
+
+    tree: jax.Array
+    k: int
+
+
+def ftree_build(p: jax.Array) -> FPlusTree:
+    k = p.shape[0]
+    cap = 1 << max(1, (k - 1).bit_length())
+    leaves = jnp.zeros((cap,), jnp.float32).at[:k].set(p.astype(jnp.float32))
+    tree = jnp.zeros((2 * cap,), jnp.float32).at[cap:].set(leaves)
+
+    def up(level_size, tree):
+        i = jnp.arange(level_size) + level_size
+        return tree.at[i].set(tree[2 * i] + tree[2 * i + 1])
+
+    size = cap // 2
+    while size >= 1:
+        tree = up(size, tree)
+        size //= 2
+    return FPlusTree(tree=tree, k=k)
+
+
+def ftree_total(t: FPlusTree) -> jax.Array:
+    return t.tree[1]
+
+
+def ftree_sample(t: FPlusTree, u: jax.Array) -> jax.Array:
+    """Descend the tree with target mass u * total. Vectorized over u."""
+    cap = t.tree.shape[0] // 2
+    target = u * t.tree[1]
+
+    def body(carry, _):
+        node, target = carry
+        left = t.tree[2 * node]
+        go_right = target >= left
+        node = 2 * node + go_right.astype(node.dtype)
+        target = jnp.where(go_right, target - left, target)
+        return (node, target), None
+
+    node0 = jnp.ones_like(u, dtype=jnp.int32)
+    depth = int(np.log2(cap))  # root (node 1) -> leaf level
+    (node, _), _ = jax.lax.scan(body, (node0, target), None, length=depth)
+    return jnp.minimum(node - cap, t.k - 1).astype(jnp.int32)
+
+
+def ftree_update(t: FPlusTree, index: jax.Array, new_value: jax.Array) -> FPlusTree:
+    """Set leaf ``index`` to ``new_value`` and fix ancestors (O(log K)).
+
+    ``index`` may be traced; the ancestor walk has fixed depth log2(cap)+1.
+    """
+    cap = t.tree.shape[0] // 2
+    leaf = index + cap
+    delta = new_value - t.tree[leaf]
+    tree = t.tree
+    node = leaf
+    depth = int(np.log2(cap)) + 1
+    for _ in range(depth):
+        tree = tree.at[node].add(delta)
+        node = node // 2
+    return FPlusTree(tree=tree, k=t.k)

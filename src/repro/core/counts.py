@@ -1,0 +1,84 @@
+"""Count-matrix maintenance for CGS LDA.
+
+On CPU/reference paths counts are maintained with scatter-adds; the TPU hot
+path replaces the scatter with the one-hot-matmul Pallas histogram kernel
+(``repro.kernels.topic_histogram``) because scatter lowers poorly on TPU while
+an (E_tile, K) one-hot @ segment-selector matmul runs on the MXU.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def build_counts(
+    word: jax.Array,
+    doc: jax.Array,
+    topic: jax.Array,
+    num_words: int,
+    num_docs: int,
+    num_topics: int,
+    mask: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Build (n_wk, n_kd, n_k) from scratch from token assignments.
+
+    ``mask`` (optional, bool (E,)) marks *real* tokens; padded dummy tokens
+    contribute nothing. Rebuilding counts from assignments is the elastic
+    restore path: any re-partitioning of tokens yields identical counts.
+    """
+    ones = jnp.ones_like(topic) if mask is None else mask.astype(jnp.int32)
+    n_wk = jnp.zeros((num_words, num_topics), jnp.int32).at[word, topic].add(ones)
+    n_kd = jnp.zeros((num_docs, num_topics), jnp.int32).at[doc, topic].add(ones)
+    n_k = jnp.zeros((num_topics,), jnp.int32).at[topic].add(ones)
+    return n_wk, n_kd, n_k
+
+
+def delta_counts(
+    word: jax.Array,
+    doc: jax.Array,
+    old_topic: jax.Array,
+    new_topic: jax.Array,
+    num_words: int,
+    num_docs: int,
+    num_topics: int,
+    mask: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Delta aggregation (paper §5.2): counts change only where topic changed.
+
+    Returns (d_wk, d_kd, d_k) such that ``new_counts = old_counts + delta``.
+    Tokens with ``old == new`` contribute exactly zero, so the aggregate
+    becomes sparser as training converges — this is what the compressed
+    collective in ``repro.core.distributed`` exploits.
+    """
+    changed = old_topic != new_topic
+    if mask is not None:
+        changed = changed & mask
+    inc = changed.astype(jnp.int32)
+    d_wk = (
+        jnp.zeros((num_words, num_topics), jnp.int32)
+        .at[word, new_topic].add(inc)
+        .at[word, old_topic].add(-inc)
+    )
+    d_kd = (
+        jnp.zeros((num_docs, num_topics), jnp.int32)
+        .at[doc, new_topic].add(inc)
+        .at[doc, old_topic].add(-inc)
+    )
+    d_k = (
+        jnp.zeros((num_topics,), jnp.int32)
+        .at[new_topic].add(inc)
+        .at[old_topic].add(-inc)
+    )
+    return d_wk, d_kd, d_k
+
+
+def doc_lengths(doc: jax.Array, num_docs: int, mask: jax.Array | None = None) -> jax.Array:
+    ones = jnp.ones_like(doc) if mask is None else mask.astype(jnp.int32)
+    return jnp.zeros((num_docs,), jnp.int32).at[doc].add(ones)
+
+
+def word_frequencies(word: jax.Array, num_words: int, mask: jax.Array | None = None) -> jax.Array:
+    ones = jnp.ones_like(word) if mask is None else mask.astype(jnp.int32)
+    return jnp.zeros((num_words,), jnp.int32).at[word].add(ones)

@@ -1,0 +1,557 @@
+"""Distributed ZenLDA iteration on a TPU mesh (paper Fig. 2 workflow).
+
+One iteration, under ``shard_map`` on a ``(pod?, data, model)`` mesh:
+
+  step 1  N_k is replicated (the "driver broadcast" is free in SPMD)
+  step 2  model state is already resident: N_w|k sharded over `model`
+          (replicated over data axes), N_k|d sharded over data axes
+          (replicated over `model`) — the master->mirror ship becomes the
+          sharding layout itself
+  step 3  every device samples its token cell with iteration-start counts
+          ("unsynchronized model", §4.1)
+  step 4  mirror->master aggregation = psum of *delta* counts (§5.2 delta
+          aggregation): ΔN_k|d over `model`, ΔN_w|k over data axes —
+          optionally width-compressed (int16/int8), the TPU realization of
+          "only the topic of changed tokens is transferred"
+  step 5  ΔN_k aggregated from the word side only (as the paper does —
+          docs outnumber words 100+x)
+
+Sampling algorithms:
+  * ``zen_dense`` — dense (T, K) three-term probabilities + Gumbel-max/CDF.
+    Exact ¬dw self-exclusion. Simple; memory-bound at large K (the gathered
+    rows dominate HBM traffic). This is the hillclimb baseline.
+  * ``zen_cdf``   — the TPU-native faithful path: per-iteration precomputed
+    CDFs replace alias tables (log K binary-search gathers beat alias-table
+    random gathers on TPU), the fresh dSparse term runs over top-``max_kd``
+    sparse doc rows (O(K_d) gathers per token, the paper's complexity), and
+    staleness in gDense/wSparse is remedied by the paper's resampling trick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.decompositions import precompute_zen_terms
+from repro.core.graph import GridPartition
+from repro.core.types import LDAHyperParams
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    algorithm: str = "zen_cdf"  # zen_cdf | zen_dense
+    sampling_method: str = "gumbel"  # zen_dense: gumbel | cdf
+    max_kd: int = 64  # zen_cdf sparse doc-row width
+    delta_dtype: str = "int32"  # int32 | int16 | int8 (psum payload width)
+    rebuild_every: int = 0  # exact count rebuild period (0 = never)
+    exclusion_start: int = 0  # 0 = disabled; else iteration to enable at
+    token_chunk: int = 0  # 0 = whole cell at once (zen_dense memory knob)
+    # doc-topic state width: counts are bounded by doc length, so int16
+    # halves every N_kd pass (top-k extraction, delta apply, llh reads) —
+    # §Perf iteration l4. Requires max doc length < 32768.
+    kd_dtype: str = "int32"  # int32 | int16
+
+
+class DistLDAState(NamedTuple):
+    """Global-view sharded state (a pytree; see ``state_shardings``)."""
+
+    topic: jax.Array  # (cells, e_cell) int32
+    prev_topic: jax.Array  # (cells, e_cell) int32
+    n_wk: jax.Array  # (W_pad, K) int32
+    n_kd: jax.Array  # (D_pad, K) int32
+    n_k: jax.Array  # (K,) int32
+    stale_iters: jax.Array  # (cells, e_cell) int32
+    same_count: jax.Array  # (cells, e_cell) int32
+    iteration: jax.Array  # () int32
+    rng: jax.Array  # key
+
+
+class DistLDAData(NamedTuple):
+    """Static (per-run) sharded token data."""
+
+    word: jax.Array  # (cells, e_cell) int32 — global relabeled ids
+    doc: jax.Array  # (cells, e_cell) int32
+    mask: jax.Array  # (cells, e_cell) bool
+
+
+def _axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    names = mesh.axis_names
+    model = "model"
+    data_axes = tuple(n for n in names if n != model)
+    return data_axes, model
+
+
+def state_shardings(mesh: Mesh) -> Tuple[DistLDAState, DistLDAData]:
+    """NamedShardings for state/data pytrees (also the dry-run in_shardings)."""
+    data_axes, model = _axes(mesh)
+    cellspec = P(data_axes + (model,), None)
+    tok = NamedSharding(mesh, cellspec)
+    return (
+        DistLDAState(
+            topic=tok, prev_topic=tok,
+            n_wk=NamedSharding(mesh, P(model, None)),
+            n_kd=NamedSharding(mesh, P(data_axes, None)),
+            n_k=NamedSharding(mesh, P()),
+            stale_iters=tok, same_count=tok,
+            iteration=NamedSharding(mesh, P()),
+            rng=NamedSharding(mesh, P()),
+        ),
+        DistLDAData(word=tok, doc=tok, mask=tok),
+    )
+
+
+def _specs(mesh: Mesh) -> Tuple[DistLDAState, DistLDAData]:
+    data_axes, model = _axes(mesh)
+    cellspec = P(data_axes + (model,), None)
+    return (
+        DistLDAState(
+            topic=cellspec, prev_topic=cellspec,
+            n_wk=P(model, None), n_kd=P(data_axes, None), n_k=P(),
+            stale_iters=cellspec, same_count=cellspec,
+            iteration=P(), rng=P(),
+        ),
+        DistLDAData(word=cellspec, doc=cellspec, mask=cellspec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Local (per-device) sampling
+# ---------------------------------------------------------------------------
+
+def _searchsorted_rows(cdf: jax.Array, targets: jax.Array) -> jax.Array:
+    """Row-wise binary search: cdf (T, N) ascending, targets (T,) -> (T,).
+
+    Dense compare+sum — fine for narrow rows (the max_kd-wide doc CDFs);
+    wide shared/per-row K-sized CDFs must use ``_bsearch_gather`` instead
+    (the dense form materializes (T, K) — §Perf iteration l1)."""
+    return jnp.minimum(
+        jnp.sum(cdf < targets[:, None], axis=-1), cdf.shape[-1] - 1
+    ).astype(jnp.int32)
+
+
+def _bsearch_gather(
+    mat: jax.Array,  # (R, K) row-wise ascending CDFs
+    rows: jax.Array,  # (T,) row id per query
+    targets: jax.Array,  # (T,)
+) -> jax.Array:
+    """True O(log K) lower-bound per query: one scalar gather per halving
+    step, never materializing (T, K). This is the TPU rendering of the
+    paper's BSearch samplers (Table 1)."""
+    k = mat.shape[1]
+    pos = jnp.zeros(rows.shape, jnp.int32)
+    step = 1 << (k - 1).bit_length()
+    while step > 0:
+        cand = pos + step
+        safe = jnp.minimum(cand - 1, k - 1)
+        vals = mat[rows, safe]
+        take = (cand <= k) & (vals < targets)
+        pos = jnp.where(take, cand, pos)
+        step //= 2
+    return jnp.minimum(pos, k - 1)
+
+
+def _bsearch_shared(cdf: jax.Array, targets: jax.Array) -> jax.Array:
+    """Lower-bound of each target in one shared ascending CDF (K,)."""
+    return jnp.minimum(
+        jnp.searchsorted(cdf, targets).astype(jnp.int32), cdf.shape[0] - 1
+    )
+
+
+def _zen_dense_local(
+    key, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k, hyper, num_words_pad,
+    method: str, token_chunk: int,
+):
+    """Dense per-token (T, K) three-term probabilities; exact ¬dw."""
+    k = hyper.num_topics
+
+    def chunk(args):
+        w, d, z, subkey = args
+        onehot = jax.nn.one_hot(z, k, dtype=jnp.int32)
+        nw = (n_wk_l[w] - onehot).astype(jnp.float32)
+        nd = (n_kd_l[d] - onehot).astype(jnp.float32)
+        nk = (n_k[None, :] - onehot).astype(jnp.float32)
+        alpha_k = hyper.alpha_k(n_k)[None, :]
+        w_beta = num_words_pad * hyper.beta
+        t1 = 1.0 / (nk + w_beta)
+        p = (alpha_k * hyper.beta + nw * alpha_k + nd * (nw + hyper.beta)) * t1
+        if method == "gumbel":
+            g = jax.random.gumbel(subkey, p.shape, dtype=jnp.float32)
+            return jnp.argmax(jnp.log(jnp.maximum(p, 1e-30)) + g, -1).astype(jnp.int32)
+        cdf = jnp.cumsum(p, axis=-1)
+        u = jax.random.uniform(subkey, (p.shape[0], 1)) * cdf[:, -1:]
+        return _searchsorted_rows(cdf, u[:, 0])
+
+    e = word_l.shape[0]
+    if not token_chunk or token_chunk >= e:
+        return chunk((word_l, doc_l, z_old, key))
+    assert e % token_chunk == 0
+    n = e // token_chunk
+    keys = jax.random.split(key, n)
+    out = jax.lax.map(
+        chunk,
+        (word_l.reshape(n, -1), doc_l.reshape(n, -1), z_old.reshape(n, -1), keys),
+    )
+    return out.reshape(e)
+
+
+def _zen_cdf_local(
+    key, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k, hyper,
+    num_words_pad: int, max_kd: int,
+):
+    """TPU-native faithful ZenLDA: precomputed CDFs + sparse doc rows.
+
+    Work per token: O(log K) (terms 1-2) + O(max_kd) (term 3); per-iteration
+    precompute: two passes over the local N_w|k block.
+    """
+    k = hyper.num_topics
+    terms = precompute_zen_terms(n_k, hyper, num_words_pad)
+
+    # --- per-iteration precompute (the "build tables" stage, Alg. 2 l.5-13)
+    g_cdf = jnp.cumsum(terms.g_dense)  # (K,)
+    m1 = g_cdf[-1]
+    w_vals = n_wk_l.astype(jnp.float32) * terms.t4[None, :]  # (Ws, K)
+    w_cdf = jnp.cumsum(w_vals, axis=-1)
+    m2_all = w_cdf[:, -1]  # (Ws,)
+    # sparse doc rows: top-max_kd topics by count. approx_max_k lowers to
+    # the TPU PartialReduce unit (one pass over the block); exact top_k
+    # lowers to a full row sort (§Perf iteration l2)
+    kd_cnt, kd_idx = jax.lax.approx_max_k(
+        n_kd_l.astype(jnp.float32), min(max_kd, k), recall_target=0.95
+    )
+    kd_cnt = kd_cnt.astype(jnp.int32)
+
+    # --- per-token terms
+    rows_idx = kd_idx[doc_l]  # (T, max_kd)
+    rows_cnt = kd_cnt[doc_l]
+    nwk_at = n_wk_l[word_l[:, None], rows_idx]  # (T, max_kd) gathers
+    d_vals = (
+        rows_cnt.astype(jnp.float32)
+        * (nwk_at.astype(jnp.float32) + hyper.beta)
+        * terms.t1[rows_idx]
+    )
+    d_vals = jnp.where(rows_cnt > 0, d_vals, 0.0)
+    d_cdf = jnp.cumsum(d_vals, axis=-1)
+    m3 = d_cdf[:, -1]
+    m2 = m2_all[word_l]
+
+    def draw(key):
+        ku, kr = jax.random.split(key)
+        u = jax.random.uniform(ku, word_l.shape) * (m1 + m2 + m3)
+        # term 1: shared global CDF (replaces gTable) — O(log K)
+        z_g = _bsearch_shared(g_cdf, u)
+        # term 2: per-word CDF row (replaces wTable) — O(log K) scalar
+        # gathers per token; the dense form gathered (T, K) rows (31 GB at
+        # webchunk scale — §Perf iteration l1)
+        t2_target = jnp.maximum(u - m1, 0.0)
+        z_w = _bsearch_gather(w_cdf, word_l, t2_target)
+        # term 3: doc sparse row CDF (paper's dSparse + BSearch) — rows are
+        # only max_kd wide, dense compare is the cheaper form here
+        t3_target = jnp.maximum(u - m1 - m2, 0.0)
+        pos = _searchsorted_rows(d_cdf, t3_target)
+        z_d = jnp.take_along_axis(rows_idx, pos[:, None], -1)[:, 0]
+        branch = jnp.where(u < m1, 0, jnp.where(u < m1 + m2, 1, 2))
+        z = jnp.where(branch == 0, z_g, jnp.where(branch == 1, z_w, z_d))
+        return jnp.minimum(z, k - 1).astype(jnp.int32), branch
+
+    key_a, key_b, key_r = jax.random.split(key, 3)
+    z1, branch = draw(key_a)
+    z2, _ = draw(key_b)
+
+    # resampling remedy (§3.1) for the staleness of terms 2 and 3
+    nw_prev = jnp.maximum(
+        n_wk_l[word_l, z_old].astype(jnp.float32), 1.0
+    )
+    nd_prev = jnp.maximum(
+        n_kd_l[doc_l, z_old].astype(jnp.float32), 1.0
+    )
+    p_w = 1.0 / nw_prev
+    p_d = jnp.clip(1.0 / nd_prev + (nd_prev + nw_prev - 1.0) / (nd_prev * nw_prev), 0.0, 1.0)
+    remedy_p = jnp.where(branch == 1, p_w, jnp.where(branch == 2, p_d, 0.0))
+    u_r = jax.random.uniform(key_r, z1.shape)
+    return jnp.where((z1 == z_old) & (u_r < remedy_p), z2, z1)
+
+
+# ---------------------------------------------------------------------------
+# The distributed step
+# ---------------------------------------------------------------------------
+
+def _compress_psum(delta: jax.Array, axes, dtype: str) -> jax.Array:
+    """Width-compressed collective (§5.2 delta aggregation, TPU realization).
+
+    int16/int8 halve/quarter the all-reduce payload. Saturating cast; any
+    clipped residue is corrected by the periodic exact rebuild
+    (``rebuild_every``) — same staleness-tolerance argument as the paper's.
+    """
+    if dtype == "int32":
+        return jax.lax.psum(delta, axes)
+    info = jnp.iinfo(jnp.int16 if dtype == "int16" else jnp.int8)
+    small = jnp.clip(delta, info.min, info.max).astype(dtype)
+    return jax.lax.psum(small, axes).astype(jnp.int32)
+
+
+def make_dist_step(
+    mesh: Mesh,
+    hyper: LDAHyperParams,
+    cfg: DistConfig,
+    words_per_shard: int,
+    docs_per_shard: int,
+):
+    """Build the jitted distributed iteration fn: (state, data) -> state."""
+    data_axes, model = _axes(mesh)
+    all_axes = data_axes + (model,)
+    num_words_pad = words_per_shard * mesh.shape[model]
+    state_spec, data_spec = _specs(mesh)
+    k = hyper.num_topics
+
+    def local_step(state: DistLDAState, data: DistLDAData) -> DistLDAState:
+        # local views --------------------------------------------------
+        word = data.word.reshape(-1)
+        doc = data.doc.reshape(-1)
+        mask = data.mask.reshape(-1)
+        z_old = state.topic.reshape(-1)
+        stale_i = state.stale_iters.reshape(-1)
+        same_t = state.same_count.reshape(-1)
+        n_wk_l = state.n_wk  # (Ws, K) local block
+        n_kd_l = state.n_kd  # (Ds, K)
+        n_k = state.n_k
+
+        col = jax.lax.axis_index(model)
+        row = jax.lax.axis_index(data_axes[0])
+        for ax in data_axes[1:]:
+            row = row * mesh.shape[ax] + jax.lax.axis_index(ax)
+        word_l = word - col * words_per_shard
+        doc_l = doc - row * docs_per_shard
+
+        dev = row * mesh.shape[model] + col
+        key = jax.random.fold_in(state.rng, state.iteration)
+        key = jax.random.fold_in(key, dev)
+        k_sample, k_excl = jax.random.split(key)
+
+        # converged-token exclusion (§5.1) ------------------------------
+        if cfg.exclusion_start > 0:
+            prob = jnp.clip(
+                jnp.exp2(stale_i.astype(jnp.float32) - same_t.astype(jnp.float32)),
+                0.0, 1.0,
+            )
+            u = jax.random.uniform(k_excl, z_old.shape)
+            active = (u < prob) | (state.iteration < cfg.exclusion_start)
+        else:
+            active = jnp.ones_like(mask)
+        active = active & mask
+
+        # step 3: sample on stale counts --------------------------------
+        if cfg.algorithm == "zen_dense":
+            z_prop = _zen_dense_local(
+                k_sample, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k,
+                hyper, num_words_pad, cfg.sampling_method, cfg.token_chunk,
+            )
+        elif cfg.algorithm == "zen_dense_kernel":
+            # fused Pallas sampler (interpret-mode on CPU, Mosaic on TPU)
+            from repro.kernels.ops import zen_sample
+
+            seed = jax.random.randint(
+                k_sample, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+            )
+            z_prop = zen_sample(
+                n_wk_l[word_l], n_kd_l[doc_l], z_old,
+                hyper.alpha_k(n_k), n_k.astype(jnp.float32), seed,
+                beta=hyper.beta, w_beta=num_words_pad * hyper.beta,
+            )
+        elif cfg.algorithm == "zen_cdf":
+            z_prop = _zen_cdf_local(
+                k_sample, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k,
+                hyper, num_words_pad, cfg.max_kd,
+            )
+        else:
+            raise ValueError(cfg.algorithm)
+        z_new = jnp.where(active, z_prop, z_old)
+
+        # step 4: delta aggregation (§5.2) -------------------------------
+        # the delta buffers are built directly in the compressed dtype:
+        # per-iteration per-(vertex, topic) changes are bounded by the
+        # vertex's local token count, so int16 is exact for docs and safe
+        # for all but ultra-hot words (periodic rebuild corrects any
+        # saturation — §Perf iteration l3)
+        ddt = jnp.int32 if cfg.delta_dtype == "int32" else jnp.dtype(cfg.delta_dtype)
+        changed = (z_new != z_old) & mask
+        inc = changed.astype(ddt)
+        d_wk = (
+            jnp.zeros(n_wk_l.shape, ddt)
+            .at[word_l, z_new].add(inc)
+            .at[word_l, z_old].add(-inc)
+        )
+        d_kd = (
+            jnp.zeros(n_kd_l.shape, ddt)
+            .at[doc_l, z_new].add(inc)
+            .at[doc_l, z_old].add(-inc)
+        )
+        d_wk = jax.lax.psum(d_wk, data_axes).astype(jnp.int32)
+        d_kd = jax.lax.psum(d_kd, (model,)).astype(jnp.int32)
+        # step 5: N_k from the word side only (paper Fig. 2 step 5)
+        d_k = jax.lax.psum(jnp.sum(d_wk, axis=0), model)
+
+        # exclusion stats update
+        proc_changed = changed
+        new_i = jnp.where(active, 0, stale_i + 1)
+        new_t = jnp.where(
+            active, jnp.where(proc_changed, 0, same_t + 1), same_t
+        )
+
+        shp = state.topic.shape
+        new_n_kd = (n_kd_l.astype(jnp.int32) + d_kd).astype(n_kd_l.dtype)
+        return DistLDAState(
+            topic=z_new.reshape(shp),
+            prev_topic=z_old.reshape(shp),
+            n_wk=n_wk_l + d_wk,
+            n_kd=new_n_kd,
+            n_k=n_k + d_k,
+            stale_iters=new_i.reshape(shp),
+            same_count=new_t.reshape(shp),
+            iteration=state.iteration + 1,
+            rng=state.rng,
+        )
+
+    step = jax.shard_map(
+        local_step, mesh=mesh, in_specs=(state_spec, data_spec),
+        out_specs=state_spec, check_vma=False,
+    )
+    return jax.jit(step, donate_argnums=(0,))
+
+
+def make_rebuild_counts(
+    mesh: Mesh,
+    hyper: LDAHyperParams,
+    words_per_shard: int,
+    docs_per_shard: int,
+):
+    """Exact count rebuild from assignments (elastic restore / drift fix)."""
+    data_axes, model = _axes(mesh)
+    state_spec, data_spec = _specs(mesh)
+    k = hyper.num_topics
+
+    def local(state: DistLDAState, data: DistLDAData) -> DistLDAState:
+        word = data.word.reshape(-1)
+        doc = data.doc.reshape(-1)
+        mask = data.mask.reshape(-1)
+        z = state.topic.reshape(-1)
+        col = jax.lax.axis_index(model)
+        row = jax.lax.axis_index(data_axes[0])
+        for ax in data_axes[1:]:
+            row = row * mesh.shape[ax] + jax.lax.axis_index(ax)
+        word_l = word - col * words_per_shard
+        doc_l = doc - row * docs_per_shard
+        ones = mask.astype(jnp.int32)
+        n_wk = jnp.zeros_like(state.n_wk).at[word_l, z].add(ones)
+        n_kd = jnp.zeros(state.n_kd.shape, jnp.int32).at[doc_l, z].add(ones)
+        n_wk = jax.lax.psum(n_wk, data_axes)
+        n_kd = jax.lax.psum(n_kd, (model,)).astype(state.n_kd.dtype)
+        n_k = jax.lax.psum(jnp.sum(n_wk, axis=0), model)
+        return state._replace(n_wk=n_wk, n_kd=n_kd, n_k=n_k)
+
+    fn = jax.shard_map(
+        local, mesh=mesh, in_specs=(state_spec, data_spec),
+        out_specs=state_spec, check_vma=False,
+    )
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def make_dist_llh(
+    mesh: Mesh, hyper: LDAHyperParams, words_per_shard: int, docs_per_shard: int
+):
+    """Distributed predictive log-likelihood (paper footnote 6)."""
+    data_axes, model = _axes(mesh)
+    all_axes = data_axes + (model,)
+    num_words_pad = words_per_shard * mesh.shape[model]
+    state_spec, data_spec = _specs(mesh)
+
+    def local(state: DistLDAState, data: DistLDAData) -> jax.Array:
+        word = data.word.reshape(-1)
+        doc = data.doc.reshape(-1)
+        mask = data.mask.reshape(-1)
+        col = jax.lax.axis_index(model)
+        row = jax.lax.axis_index(data_axes[0])
+        for ax in data_axes[1:]:
+            row = row * mesh.shape[ax] + jax.lax.axis_index(ax)
+        word_l = word - col * words_per_shard
+        doc_l = doc - row * docs_per_shard
+        alpha_k = hyper.alpha_k(state.n_k)
+        alpha_sum = jnp.sum(alpha_k)
+        n_d = jnp.sum(state.n_kd, axis=-1).astype(jnp.float32)  # (Ds,)
+        w_beta = num_words_pad * hyper.beta
+        theta = (state.n_kd[doc_l].astype(jnp.float32) + alpha_k[None, :]) / (
+            n_d[doc_l][:, None] + alpha_sum
+        )
+        phi = (state.n_wk[word_l].astype(jnp.float32) + hyper.beta) / (
+            state.n_k.astype(jnp.float32)[None, :] + w_beta
+        )
+        token_llh = jnp.log(jnp.maximum(jnp.sum(theta * phi, -1), 1e-30))
+        local_sum = jnp.sum(jnp.where(mask, token_llh, 0.0))
+        return jax.lax.psum(local_sum, all_axes)
+
+    fn = jax.shard_map(
+        local, mesh=mesh, in_specs=(state_spec, data_spec), out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# State construction
+# ---------------------------------------------------------------------------
+
+def init_dist_state(
+    rng: jax.Array,
+    mesh: Mesh,
+    grid: GridPartition,
+    hyper: LDAHyperParams,
+    init_topics: Optional[np.ndarray] = None,
+    kd_dtype=jnp.int32,
+) -> Tuple[DistLDAState, DistLDAData]:
+    """Build + device_put the sharded state from a host GridPartition."""
+    state_sh, data_sh = state_shardings(mesh)
+    cells, e_cell = grid.word.shape
+    k = hyper.num_topics
+    if init_topics is None:
+        init_topics = np.asarray(
+            jax.random.randint(rng, (cells, e_cell), 0, k, dtype=jnp.int32)
+        )
+    data = DistLDAData(
+        word=jax.device_put(jnp.asarray(grid.word), data_sh.word),
+        doc=jax.device_put(jnp.asarray(grid.doc), data_sh.doc),
+        mask=jax.device_put(jnp.asarray(grid.mask), data_sh.mask),
+    )
+    topic = jax.device_put(jnp.asarray(init_topics, jnp.int32), state_sh.topic)
+    # distinct buffer: step functions donate the state, and donating one
+    # buffer twice (topic aliasing prev_topic) is rejected by the runtime
+    prev_topic = jax.device_put(jnp.asarray(init_topics, jnp.int32), state_sh.topic)
+    zeros_tok = jax.device_put(
+        jnp.zeros((cells, e_cell), jnp.int32), state_sh.stale_iters
+    )
+    zeros_tok2 = jax.device_put(
+        jnp.zeros((cells, e_cell), jnp.int32), state_sh.same_count
+    )
+    state = DistLDAState(
+        topic=topic,
+        prev_topic=prev_topic,
+        n_wk=jax.device_put(
+            jnp.zeros((grid.num_words_padded, k), jnp.int32), state_sh.n_wk
+        ),
+        n_kd=jax.device_put(
+            jnp.zeros((grid.num_docs_padded, k), kd_dtype), state_sh.n_kd
+        ),
+        n_k=jax.device_put(jnp.zeros((k,), jnp.int32), state_sh.n_k),
+        stale_iters=zeros_tok,
+        same_count=zeros_tok2,
+        iteration=jnp.int32(0),
+        rng=rng,
+    )
+    rebuild = make_rebuild_counts(
+        mesh, hyper, grid.words_per_shard, grid.docs_per_shard
+    )
+    state = rebuild(state, data)
+    return state, data

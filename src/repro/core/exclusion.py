@@ -1,0 +1,77 @@
+""""Converged" token exclusion (paper §5.1).
+
+A token is *converged* when its sampled topic equals the previous sample.
+Converged tokens are still resampled, but only with probability 2^(i - t)
+where i = iterations since last processed and t = consecutive times processed
+with an unchanged topic (both reset when the topic changes).
+
+TPU adaptation (DESIGN.md §2): masked-out lanes do not save vector time, so
+the immediate win is the smaller delta traffic + count-update work; a
+compaction mode (sort-by-active + bounded window) recovers the compute win
+and is used by the distributed runtime when the active fraction is low.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import CGSState
+
+
+class ExclusionConfig(NamedTuple):
+    enabled: bool = False
+    start_iteration: int = 30  # paper turns it on after iteration 30
+    min_sample_prob: float = 0.0  # floor on the resample probability
+
+
+def active_mask(
+    state: CGSState, cfg: ExclusionConfig, key: jax.Array
+) -> jax.Array:
+    """Bool (E,): which tokens are sampled this iteration."""
+    if not cfg.enabled:
+        return jnp.ones_like(state.topic, dtype=bool)
+    i = state.stale_iters.astype(jnp.float32)
+    t = state.same_count.astype(jnp.float32)
+    prob = jnp.clip(jnp.exp2(i - t), cfg.min_sample_prob, 1.0)
+    u = jax.random.uniform(key, state.topic.shape)
+    sampled = u < prob
+    warmup = state.iteration < cfg.start_iteration
+    return sampled | warmup
+
+
+def update_exclusion_stats(
+    state: CGSState,
+    new_topic: jax.Array,
+    mask: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """New (stale_iters, same_count) after an iteration.
+
+    Processed & changed   -> i=0, t=0
+    Processed & unchanged -> i=0, t+1
+    Skipped               -> i+1, t
+    """
+    changed = new_topic != state.topic
+    i = jnp.where(mask, 0, state.stale_iters + 1)
+    t = jnp.where(mask, jnp.where(changed, 0, state.same_count + 1),
+                  state.same_count)
+    return i.astype(jnp.int32), t.astype(jnp.int32)
+
+
+def compact_active(
+    mask: jax.Array, *arrays: jax.Array
+) -> Tuple[jax.Array, Tuple[jax.Array, ...], jax.Array]:
+    """Stable-partition tokens so active ones are contiguous at the front.
+
+    Returns (perm, permuted arrays, num_active). Downstream kernels can then
+    process ceil(num_active / tile) * tile tokens instead of E — this is how
+    the paper's "largely reduce the workload per iteration" is realized on a
+    SIMD machine. The permutation is its own inverse-aware companion:
+    ``unpermute = jnp.argsort(perm)``.
+    """
+    e = mask.shape[0]
+    # stable: sort by (1 - active) keeps relative order within groups
+    perm = jnp.argsort(jnp.where(mask, 0, 1), stable=True).astype(jnp.int32)
+    num_active = jnp.sum(mask.astype(jnp.int32))
+    return perm, tuple(a[perm] for a in arrays), num_active

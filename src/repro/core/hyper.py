@@ -1,0 +1,65 @@
+"""Topic-duplicate merging (paper §4.3 "Merge duplicated topics").
+
+The asymmetric prior already biases similar topics toward merging; on top of
+that, topics whose L1 distance between word distributions falls below a
+threshold are explicitly clustered and merged (union of counts, remapped
+assignments).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topic_l1_distances(n_wk: jax.Array) -> jax.Array:
+    """Pairwise L1 distance between topic word distributions. (K, K)."""
+    col = n_wk.astype(jnp.float32)
+    col = col / jnp.maximum(jnp.sum(col, axis=0, keepdims=True), 1e-30)
+    # (K, K) pairwise |phi_i - phi_j|_1; K is moderate so this is fine.
+    return jnp.sum(jnp.abs(col[:, :, None] - col[:, None, :]), axis=0)
+
+
+def duplicate_topic_map(n_wk: np.ndarray, threshold: float) -> np.ndarray:
+    """Map each topic to its cluster representative (lowest id wins).
+
+    Host-side union-find over the below-threshold pairs; returns (K,) int32.
+    A lower threshold removes more duplicates (paper's knob).
+    """
+    dist = np.asarray(topic_l1_distances(jnp.asarray(n_wk)))
+    k = dist.shape[0]
+    parent = np.arange(k)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    ii, jj = np.where((dist < threshold) & (np.arange(k)[:, None] < np.arange(k)))
+    for a, b in zip(ii, jj):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[max(ra, rb)] = min(ra, rb)
+    return np.array([find(x) for x in range(k)], dtype=np.int32)
+
+
+def merge_topics(
+    topic: jax.Array,
+    n_wk: jax.Array,
+    n_kd: jax.Array,
+    n_k: jax.Array,
+    topic_map: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Apply a duplicate map: remap assignments, merge count columns."""
+    k = n_k.shape[0]
+    new_topic = topic_map[topic]
+    onehot = jax.nn.one_hot(topic_map, k, dtype=n_wk.dtype)  # (K_old, K_new)
+    return (
+        new_topic.astype(jnp.int32),
+        n_wk @ onehot,
+        n_kd @ onehot,
+        n_k @ onehot,
+    )

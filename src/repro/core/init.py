@@ -1,0 +1,97 @@
+"""Topic-assignment initialization (paper §5.1 "Sparse model initialization").
+
+* ``random_init``       — standard: every token draws uniformly from K.
+* ``sparse_word_init``  — SparseWord: each *word* first samples a private
+  subset S of size ceil(deg*K); its tokens draw uniformly from S only.
+* ``sparse_doc_init``   — SparseDoc: same per *document*.
+
+Sparse init bounds the nnz of the word-topic (resp. doc-topic) rows, which
+shrinks the first iterations' memory/compute/collective footprint — the
+paper's fix for "the first several iterations are the bottleneck".
+The β-boost neutralization for never-assigned topics (§5.1.1 last sentence)
+is exposed as ``beta_boost`` and consumed by the samplers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counts as counts_lib
+from repro.core.types import CGSState, Corpus, LDAHyperParams
+
+
+def _make_state(
+    topic: jax.Array, corpus: Corpus, hyper: LDAHyperParams, rng: jax.Array
+) -> CGSState:
+    n_wk, n_kd, n_k = counts_lib.build_counts(
+        corpus.word, corpus.doc, topic,
+        corpus.num_words, corpus.num_docs, hyper.num_topics,
+    )
+    e = corpus.num_tokens
+    return CGSState(
+        topic=topic, prev_topic=topic, n_wk=n_wk, n_kd=n_kd, n_k=n_k,
+        rng=rng, iteration=0,
+        stale_iters=jnp.zeros((e,), jnp.int32),
+        same_count=jnp.zeros((e,), jnp.int32),
+    )
+
+
+def random_init(
+    rng: jax.Array, corpus: Corpus, hyper: LDAHyperParams
+) -> CGSState:
+    key, state_key = jax.random.split(rng)
+    topic = jax.random.randint(
+        key, (corpus.num_tokens,), 0, hyper.num_topics, dtype=jnp.int32
+    )
+    return _make_state(topic, corpus, hyper, state_key)
+
+
+def _subset_init(
+    rng: jax.Array,
+    corpus: Corpus,
+    hyper: LDAHyperParams,
+    group: jax.Array,  # (E,) the vertex id each token belongs to (word or doc)
+    num_groups: int,
+    degree: float,
+) -> CGSState:
+    """Each group g gets a random topic subset of size s = ceil(degree*K);
+    tokens of g sample uniformly within the subset.
+
+    Subsets are realized without materializing (num_groups, K): group g's
+    subset is {perm_g(j) : j < s} where perm_g is a per-group pseudorandom
+    permutation of [0, K) built from a random offset + coprime stride —
+    cheap, uniform enough, and O(E) total.
+    """
+    k = hyper.num_topics
+    s = max(1, int(round(degree * k)))
+    key_off, key_stride, key_j, state_key = jax.random.split(rng, 4)
+    offsets = jax.random.randint(key_off, (num_groups,), 0, k, dtype=jnp.int32)
+    # odd strides are coprime with any power-of-two >= k; for general k use
+    # strides from a set of values coprime to k.
+    strides = 2 * jax.random.randint(
+        key_stride, (num_groups,), 0, max(1, k // 2), dtype=jnp.int32
+    ) + 1
+    j = jax.random.randint(key_j, (corpus.num_tokens,), 0, s, dtype=jnp.int32)
+    topic = (offsets[group] + j * strides[group]) % k
+    return _make_state(topic.astype(jnp.int32), corpus, hyper, state_key)
+
+
+def sparse_word_init(
+    rng: jax.Array, corpus: Corpus, hyper: LDAHyperParams, degree: float = 0.1
+) -> CGSState:
+    return _subset_init(rng, corpus, hyper, corpus.word, corpus.num_words, degree)
+
+
+def sparse_doc_init(
+    rng: jax.Array, corpus: Corpus, hyper: LDAHyperParams, degree: float = 0.1
+) -> CGSState:
+    return _subset_init(rng, corpus, hyper, corpus.doc, corpus.num_docs, degree)
+
+
+def beta_boost(state: CGSState, hyper: LDAHyperParams, boost: float = 2.0) -> jax.Array:
+    """Per-(w,k) effective beta: boosted where the topic was never assigned
+    to the word during initialization (paper §5.1: 'neutralize the side
+    effect by increasing the β value ... for those topics that are not
+    assigned during initialization'). Returns (W, K) float32."""
+    unassigned = state.n_wk == 0
+    return jnp.where(unassigned, hyper.beta * boost, hyper.beta).astype(jnp.float32)

@@ -1,0 +1,215 @@
+"""Dense vectorized CGS samplers — the reference ("oracle") path.
+
+Two sweeps are provided:
+
+* ``cgs_sweep_stale``  — the paper's production semantics: all tokens are
+  sampled against the counts frozen at the start of the iteration
+  ("unsynchronized model", §4.1), with the token's *own* previous assignment
+  excluded exactly (the ¬dw correction), and counts merged once at the end.
+  This is embarrassingly parallel over tokens and is what the distributed
+  runtime and the Pallas kernel implement.
+
+* ``cgs_sweep_serial`` — the textbook sequential collapsed Gibbs chain
+  (paper Alg. 1): counts are decremented/incremented token by token inside a
+  ``lax.scan``. Slow, used as the statistical oracle in tests/benchmarks.
+
+Sampling methods: inverse-CDF (paper's samplers reduce to this on dense
+rows) and Gumbel-max (the TPU-native adaptation — one pass, one reduction,
+no normalization, no table; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counts as counts_lib
+from repro.core.decompositions import (
+    ZenTerms,
+    precompute_zen_terms,
+    std_probs,
+    zen_probs,
+)
+from repro.core.types import CGSState, Corpus, LDAHyperParams
+
+
+def sample_categorical(
+    key: jax.Array, probs: jax.Array, method: str = "cdf"
+) -> jax.Array:
+    """Draw one sample per row from unnormalized ``probs`` (T, K)."""
+    if method == "cdf":
+        cdf = jnp.cumsum(probs, axis=-1)
+        total = cdf[:, -1:]
+        u = jax.random.uniform(key, (probs.shape[0], 1), dtype=probs.dtype)
+        # searchsorted per row == the paper's BSearch over the CDF
+        idx = jnp.sum(cdf < u * total, axis=-1)
+        return jnp.minimum(idx, probs.shape[-1] - 1).astype(jnp.int32)
+    elif method == "gumbel":
+        g = jax.random.gumbel(key, probs.shape, dtype=jnp.float32)
+        logits = jnp.log(jnp.maximum(probs.astype(jnp.float32), 1e-30))
+        return jnp.argmax(logits + g, axis=-1).astype(jnp.int32)
+    raise ValueError(f"unknown sampling method {method!r}")
+
+
+def _gather_rows(
+    state: CGSState, word: jax.Array, doc: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    return state.n_wk[word], state.n_kd[doc]
+
+
+def conditional_probs(
+    state: CGSState,
+    corpus: Corpus,
+    hyper: LDAHyperParams,
+    exclude_self: bool = True,
+    decomposition: str = "zen",
+) -> jax.Array:
+    """Eq. 3 conditional for every token, (E, K), vectorized.
+
+    With ``exclude_self`` the token's own previous topic is removed from all
+    counts (the exact ¬dw semantics). Without it, the stale approximation the
+    paper pairs with resampling remedies is produced.
+    """
+    n_wk_rows, n_kd_rows = _gather_rows(state, corpus.word, corpus.doc)
+    n_k = state.n_k
+    if exclude_self:
+        e = corpus.word.shape[0]
+        onehot = jax.nn.one_hot(state.topic, hyper.num_topics, dtype=jnp.int32)
+        n_wk_rows = n_wk_rows - onehot
+        n_kd_rows = n_kd_rows - onehot
+        n_k = n_k[None, :] - onehot
+    else:
+        n_k = n_k[None, :]
+    terms = precompute_zen_terms(state.n_k, hyper, corpus.num_words)
+    if decomposition == "std":
+        return std_probs(
+            n_wk_rows, n_kd_rows, n_k, terms.alpha_k, hyper.beta, corpus.num_words
+        )
+    # ZenLDA decomposition. When excluding self we must recompute t1 rows
+    # against the decremented n_k — do it directly from Eq. 3 pieces.
+    w_beta = corpus.num_words * hyper.beta
+    t1 = 1.0 / (n_k.astype(jnp.float32) + w_beta)
+    alpha_k = terms.alpha_k[None, :]
+    nw = n_wk_rows.astype(jnp.float32)
+    nd = n_kd_rows.astype(jnp.float32)
+    return (alpha_k * hyper.beta + nw * alpha_k + nd * (nw + hyper.beta)) * t1
+
+
+def cgs_sweep_stale(
+    state: CGSState,
+    corpus: Corpus,
+    hyper: LDAHyperParams,
+    method: str = "cdf",
+    exclude_self: bool = True,
+    decomposition: str = "zen",
+    token_chunk: int | None = None,
+) -> jax.Array:
+    """Sample a new topic for every token against iteration-start counts.
+
+    Returns new topics (E,). ``token_chunk`` bounds peak memory by mapping
+    over chunks of tokens (E must be divisible by it).
+    """
+    key = jax.random.fold_in(state.rng, state.iteration)
+
+    def chunk_fn(args):
+        w, d, z, keys = args
+        sub = CGSState(
+            topic=z, prev_topic=z, n_wk=state.n_wk, n_kd=state.n_kd,
+            n_k=state.n_k, rng=state.rng, iteration=state.iteration,
+        )
+        sub_corpus = Corpus(word=w, doc=d, num_words=corpus.num_words,
+                            num_docs=corpus.num_docs)
+        probs = conditional_probs(sub, sub_corpus, hyper,
+                                  exclude_self=exclude_self,
+                                  decomposition=decomposition)
+        return sample_categorical(keys, probs, method=method)
+
+    e = corpus.word.shape[0]
+    if token_chunk is None or token_chunk >= e:
+        return chunk_fn((corpus.word, corpus.doc, state.topic, key))
+    assert e % token_chunk == 0, (e, token_chunk)
+    n_chunks = e // token_chunk
+    keys = jax.random.split(key, n_chunks)
+    args = (
+        corpus.word.reshape(n_chunks, token_chunk),
+        corpus.doc.reshape(n_chunks, token_chunk),
+        state.topic.reshape(n_chunks, token_chunk),
+        keys,
+    )
+    out = jax.lax.map(chunk_fn, args)
+    return out.reshape(e)
+
+
+def cgs_sweep_serial(
+    state: CGSState, corpus: Corpus, hyper: LDAHyperParams
+) -> CGSState:
+    """True sequential collapsed Gibbs sweep (paper Alg. 1). O(E*K), scan."""
+    key = jax.random.fold_in(state.rng, state.iteration)
+    e = corpus.word.shape[0]
+    keys = jax.random.split(key, e)
+
+    def body(carry, inputs):
+        n_wk, n_kd, n_k, topics = carry
+        w, d, i, k_i = inputs
+        z_old = topics[i]
+        n_wk = n_wk.at[w, z_old].add(-1)
+        n_kd = n_kd.at[d, z_old].add(-1)
+        n_k = n_k.at[z_old].add(-1)
+        w_beta = corpus.num_words * hyper.beta
+        alpha_k = hyper.alpha_k(n_k)
+        p = (
+            (n_wk[w].astype(jnp.float32) + hyper.beta)
+            / (n_k.astype(jnp.float32) + w_beta)
+            * (n_kd[d].astype(jnp.float32) + alpha_k)
+        )
+        z_new = sample_categorical(k_i, p[None, :], method="cdf")[0]
+        n_wk = n_wk.at[w, z_new].add(1)
+        n_kd = n_kd.at[d, z_new].add(1)
+        n_k = n_k.at[z_new].add(1)
+        topics = topics.at[i].set(z_new)
+        return (n_wk, n_kd, n_k, topics), None
+
+    init = (state.n_wk, state.n_kd, state.n_k, state.topic)
+    idx = jnp.arange(e, dtype=jnp.int32)
+    (n_wk, n_kd, n_k, topics), _ = jax.lax.scan(
+        body, init, (corpus.word, corpus.doc, idx, keys)
+    )
+    return CGSState(
+        topic=topics, prev_topic=state.topic, n_wk=n_wk, n_kd=n_kd, n_k=n_k,
+        rng=state.rng, iteration=state.iteration + 1,
+        stale_iters=state.stale_iters, same_count=state.same_count,
+    )
+
+
+def gibbs_iteration(
+    state: CGSState,
+    corpus: Corpus,
+    hyper: LDAHyperParams,
+    method: str = "cdf",
+    exclude_self: bool = True,
+    decomposition: str = "zen",
+    token_chunk: int | None = None,
+) -> CGSState:
+    """One full single-box iteration: stale sweep + delta merge (paper Fig 2,
+    collapsed to one device)."""
+    new_topic = cgs_sweep_stale(
+        state, corpus, hyper, method=method, exclude_self=exclude_self,
+        decomposition=decomposition, token_chunk=token_chunk,
+    )
+    d_wk, d_kd, d_k = counts_lib.delta_counts(
+        corpus.word, corpus.doc, state.topic, new_topic,
+        corpus.num_words, corpus.num_docs, hyper.num_topics,
+    )
+    return CGSState(
+        topic=new_topic,
+        prev_topic=state.topic,
+        n_wk=state.n_wk + d_wk,
+        n_kd=state.n_kd + d_kd,
+        n_k=state.n_k + d_k,
+        rng=state.rng,
+        iteration=state.iteration + 1,
+        stale_iters=state.stale_iters,
+        same_count=state.same_count,
+    )

@@ -1,0 +1,6 @@
+from repro.data.corpus import (  # noqa: F401
+    load_libsvm,
+    save_libsvm,
+    synthetic_corpus,
+    synthetic_lda_corpus,
+)

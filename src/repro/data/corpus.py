@@ -1,0 +1,125 @@
+"""Corpus generation and IO.
+
+* ``synthetic_corpus``     — power-law (Zipf) word frequencies and varying
+  document lengths: the "natural graph" skew the paper's partitioning work
+  targets (hot words vs long-tail words).
+* ``synthetic_lda_corpus`` — documents generated *from* an LDA model with
+  known topics, so convergence tests have ground truth structure to recover.
+* ``load_libsvm/save_libsvm`` — the paper's corpus format ("saved as libsvm
+  format"): one line per doc, ``label word_id:count ...``.
+"""
+from __future__ import annotations
+
+import io
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Corpus
+
+
+def synthetic_corpus(
+    seed: int,
+    num_docs: int,
+    num_words: int,
+    avg_doc_len: int,
+    zipf_a: float = 1.2,
+) -> Corpus:
+    """Zipf-distributed words, geometric-ish doc lengths. Token-level."""
+    rng = np.random.default_rng(seed)
+    lengths = np.maximum(1, rng.poisson(avg_doc_len, size=num_docs))
+    total = int(lengths.sum())
+    # Zipf over a finite vocabulary via inverse-CDF on k^-a
+    ranks = np.arange(1, num_words + 1, dtype=np.float64)
+    pmf = ranks ** (-zipf_a)
+    pmf /= pmf.sum()
+    words = rng.choice(num_words, size=total, p=pmf).astype(np.int32)
+    docs = np.repeat(np.arange(num_docs, dtype=np.int32), lengths)
+    return Corpus(
+        word=jnp.asarray(words), doc=jnp.asarray(docs),
+        num_words=num_words, num_docs=num_docs,
+    )
+
+
+def synthetic_lda_corpus(
+    seed: int,
+    num_docs: int,
+    num_words: int,
+    num_topics: int,
+    avg_doc_len: int,
+    alpha: float = 0.1,
+    beta: float = 0.05,
+) -> Tuple[Corpus, np.ndarray]:
+    """Generate documents from the LDA generative process (paper Eq. 1).
+
+    Returns (corpus, true_phi (K, W)) for recovery checks.
+    """
+    rng = np.random.default_rng(seed)
+    phi = rng.dirichlet(np.full(num_words, beta), size=num_topics)  # (K, W)
+    theta = rng.dirichlet(np.full(num_topics, alpha), size=num_docs)  # (D, K)
+    lengths = np.maximum(1, rng.poisson(avg_doc_len, size=num_docs))
+    words_list = []
+    docs_list = []
+    for d in range(num_docs):
+        zs = rng.choice(num_topics, size=lengths[d], p=theta[d])
+        for z in np.unique(zs):
+            n = int((zs == z).sum())
+            ws = rng.choice(num_words, size=n, p=phi[z])
+            words_list.append(ws)
+            docs_list.append(np.full(n, d, dtype=np.int32))
+    words = np.concatenate(words_list).astype(np.int32)
+    docs = np.concatenate(docs_list).astype(np.int32)
+    return (
+        Corpus(
+            word=jnp.asarray(words), doc=jnp.asarray(docs),
+            num_words=num_words, num_docs=num_docs,
+        ),
+        phi,
+    )
+
+
+def save_libsvm(corpus: Corpus, path: str) -> None:
+    """Write doc-major libsvm lines: ``0 word:count ...``."""
+    words = np.asarray(corpus.word)
+    docs = np.asarray(corpus.doc)
+    order = np.argsort(docs, kind="stable")
+    words, docs = words[order], docs[order]
+    with open(path, "w") as f:
+        boundaries = np.searchsorted(docs, np.arange(corpus.num_docs + 1))
+        for d in range(corpus.num_docs):
+            ws = words[boundaries[d] : boundaries[d + 1]]
+            uniq, cnt = np.unique(ws, return_counts=True)
+            f.write(
+                "0 " + " ".join(f"{w}:{c}" for w, c in zip(uniq, cnt)) + "\n"
+            )
+
+
+def load_libsvm(path_or_buf, num_words: Optional[int] = None) -> Corpus:
+    """Read libsvm lines into a token-level corpus (counts expanded)."""
+    if isinstance(path_or_buf, (str, bytes)):
+        f = open(path_or_buf)
+    else:
+        f = path_or_buf
+    words_list, docs_list = [], []
+    d = 0
+    max_w = -1
+    for line in f:
+        parts = line.strip().split()
+        if not parts:
+            continue
+        for tok in parts[1:]:
+            w, c = tok.split(":")
+            w, c = int(w), int(float(c))
+            max_w = max(max_w, w)
+            words_list.extend([w] * c)
+            docs_list.extend([d] * c)
+        d += 1
+    if isinstance(path_or_buf, (str, bytes)):
+        f.close()
+    return Corpus(
+        word=jnp.asarray(np.asarray(words_list, dtype=np.int32)),
+        doc=jnp.asarray(np.asarray(docs_list, dtype=np.int32)),
+        num_words=num_words or (max_w + 1),
+        num_docs=d,
+    )

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+* ``zen_sampler``     — fused three-term CGS probability + Gumbel-max topic
+  sampling, streaming K tiles through VMEM (the paper's sampling inner loop).
+* ``topic_histogram`` — scatter-free signed count-delta histogram via
+  rank-one-hot MXU contraction (the paper's count-update step).
+
+Each kernel ships ``ref.py`` pure-jnp oracles (bit-exact for the sampler,
+exact integer equality for the histogram) and jitted wrappers in ``ops.py``.
+Validation runs in ``interpret=True`` on CPU; Mosaic lowering on real TPUs.
+"""
+from repro.kernels.ops import topic_histogram, zen_sample  # noqa: F401

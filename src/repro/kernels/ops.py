@@ -1,0 +1,108 @@
+"""Jitted public wrappers for the Pallas kernels (padding, dtype glue).
+
+``interpret`` defaults to True on CPU (validation) and False on TPU
+(production); callers can force either.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topic_histogram import topic_histogram_pallas
+from repro.kernels.zen_sampler import zen_sample_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beta", "w_beta", "bt", "bk", "interpret"),
+)
+def zen_sample(
+    nwk_rows: jax.Array,
+    nkd_rows: jax.Array,
+    z_old: jax.Array,
+    alpha_k: jax.Array,
+    n_k: jax.Array,
+    seed: jax.Array,
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused three-term CGS sample per token (see zen_sampler.py).
+
+    Pads T to bt and K to bk; K padding gets p=0 rows (alpha_k=0, counts 0)
+    so padded topics can never win the argmax.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    t, k = nwk_rows.shape
+    bt_eff = min(bt, max(8, t))
+    nwk_p = _pad_to(_pad_to(nwk_rows, 0, bt_eff), 1, bk)
+    nkd_p = _pad_to(_pad_to(nkd_rows, 0, bt_eff), 1, bk)
+    z_p = _pad_to(z_old, 0, bt_eff)
+    # padded topics: alpha_k = 0 and n_k large => p == 0 there
+    a_p = _pad_to(alpha_k.astype(jnp.float32), 0, bk, value=0.0)
+    nk_p = _pad_to(n_k.astype(jnp.float32), 0, bk, value=1e9)
+    out = zen_sample_pallas(
+        nwk_p, nkd_p, z_p, a_p, nk_p, seed,
+        beta=beta, w_beta=w_beta, bt=bt_eff, bk=bk, interpret=interpret,
+    )
+    return out[:t]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_rows", "num_topics", "bt", "bk", "interpret"),
+)
+def topic_histogram(
+    rows_sorted: jax.Array,
+    z_old: jax.Array,
+    z_new: jax.Array,
+    inc: jax.Array,
+    num_rows: int,
+    num_topics: int,
+    *,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Signed delta histogram (num_rows, num_topics); see topic_histogram.py.
+
+    Padding tokens get inc=0 (inert) and row = last row (stays sorted).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    t = rows_sorted.shape[0]
+    bt_eff = min(bt, max(8, t))
+    last_row = rows_sorted[-1]
+    rows_p = _pad_to(rows_sorted, 0, bt_eff)
+    pad = rows_p.shape[0] - t
+    if pad:
+        rows_p = rows_p.at[t:].set(last_row)
+    z_old_p = _pad_to(z_old, 0, bt_eff)
+    z_new_p = _pad_to(z_new, 0, bt_eff)
+    inc_p = _pad_to(inc, 0, bt_eff)  # zero => inert
+    k_pad = (-num_topics) % bk
+    out = topic_histogram_pallas(
+        rows_p, z_old_p, z_new_p, inc_p, num_rows, num_topics + k_pad,
+        bt=bt_eff, bk=bk, interpret=interpret,
+    )
+    return out[:, :num_topics]

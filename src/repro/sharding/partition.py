@@ -1,0 +1,216 @@
+"""Logical-axis sharding rules: params + batches -> NamedShardings.
+
+The mesh is ``(pod?, data, model)``. Policy (DESIGN.md §3):
+
+* tensor parallelism over `model`: vocab rows, attention head-flat columns,
+  MLP hidden, MoE experts (when divisible), mamba inner channels;
+* FSDP over the data axes (`pod`+`data`): the *other* big dim of every
+  matrix — this is what makes grok/arctic optimizer state fit;
+* batch over the data axes; decode caches shard batch over data and the KV
+  sequence over `model` (flash-decode layout; for batch=1 long-context the
+  sequence is the only shardable axis).
+
+Rules are matched on the trailing dims of each leaf by its dict-path name,
+so layer-stacked leaves (leading `layers` axis) get `None` prepended
+automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def _divides(n: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0
+
+
+# trailing-dim rules per leaf name: tokens are resolved against the mesh,
+# 'tp' -> model axis, 'fsdp' -> data axes, None -> replicated.
+_RULES = {
+    # embeddings: vocab x d_model. NO fsdp on d_model: a contraction whose
+    # reduced dim is sharded over the batch axes makes the SPMD solver
+    # replicate the batch through the whole (B,S,V) logits segment
+    # (measured: 40 GB f32 buffers, EXPERIMENTS.md §Perf q1). Vocab TP
+    # alone keeps the table ~100 MB/device — FSDP buys nothing here.
+    "embed": ("tp", None),
+    "lm_head": ("tp", None),
+    # attention (flat layouts): d_model x (heads*hd)
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",),
+    "bk": ("tp",),
+    "bv": ("tp",),
+    # MLA
+    "wq_a": ("fsdp", "tp"),
+    "wq_b": ("fsdp", "tp"),
+    "wkv_a": ("fsdp", "tp"),
+    "wkv_b": ("fsdp", "tp"),
+    # MLP
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # MoE (3D: experts x in x out) — expert dim preferred on `model`
+    "router": ("fsdp", None),
+    # SSM
+    "in_proj": ("fsdp", "tp"),
+    "out_proj": ("tp", "fsdp"),
+    "x_proj": ("tp", None),
+    "dt_proj": (None, "tp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "a_log": ("tp", None),
+    "dt_bias": ("tp",),
+    "d": ("tp",),
+    # mamba2 per-head vectors (H,)
+    "a_log_h": ("tp",),
+    "dt_bias_h": ("tp",),
+    "d_h": ("tp",),
+}
+
+_MOE_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def _spec_for(
+    path_names: Tuple[str, ...],
+    shape: Tuple[int, ...],
+    cfg: ArchConfig,
+    mesh: Mesh,
+    fsdp: bool,
+) -> P:
+    data_axes = data_axes_of(mesh)
+    name = path_names[-1] if path_names else ""
+    is_moe = cfg.moe is not None and "moe" in path_names and name in _MOE_LEAVES
+
+    def resolve(token, dim):
+        if token == "tp":
+            return "model" if _divides(dim, mesh, "model") else None
+        if token == "fsdp":
+            if not fsdp:
+                return None
+            return data_axes if _divides(dim, mesh, data_axes) else None
+        return None
+
+    if is_moe:
+        e = cfg.moe.num_experts
+        ep = _divides(e, mesh, "model")
+        if name in ("w_gate", "w_up"):  # (E, D, F)
+            rule = (("tp" if ep else None), "fsdp", (None if ep else "tp"))
+        else:  # w_down (E, F, D)
+            rule = (("tp" if ep else None), (None if ep else "tp"), "fsdp")
+        trailing = 3
+    else:
+        rule = _RULES.get(name)
+        if rule is None:
+            return P()  # replicate small leaves (norm scales, lengths, ...)
+        trailing = len(rule)
+    if len(shape) < trailing:
+        return P()
+    dims = shape[-trailing:]
+    resolved = tuple(resolve(tok, d) for tok, d in zip(rule, dims))
+    # avoid double-assigning the same mesh axis to two dims of one leaf
+    seen = set()
+    final = []
+    for r in resolved:
+        key = tuple(r) if isinstance(r, tuple) else (r,)
+        if r is not None and any(k in seen for k in key):
+            final.append(None)
+        else:
+            final.append(r)
+            seen.update(k for k in key if k is not None)
+    lead = (None,) * (len(shape) - trailing)
+    return P(*(lead + tuple(final)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+    return tuple(names)
+
+
+def param_specs(params_shapes: Any, cfg: ArchConfig, mesh: Mesh,
+                fsdp: bool = True) -> Any:
+    """PartitionSpec pytree matching ``params_shapes`` (shapes or arrays)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_names(path), leaf.shape, cfg, mesh,
+                                     fsdp),
+        params_shapes,
+    )
+
+
+def param_shardings(params_shapes: Any, cfg: ArchConfig, mesh: Mesh,
+                    fsdp: bool = True) -> Any:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs(params_shapes, cfg, mesh, fsdp),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch + cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, ndim: int, batch_divisible: bool = True) -> P:
+    data_axes = data_axes_of(mesh)
+    lead = data_axes if batch_divisible else None
+    return P(*((lead,) + (None,) * (ndim - 1)))
+
+
+def batch_sharding(batch_shapes: Any, mesh: Mesh) -> Any:
+    """Shard dim 0 (global batch) over the data axes when divisible."""
+    data_axes = data_axes_of(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in data_axes]))
+
+    def one(leaf):
+        ok = leaf.shape and leaf.shape[0] % dp == 0
+        return NamedSharding(mesh, batch_spec(mesh, len(leaf.shape), ok))
+
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def cache_sharding(cache_shapes: Any, mesh: Mesh) -> Any:
+    """Decode caches: (L, B, S, H?, D?) -> batch over data axes if it
+    divides, else KV sequence over data axes; sequence over `model` when the
+    head dim can't use it (flash-decode layout)."""
+    data_axes = data_axes_of(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in data_axes]))
+    mp = mesh.shape["model"]
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) < 3:
+            return NamedSharding(mesh, P())
+        b, s = shape[1], shape[2]
+        b_ax = data_axes if b % dp == 0 else None
+        s_ax = "model" if s % mp == 0 and s > 1 else None
+        if b_ax is None and s % (dp * mp) == 0 and s > 1:
+            # batch=1 long-context: the sequence takes every axis
+            spec = [None, None, data_axes + ("model",)]
+        else:
+            spec = [None, b_ax, s_ax]
+        spec += [None] * (len(shape) - 3)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, cache_shapes)

@@ -1,0 +1,2 @@
+from repro.train.optimizer import adafactor_init, adafactor_update, adamw_init, adamw_update, make_optimizer  # noqa: F401
+from repro.train.train_step import make_train_step, TrainState  # noqa: F401

@@ -1,0 +1,180 @@
+"""Optimizers built from scratch (no optax): AdamW and Adafactor.
+
+AdamW keeps fp32 m/v (sharded like the params via the same rules — FSDP
+makes them fit). Adafactor factors the second moment into row/col statistics
+(O(n+m) instead of O(nm)) — the choice for grok-1/arctic where full Adam
+state would exceed the 16 GB/chip HBM budget (DESIGN.md §3; napkin math in
+EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    min_dim_size_to_factor: int = 128
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree))
+    )
+
+
+def _clip(grads: Any, max_norm: float) -> Any:
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(
+    params: Any, grads: Any, state: AdamWState, cfg: OptConfig
+) -> Tuple[Any, AdamWState, dict]:
+    grads, gn = _clip(grads, cfg.grad_clip)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v2 = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - cfg.learning_rate * delta).astype(
+            p.dtype
+        ), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gn
+    }
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments)
+# ---------------------------------------------------------------------------
+
+class FactoredStat(NamedTuple):
+    row: jax.Array  # (..., n) mean over last dim
+    col: jax.Array  # (..., m) mean over second-to-last dim
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    stats: Any  # FactoredStat for factored leaves, full v for small ones
+
+
+def _factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+def adafactor_init(params: Any) -> AdafactorState:
+    def one(p):
+        if _factorable(p.shape):
+            return FactoredStat(
+                row=jnp.zeros(p.shape[:-1], jnp.float32),
+                col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            )
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        stats=jax.tree.map(one, params),
+    )
+
+
+def adafactor_update(
+    params: Any, grads: Any, state: AdafactorState, cfg: OptConfig
+) -> Tuple[Any, AdafactorState, dict]:
+    grads, gn = _clip(grads, cfg.grad_clip)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2t = 1.0 - t ** (-cfg.decay_rate)
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if isinstance(s, FactoredStat):
+            row = beta2t * s.row + (1 - beta2t) * jnp.mean(g2, axis=-1)
+            col = beta2t * s.col + (1 - beta2t) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(row, axis=-1, keepdims=True)
+            vhat = (
+                row[..., :, None] / jnp.maximum(row_mean[..., None], 1e-30)
+            ) * col[..., None, :]
+            update = g * jax.lax.rsqrt(jnp.maximum(vhat, 1e-30))
+            new_s = FactoredStat(row=row, col=col)
+        else:
+            v = beta2t * s + (1 - beta2t) * g2
+            update = g * jax.lax.rsqrt(jnp.maximum(v, 1e-30))
+            new_s = v
+        # update clipping (Adafactor's RMS-1 rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        new_p = (
+            p.astype(jnp.float32)
+            - cfg.learning_rate * update
+            - cfg.learning_rate * cfg.weight_decay * p.astype(jnp.float32)
+        )
+        return new_p.astype(p.dtype), new_s
+
+    leaves = jax.tree_util.tree_structure(params)
+    out = jax.tree.map(
+        upd, params, grads, state.stats,
+        is_leaf=lambda x: isinstance(x, FactoredStat),
+    )
+    new_params = jax.tree_util.tree_map(
+        lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_stats = jax.tree_util.tree_map(
+        lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return new_params, AdafactorState(step=step, stats=new_stats), {
+        "grad_norm": gn
+    }
+
+
+def make_optimizer(kind: str, cfg: OptConfig):
+    """(init_fn, update_fn) pair."""
+    if kind == "adamw":
+        return adamw_init, lambda p, g, s: adamw_update(p, g, s, cfg)
+    if kind == "adafactor":
+        return adafactor_init, lambda p, g, s: adafactor_update(p, g, s, cfg)
+    raise ValueError(kind)

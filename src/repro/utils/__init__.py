@@ -1,0 +1,5 @@
+"""Small shared utilities."""
+from repro.utils.prng import fold_in_str, split_like
+from repro.utils.treeutil import tree_bytes, tree_param_count
+
+__all__ = ["fold_in_str", "split_like", "tree_bytes", "tree_param_count"]

@@ -1,0 +1,19 @@
+"""PRNG helpers."""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+
+
+def fold_in_str(key: jax.Array, name: str) -> jax.Array:
+    """Deterministically fold a string into a PRNG key."""
+    h = int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+    return jax.random.fold_in(key, h)
+
+
+def split_like(key: jax.Array, tree):
+    """Split a key into a pytree of keys with the same structure as ``tree``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))

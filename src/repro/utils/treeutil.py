@@ -1,0 +1,18 @@
+"""Pytree helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        dt = jnp.dtype(x.dtype) if hasattr(x, "dtype") else jnp.dtype(jnp.float32)
+        total += int(np.prod(x.shape)) * dt.itemsize
+    return total

@@ -1,0 +1,101 @@
+"""Alias tables + F+ tree: exactness and distribution properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alias import (
+    alias_pmf,
+    build_alias,
+    build_alias_counts,
+    ftree_build,
+    ftree_sample,
+    ftree_total,
+    ftree_update,
+    sample_alias,
+    sample_alias_reuse,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.floats(0.0, 100.0), min_size=2, max_size=200),
+    st.integers(0, 10),
+)
+def test_alias_pmf_exact(probs, seed):
+    """The realized table pmf equals the input pmf (Vose exactness)."""
+    p = np.asarray(probs, np.float32)
+    if p.sum() == 0:
+        p[0] = 1.0
+    table = build_alias(jnp.asarray(p))
+    np.testing.assert_allclose(
+        np.asarray(alias_pmf(table)), p / p.sum(), atol=3e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=2, max_size=100))
+def test_alias_counts_integer_exact(counts):
+    """Paper §5.3 integer alias: exactly rational, zero float drift."""
+    c = np.asarray(counts, np.int64)
+    if c.sum() == 0:
+        c[0] = 5
+    prob_num, alias, total = build_alias_counts(c)
+    k = c.shape[0]
+    num = prob_num.copy()
+    spill = np.zeros(k, np.int64)
+    np.add.at(spill, alias, total - prob_num)
+    # realized pmf numerators over k*total must equal c * k * total / sum
+    realized = num + spill
+    expected = c * k  # both over denominator k*total after scaling by sum
+    np.testing.assert_array_equal(realized * c.sum() // total, expected * c.sum() // total)
+    np.testing.assert_allclose(realized / (k * total), c / c.sum(), atol=1e-12)
+
+
+def test_alias_sampling_distribution(key):
+    p = np.asarray([0.5, 0.0, 0.2, 0.05, 0.25], np.float32)
+    table = build_alias(jnp.asarray(p))
+    n = 200_000
+    k1, k2 = jax.random.split(key)
+    s = sample_alias(
+        table, jax.random.uniform(k1, (n,)), jax.random.uniform(k2, (n,))
+    )
+    emp = np.bincount(np.asarray(s), minlength=5) / n
+    np.testing.assert_allclose(emp, p, atol=5e-3)
+    assert emp[1] == 0.0  # zero-probability topic never sampled
+
+
+def test_alias_sampling_reuse_single_uniform(key):
+    """§5.3 random-number reuse: one uniform for bin + split."""
+    p = np.asarray([0.3, 0.3, 0.4], np.float32)
+    table = build_alias(jnp.asarray(p))
+    s = sample_alias_reuse(table, jax.random.uniform(key, (200_000,)))
+    emp = np.bincount(np.asarray(s), minlength=3) / 200_000
+    np.testing.assert_allclose(emp, p, atol=5e-3)
+
+
+def test_ftree_sample_and_update(key, rng):
+    p = rng.gamma(1.0, size=37).astype(np.float32)
+    t = ftree_build(jnp.asarray(p))
+    np.testing.assert_allclose(float(ftree_total(t)), p.sum(), rtol=1e-5)
+    u = jnp.asarray(rng.random(150_000).astype(np.float32))
+    emp = np.bincount(np.asarray(ftree_sample(t, u)), minlength=37) / 150_000
+    np.testing.assert_allclose(emp, p / p.sum(), atol=6e-3)
+    # O(log K) update
+    t2 = ftree_update(t, jnp.int32(5), jnp.float32(10.0))
+    p2 = p.copy()
+    p2[5] = 10.0
+    emp2 = np.bincount(np.asarray(ftree_sample(t2, u)), minlength=37) / 150_000
+    np.testing.assert_allclose(emp2, p2 / p2.sum(), atol=6e-3)
+
+
+def test_alias_jit_and_vmap():
+    """Table build is jittable and vmappable (per-word wTables)."""
+    ps = jnp.asarray(np.random.default_rng(1).gamma(0.5, size=(16, 64)),
+                     jnp.float32)
+    tables = jax.jit(jax.vmap(build_alias))(ps)
+    pmfs = jax.vmap(alias_pmf)(tables)
+    np.testing.assert_allclose(
+        np.asarray(pmfs), np.asarray(ps / ps.sum(1, keepdims=True)), atol=3e-5
+    )

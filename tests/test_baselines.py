@@ -1,0 +1,58 @@
+"""SparseLDA + LightLDA baselines on the shared substrate (paper §7.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import LDATrainer, TrainConfig
+from repro.core.baselines import build_doc_index, lightlda_sweep, sparselda_sweep
+from repro.core.init import random_init
+
+
+def test_doc_index(key, tiny_corpus):
+    idx = build_doc_index(tiny_corpus)
+    docs = np.asarray(tiny_corpus.doc)
+    np.testing.assert_array_equal(
+        np.asarray(idx.lengths), np.bincount(docs, minlength=tiny_corpus.num_docs)
+    )
+    # every doc's slice points at its own tokens
+    tok = np.asarray(idx.token_of)
+    off = np.asarray(idx.offsets)
+    for d in [0, 3, tiny_corpus.num_docs - 1]:
+        sl = tok[off[d] : off[d + 1]]
+        assert (docs[sl] == d).all()
+
+
+def test_sparselda_valid_and_converges(key, tiny_corpus, tiny_hyper):
+    tr = LDATrainer(tiny_corpus, tiny_hyper, TrainConfig(algorithm="sparselda"))
+    st = tr.init_state(key)
+    llh0 = tr.llh(st)
+    for _ in range(8):
+        st = tr.step(st)
+    st.check_invariants(tiny_corpus)
+    assert tr.llh(st) > llh0
+
+
+def test_lightlda_valid_and_converges(key, tiny_corpus, tiny_hyper):
+    tr = LDATrainer(tiny_corpus, tiny_hyper,
+                    TrainConfig(algorithm="lightlda", num_mh=4))
+    st = tr.init_state(key)
+    llh0 = tr.llh(st)
+    for _ in range(8):
+        st = tr.step(st)
+    st.check_invariants(tiny_corpus)
+    assert tr.llh(st) > llh0
+
+
+def test_all_algorithms_same_stationary_direction(key, tiny_corpus, tiny_hyper):
+    """All samplers target Eq. 3: after equal iterations the llh values land
+    in a common band (coarse cross-validation of the baselines)."""
+    finals = {}
+    for alg in ("zen", "sparselda", "lightlda"):
+        tr = LDATrainer(tiny_corpus, tiny_hyper, TrainConfig(algorithm=alg))
+        st = tr.init_state(key)
+        for _ in range(10):
+            st = tr.step(st)
+        finals[alg] = tr.llh(st)
+    vals = np.asarray(list(finals.values()))
+    spread = (vals.max() - vals.min()) / abs(vals.mean())
+    assert spread < 0.08, finals

@@ -1,0 +1,97 @@
+"""Config registry sanity: exact assigned figures + derived param counts."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, shapes_for
+from repro.configs.base import ArchConfig, LDAArchConfig
+
+# param-count bands (B) derived from the arch names
+EXPECTED_B = {
+    "gemma3-4b": (3.5, 4.5),
+    "qwen1.5-4b": (3.5, 4.5),
+    "qwen3-8b": (7.5, 8.7),
+    "minicpm3-4b": (3.5, 4.5),
+    "zamba2-1.2b": (0.9, 1.4),
+    "whisper-medium": (0.6, 0.9),
+    "grok-1-314b": (290, 330),
+    "arctic-480b": (450, 500),
+    "falcon-mamba-7b": (6.5, 7.7),
+    "qwen2-vl-2b": (1.3, 2.2),
+}
+
+
+def test_ten_archs_plus_lda():
+    archs = list_archs()
+    assert len([a for a in archs if not a.startswith("zenlda")]) == 10
+    assert "zenlda-nytimes" in archs and "zenlda-webchunk" in archs
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED_B))
+def test_param_counts_match_names(arch):
+    cfg = get_config(arch)
+    from repro.launch.specs import params_abstract
+
+    shapes = params_abstract(cfg)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes)) / 1e9
+    lo, hi = EXPECTED_B[arch]
+    assert lo <= n <= hi, (arch, n)
+
+
+def test_assigned_figures_exact():
+    g = get_config("gemma3-4b")
+    assert (g.num_layers, g.d_model, g.num_heads, g.num_kv_heads,
+            g.d_ff, g.vocab_size) == (34, 2560, 8, 4, 10240, 262144)
+    assert g.local_global_pattern == 5
+    q = get_config("qwen3-8b")
+    assert q.qk_norm and q.num_kv_heads == 8 and q.d_ff == 12288
+    a = get_config("arctic-480b")
+    assert a.moe.num_experts == 128 and a.moe.top_k == 2
+    assert a.moe.dense_residual
+    gk = get_config("grok-1-314b")
+    assert gk.moe.num_experts == 8 and gk.d_ff == 32768
+    f = get_config("falcon-mamba-7b")
+    assert f.ssm.version == 1 and f.ssm.state_dim == 16 and f.d_ff == 0
+    z = get_config("zamba2-1.2b")
+    assert z.ssm.version == 2 and z.ssm.state_dim == 64
+    v = get_config("qwen2-vl-2b")
+    assert v.mrope and v.num_kv_heads == 2
+    w = get_config("whisper-medium")
+    assert w.encoder_decoder and w.norm_style == "layernorm"
+    m = get_config("minicpm3-4b")
+    assert m.mla is not None and m.num_layers == 62
+    q15 = get_config("qwen1.5-4b")
+    assert q15.qkv_bias and q15.num_kv_heads == 20
+
+
+def test_shape_skip_rules():
+    """long_500k only for sub-quadratic archs (DESIGN.md §4)."""
+    for arch in list_archs(lm_only=True):
+        cfg = get_config(arch)
+        runs_long = "long_500k" in shapes_for(cfg)
+        assert runs_long == cfg.is_sub_quadratic, arch
+    # the three expected archs
+    assert set(
+        a for a in list_archs(lm_only=True)
+        if "long_500k" in shapes_for(get_config(a))
+    ) == {"gemma3-4b", "zamba2-1.2b", "falcon-mamba-7b"}
+
+
+def test_cell_count():
+    """40 assigned cells = 10 archs x 4 shapes; skips are documented,
+    runnable cells = 33 + 2 LDA."""
+    total = 0
+    runnable = 0
+    for arch in list_archs(lm_only=True):
+        cfg = get_config(arch)
+        total += 4
+        runnable += len(shapes_for(cfg))
+    assert total == 40
+    assert runnable == 33
+
+
+def test_smoke_configs_are_small():
+    for arch in list_archs(lm_only=True):
+        cfg = get_config(arch + "-smoke")
+        assert cfg.d_model <= 128 and cfg.vocab_size <= 512
+        assert cfg.family == get_config(arch).family

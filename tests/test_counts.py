@@ -1,0 +1,71 @@
+"""Count maintenance: build/delta conservation invariants (property)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.counts import build_counts, delta_counts, doc_lengths
+
+
+@st.composite
+def assignments(draw):
+    e = draw(st.integers(1, 60))
+    w = draw(st.integers(2, 10))
+    d = draw(st.integers(2, 10))
+    k = draw(st.integers(2, 8))
+    word = draw(st.lists(st.integers(0, w - 1), min_size=e, max_size=e))
+    doc = draw(st.lists(st.integers(0, d - 1), min_size=e, max_size=e))
+    z0 = draw(st.lists(st.integers(0, k - 1), min_size=e, max_size=e))
+    z1 = draw(st.lists(st.integers(0, k - 1), min_size=e, max_size=e))
+    return w, d, k, np.asarray(word, np.int32), np.asarray(doc, np.int32), \
+        np.asarray(z0, np.int32), np.asarray(z1, np.int32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(assignments())
+def test_build_and_delta_conservation(data):
+    w, d, k, word, doc, z0, z1 = data
+    n_wk, n_kd, n_k = build_counts(
+        jnp.asarray(word), jnp.asarray(doc), jnp.asarray(z0), w, d, k
+    )
+    e = word.shape[0]
+    assert int(jnp.sum(n_wk)) == e
+    assert int(jnp.sum(n_kd)) == e
+    np.testing.assert_array_equal(np.asarray(jnp.sum(n_wk, 0)), np.asarray(n_k))
+    np.testing.assert_array_equal(np.asarray(jnp.sum(n_kd, 0)), np.asarray(n_k))
+
+    d_wk, d_kd, d_k = delta_counts(
+        jnp.asarray(word), jnp.asarray(doc), jnp.asarray(z0), jnp.asarray(z1),
+        w, d, k,
+    )
+    n_wk2, n_kd2, n_k2 = build_counts(
+        jnp.asarray(word), jnp.asarray(doc), jnp.asarray(z1), w, d, k
+    )
+    # delta aggregation (§5.2) reconstructs the new counts exactly
+    np.testing.assert_array_equal(np.asarray(n_wk + d_wk), np.asarray(n_wk2))
+    np.testing.assert_array_equal(np.asarray(n_kd + d_kd), np.asarray(n_kd2))
+    np.testing.assert_array_equal(np.asarray(n_k + d_k), np.asarray(n_k2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(assignments())
+def test_delta_zero_where_unchanged(data):
+    w, d, k, word, doc, z0, _ = data
+    d_wk, d_kd, d_k = delta_counts(
+        jnp.asarray(word), jnp.asarray(doc), jnp.asarray(z0), jnp.asarray(z0),
+        w, d, k,
+    )
+    assert int(jnp.sum(jnp.abs(d_wk))) == 0
+    assert int(jnp.sum(jnp.abs(d_kd))) == 0
+    assert int(jnp.sum(jnp.abs(d_k))) == 0
+
+
+def test_masked_tokens_inert():
+    word = jnp.asarray([0, 1, 1], jnp.int32)
+    doc = jnp.asarray([0, 0, 1], jnp.int32)
+    z = jnp.asarray([0, 1, 2], jnp.int32)
+    mask = jnp.asarray([True, True, False])
+    n_wk, n_kd, n_k = build_counts(word, doc, z, 2, 2, 3, mask=mask)
+    assert int(jnp.sum(n_k)) == 2
+    np.testing.assert_array_equal(
+        np.asarray(doc_lengths(doc, 2, mask=mask)), [2, 0]
+    )

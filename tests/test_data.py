@@ -1,0 +1,40 @@
+"""Corpus generation + libsvm IO (the paper's corpus format)."""
+import io
+import os
+import tempfile
+
+import numpy as np
+
+from repro.data import load_libsvm, save_libsvm, synthetic_corpus, synthetic_lda_corpus
+
+
+def test_synthetic_power_law():
+    c = synthetic_corpus(0, num_docs=200, num_words=500, avg_doc_len=50,
+                         zipf_a=1.3)
+    freq = np.bincount(np.asarray(c.word), minlength=500)
+    # hot head: top-10 words carry a disproportionate share
+    assert freq[np.argsort(-freq)[:10]].sum() > 0.2 * c.num_tokens
+    assert c.num_tokens > 0 and int(c.doc.max()) < 200
+
+
+def test_libsvm_roundtrip():
+    c = synthetic_corpus(1, num_docs=30, num_words=40, avg_doc_len=10)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "c.libsvm")
+        save_libsvm(c, path)
+        c2 = load_libsvm(path, num_words=40)
+    assert c2.num_docs == c.num_docs
+    assert c2.num_tokens == c.num_tokens
+    # same word histogram per doc (token order within doc may differ)
+    for d in range(c.num_docs):
+        a = np.sort(np.asarray(c.word)[np.asarray(c.doc) == d])
+        b = np.sort(np.asarray(c2.word)[np.asarray(c2.doc) == d])
+        np.testing.assert_array_equal(a, b)
+
+
+def test_generative_corpus_shapes():
+    c, phi = synthetic_lda_corpus(0, num_docs=20, num_words=50, num_topics=5,
+                                  avg_doc_len=20)
+    assert phi.shape == (5, 50)
+    np.testing.assert_allclose(phi.sum(1), 1.0, rtol=1e-6)
+    assert c.num_tokens > 0

@@ -1,0 +1,89 @@
+"""Formula decompositions: every variant must equal Eq. 3 when fresh."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decompositions import (
+    precompute_zen_terms,
+    sparselda_buckets,
+    std_probs,
+    zen_probs,
+)
+from repro.core.types import LDAHyperParams
+
+
+@pytest.fixture()
+def setup(rng):
+    k, w_total, t = 16, 50, 12
+    n_wk = jnp.asarray(rng.integers(0, 30, (t, k)), jnp.int32)
+    n_kd = jnp.asarray(rng.integers(0, 10, (t, k)), jnp.int32)
+    n_k = jnp.asarray(rng.integers(20, 400, (k,)), jnp.int32)
+    hyper = LDAHyperParams(num_topics=k, alpha=0.05, beta=0.01)
+    return n_wk, n_kd, n_k, hyper, w_total
+
+
+def _eq3(n_wk, n_kd, n_k, alpha_k, beta, w_total):
+    denom = n_k.astype(jnp.float32)[None, :] + w_total * beta
+    return (
+        (n_wk.astype(jnp.float32) + beta) / denom
+        * (n_kd.astype(jnp.float32) + alpha_k[None, :])
+    )
+
+
+def test_zen_decomposition_equals_eq3(setup):
+    """gDense + wSparse + dSparse == Eq. 3 (paper §3.1)."""
+    n_wk, n_kd, n_k, hyper, w_total = setup
+    terms = precompute_zen_terms(n_k, hyper, w_total)
+    p_zen = zen_probs(n_wk, n_kd, terms, hyper.beta)
+    p_ref = _eq3(n_wk, n_kd, n_k, terms.alpha_k, hyper.beta, w_total)
+    np.testing.assert_allclose(np.asarray(p_zen), np.asarray(p_ref), rtol=2e-5)
+
+
+def test_sparselda_buckets_equal_eq3(setup):
+    """s + r + q == Eq. 3 (Table 1, SparseLDA column)."""
+    n_wk, n_kd, n_k, hyper, w_total = setup
+    terms = precompute_zen_terms(n_k, hyper, w_total)
+    s, r, q = sparselda_buckets(n_wk, n_kd, terms, hyper.beta)
+    p_ref = _eq3(n_wk, n_kd, n_k, terms.alpha_k, hyper.beta, w_total)
+    np.testing.assert_allclose(
+        np.asarray(s + r + q), np.asarray(p_ref), rtol=2e-5
+    )
+
+
+def test_std_probs_equals_eq3(setup):
+    n_wk, n_kd, n_k, hyper, w_total = setup
+    terms = precompute_zen_terms(n_k, hyper, w_total)
+    p = std_probs(n_wk, n_kd, n_k, terms.alpha_k, hyper.beta, w_total)
+    p_ref = _eq3(n_wk, n_kd, n_k, terms.alpha_k, hyper.beta, w_total)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref), rtol=2e-5)
+
+
+def test_alg5_redundancy_elimination_identity(setup):
+    """Paper Alg. 5: t4 = t2 + (t2*t3).*t1 equals alpha_k/(N_k+W*beta)."""
+    n_wk, n_kd, n_k, hyper, w_total = setup
+    terms = precompute_zen_terms(n_k, hyper, w_total)
+    alpha_direct = hyper.alpha_k(n_k)
+    t4_direct = alpha_direct / (n_k.astype(jnp.float32) + w_total * hyper.beta)
+    np.testing.assert_allclose(
+        np.asarray(terms.t4), np.asarray(t4_direct), rtol=2e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(terms.alpha_k), np.asarray(alpha_direct), rtol=2e-5
+    )
+
+
+def test_asymmetric_prior_sums_to_k_alpha(setup):
+    """Wallach approximation: sum_k alpha_k ~= K * alpha * N/(N+alpha')."""
+    _, _, n_k, hyper, _ = setup
+    alpha_k = hyper.alpha_k(n_k)
+    n = float(jnp.sum(n_k))
+    expected = hyper.num_topics * hyper.alpha * (
+        (n + hyper.alpha_prime) / (n + hyper.alpha_prime)
+    )
+    np.testing.assert_allclose(
+        float(jnp.sum(alpha_k)), hyper.num_topics * hyper.alpha, rtol=1e-5
+    )
+    # hot topics get proportionally more prior mass
+    order_alpha = np.argsort(np.asarray(alpha_k))
+    order_nk = np.argsort(np.asarray(n_k))
+    np.testing.assert_array_equal(order_alpha, order_nk)

@@ -1,0 +1,100 @@
+""""Converged" token exclusion (paper §5.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.exclusion import (
+    ExclusionConfig,
+    active_mask,
+    compact_active,
+    update_exclusion_stats,
+)
+from repro.core.types import CGSState
+
+
+def _mkstate(e, iteration=0, i=None, t=None):
+    z = jnp.zeros((e,), jnp.int32)
+    return CGSState(
+        topic=z, prev_topic=z, n_wk=jnp.zeros((2, 2), jnp.int32),
+        n_kd=jnp.zeros((2, 2), jnp.int32), n_k=jnp.zeros((2,), jnp.int32),
+        rng=jax.random.key(0), iteration=iteration,
+        stale_iters=jnp.zeros((e,), jnp.int32) if i is None else i,
+        same_count=jnp.zeros((e,), jnp.int32) if t is None else t,
+    )
+
+
+def test_disabled_means_all_active(key):
+    state = _mkstate(100)
+    mask = active_mask(state, ExclusionConfig(enabled=False), key)
+    assert bool(jnp.all(mask))
+
+
+def test_warmup_all_active(key):
+    state = _mkstate(100, iteration=10)
+    cfg = ExclusionConfig(enabled=True, start_iteration=30)
+    assert bool(jnp.all(active_mask(state, cfg, key)))
+
+
+def test_probability_2_pow_i_minus_t(key):
+    """P(resample) = 2^(i-t): t=3,i=0 -> 1/8 expected activity."""
+    e = 40_000
+    state = _mkstate(
+        e, iteration=100,
+        i=jnp.zeros((e,), jnp.int32),
+        t=jnp.full((e,), 3, jnp.int32),
+    )
+    cfg = ExclusionConfig(enabled=True, start_iteration=1)
+    frac = float(jnp.mean(active_mask(state, cfg, key).astype(jnp.float32)))
+    np.testing.assert_allclose(frac, 0.125, atol=0.01)
+
+
+def test_stats_update_rules():
+    state = _mkstate(4, i=jnp.asarray([1, 1, 5, 0], jnp.int32),
+                     t=jnp.asarray([2, 2, 1, 0], jnp.int32))
+    new_topic = jnp.asarray([0, 1, 0, 0], jnp.int32)  # token 1 changed
+    mask = jnp.asarray([True, True, False, True])
+    i, t = update_exclusion_stats(state, new_topic, mask)
+    # processed unchanged -> i=0, t+1 ; processed changed -> 0,0 ;
+    # skipped -> i+1, t ; processed unchanged -> 0, t+1
+    np.testing.assert_array_equal(np.asarray(i), [0, 0, 6, 0])
+    np.testing.assert_array_equal(np.asarray(t), [3, 0, 1, 1])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=64))
+def test_compact_active_partition(mask):
+    mask_j = jnp.asarray(mask)
+    vals = jnp.arange(len(mask), dtype=jnp.int32)
+    perm, (vals_p,), num_active = compact_active(mask_j, vals)
+    n = int(num_active)
+    assert n == sum(mask)
+    # active tokens occupy the prefix, stable order
+    active_vals = [i for i, m in enumerate(mask) if m]
+    np.testing.assert_array_equal(np.asarray(vals_p[:n]), active_vals)
+    # permutation is a bijection
+    assert sorted(np.asarray(perm).tolist()) == list(range(len(mask)))
+
+
+def test_exclusion_reduces_work_but_keeps_quality(key, tiny_corpus, tiny_hyper):
+    """Fig. 9: with exclusion on, fewer tokens are resampled per iteration
+    while llh stays comparable."""
+    from repro.core import LDATrainer, TrainConfig
+
+    base = LDATrainer(tiny_corpus, tiny_hyper, TrainConfig(algorithm="zen"))
+    excl = LDATrainer(
+        tiny_corpus, tiny_hyper,
+        TrainConfig(algorithm="zen",
+                    exclusion=ExclusionConfig(enabled=True, start_iteration=4)),
+    )
+    sb = base.init_state(key)
+    se = excl.init_state(key)
+    for _ in range(12):
+        sb = base.step(sb)
+        se = excl.step(se)
+    se.check_invariants(tiny_corpus)
+    lb, le = base.llh(sb), excl.llh(se)
+    assert abs(lb - le) / abs(lb) < 0.05
+    # activity must have dropped below 100% late in training
+    frac_active = float(jnp.mean((se.stale_iters == 0).astype(jnp.float32)))
+    assert frac_active < 0.995

@@ -1,0 +1,91 @@
+"""Graph partitioning (paper §4.1, Alg. 3 DBH+)."""
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    PARTITIONERS,
+    dbh,
+    dbh_plus,
+    grid_partition,
+    partition_metrics,
+)
+from repro.data import synthetic_corpus
+
+
+@pytest.fixture(scope="module")
+def skewed():
+    c = synthetic_corpus(0, num_docs=400, num_words=600, avg_doc_len=40,
+                         zipf_a=1.4)
+    return c, np.asarray(c.word), np.asarray(c.doc)
+
+
+def test_all_partitioners_valid(skewed):
+    _, w, d = skewed
+    for name, fn in PARTITIONERS.items():
+        part = fn(w, d, 8)
+        assert part.min() >= 0 and part.max() < 8, name
+        m = partition_metrics(w, d, part, 8)
+        assert m["edge_balance"] >= 1.0
+        assert m["total_replication"] >= 1.0
+
+
+def test_1d_partition_perfect_word_locality(skewed):
+    _, w, d = skewed
+    part = PARTITIONERS["edge_partition_1d"](w, d, 8)
+    m = partition_metrics(w, d, part, 8)
+    assert m["word_replication"] == 1.0
+
+
+def test_dbh_beats_random_on_replication(skewed):
+    _, w, d = skewed
+    m_rand = partition_metrics(w, d, PARTITIONERS["random_vertex_cut"](w, d, 16), 16)
+    m_dbh = partition_metrics(w, d, dbh(w, d, 16), 16)
+    assert m_dbh["total_replication"] < m_rand["total_replication"]
+
+
+def test_dbh_plus_improves_cold_edges():
+    """Alg. 3: on a corpus with many cold edges, DBH+ lowers replication
+    without hurting balance."""
+    c = synthetic_corpus(1, num_docs=3000, num_words=2000, avg_doc_len=5,
+                         zipf_a=1.5)
+    w, d = np.asarray(c.word), np.asarray(c.doc)
+    m_dbh = partition_metrics(w, d, dbh(w, d, 16), 16)
+    m_plus = partition_metrics(w, d, dbh_plus(w, d, 16, threshold=8), 16)
+    assert m_plus["total_replication"] <= m_dbh["total_replication"]
+    assert m_plus["edge_balance"] <= m_dbh["edge_balance"] * 1.05
+
+
+def test_grid_partition_roundtrip(skewed):
+    corpus, w, d = skewed
+    for balance in ("lpt", "hash"):
+        grid = grid_partition(corpus, 2, 4, balance=balance)
+        # every real token appears exactly once
+        assert int(grid.mask.sum()) == corpus.num_tokens
+        # relabeled ids stay within their shard's range
+        rows = np.arange(8) // 4
+        cols = np.arange(8) % 4
+        for c_ in range(8):
+            sel = grid.mask[c_]
+            ws = grid.word[c_][sel]
+            ds = grid.doc[c_][sel]
+            assert (ws // grid.words_per_shard == cols[c_]).all()
+            assert (ds // grid.docs_per_shard == rows[c_]).all()
+        # permutations are injective
+        assert np.unique(grid.word_perm).size == corpus.num_words
+        assert np.unique(grid.doc_perm).size == corpus.num_docs
+
+
+def test_lpt_balances_better_than_hash(skewed):
+    corpus, _, _ = skewed
+    g_lpt = grid_partition(corpus, 4, 4, balance="lpt")
+    g_hash = grid_partition(corpus, 4, 4, balance="hash")
+    assert g_lpt.padding_overhead <= g_hash.padding_overhead
+
+
+def test_word_sorted_within_cell(skewed):
+    """Word-by-word process order (paper §3.1) is the physical layout."""
+    corpus, _, _ = skewed
+    grid = grid_partition(corpus, 2, 2, sort_tokens_by="word")
+    for c_ in range(4):
+        ws = grid.word[c_][grid.mask[c_]]
+        assert (np.diff(ws) >= 0).all()

@@ -1,0 +1,42 @@
+"""Topic-duplicate merging (paper §4.3)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hyper import duplicate_topic_map, merge_topics, topic_l1_distances
+
+
+def test_l1_distances():
+    n_wk = jnp.asarray([[10, 10, 0], [0, 0, 10], [10, 10, 0]], jnp.int32)
+    d = np.asarray(topic_l1_distances(n_wk))
+    assert d[0, 1] < 1e-6  # identical distributions
+    assert d[0, 2] > 1.0  # disjoint -> L1 distance 2
+
+
+def test_duplicate_map_and_merge():
+    # topics 0 and 1 identical; 2 distinct
+    n_wk = np.array([[5, 5, 0], [5, 5, 0], [0, 0, 10], [2, 2, 0]], np.int32)
+    tmap = duplicate_topic_map(n_wk, threshold=0.1)
+    assert tmap[1] == tmap[0] == 0
+    assert tmap[2] == 2
+
+    topic = jnp.asarray([0, 1, 2, 1], jnp.int32)
+    n_kd = jnp.asarray([[1, 1, 1], [1, 1, 0]], jnp.int32)
+    n_k = jnp.asarray(np.asarray(n_wk).sum(0), jnp.int32)
+    new_topic, m_wk, m_kd, m_k = merge_topics(
+        topic, jnp.asarray(n_wk), n_kd, n_k, jnp.asarray(tmap)
+    )
+    # conservation
+    assert int(jnp.sum(m_wk)) == int(np.asarray(n_wk).sum())
+    assert int(jnp.sum(m_k)) == int(np.asarray(n_wk).sum())
+    # merged column got both topics' mass; old column emptied
+    assert int(m_k[0]) == int(n_k[0] + n_k[1])
+    assert int(m_k[1]) == 0
+    np.testing.assert_array_equal(np.asarray(new_topic), [0, 0, 2, 0])
+
+
+def test_lower_threshold_merges_more():
+    rng = np.random.default_rng(0)
+    n_wk = rng.integers(0, 5, (30, 8)).astype(np.int32)
+    m_strict = duplicate_topic_map(n_wk, threshold=0.01)
+    m_loose = duplicate_topic_map(n_wk, threshold=2.1)
+    assert len(np.unique(m_loose)) <= len(np.unique(m_strict))

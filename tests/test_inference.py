@@ -1,0 +1,54 @@
+"""Model inference: CGS inference + RT-LDA (paper §4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.inference import cgs_infer, rtlda_infer
+from repro.core.types import LDAHyperParams
+
+
+def _sharp_model(k=4, w=40):
+    """Topics with disjoint vocabulary blocks."""
+    n_wk = np.zeros((w, k), np.int32)
+    block = w // k
+    for t in range(k):
+        n_wk[t * block : (t + 1) * block, t] = 100
+    n_k = n_wk.sum(0).astype(np.int32)
+    return jnp.asarray(n_wk), jnp.asarray(n_k)
+
+
+def test_rtlda_recovers_dominant_topic(key):
+    n_wk, n_k = _sharp_model()
+    hyper = LDAHyperParams(num_topics=4, alpha=0.1, beta=0.01)
+    words = jnp.asarray([0, 1, 2, 3, 4, 5], jnp.int32)  # all topic-0 words
+    theta = rtlda_infer(n_wk, n_k, words, hyper)
+    assert int(jnp.argmax(theta)) == 0
+    np.testing.assert_allclose(float(jnp.sum(theta)), 1.0, atol=1e-3)
+
+
+def test_cgs_infer_recovers_dominant_topic(key):
+    n_wk, n_k = _sharp_model()
+    hyper = LDAHyperParams(num_topics=4, alpha=0.1, beta=0.01)
+    words = jnp.asarray([20, 21, 22, 23, 24], jnp.int32)  # topic-2 words
+    theta = cgs_infer(key, n_wk, n_k, words, hyper, num_sweeps=20)
+    assert int(jnp.argmax(theta)) == 2
+    np.testing.assert_allclose(float(jnp.sum(theta)), 1.0, atol=1e-3)
+
+
+def test_rtlda_deterministic(key):
+    n_wk, n_k = _sharp_model()
+    hyper = LDAHyperParams(num_topics=4)
+    words = jnp.asarray([0, 11, 12, 13], jnp.int32)
+    t1 = rtlda_infer(n_wk, n_k, words, hyper)
+    t2 = rtlda_infer(n_wk, n_k, words, hyper)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_mixed_document(key):
+    """A half/half document should spread theta across both topics."""
+    n_wk, n_k = _sharp_model()
+    hyper = LDAHyperParams(num_topics=4, alpha=0.1, beta=0.01)
+    words = jnp.asarray([0, 1, 2, 10, 11, 12], jnp.int32)
+    theta = np.asarray(cgs_infer(key, n_wk, n_k, words, hyper, num_sweeps=25))
+    assert theta[0] > 0.2 and theta[1] > 0.2
+    assert theta[2] < 0.2 and theta[3] < 0.2

@@ -1,0 +1,63 @@
+"""Initialization strategies (paper §5.1 sparse model initialization)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.init import (
+    beta_boost,
+    random_init,
+    sparse_doc_init,
+    sparse_word_init,
+)
+
+
+def test_all_inits_keep_invariants(key, tiny_corpus, tiny_hyper):
+    for fn in (random_init,
+               lambda k, c, h: sparse_word_init(k, c, h, 0.3),
+               lambda k, c, h: sparse_doc_init(k, c, h, 0.3)):
+        state = fn(key, tiny_corpus, tiny_hyper)
+        state.check_invariants(tiny_corpus)
+
+
+def test_sparse_word_init_bounds_row_nnz(key, tiny_corpus, tiny_hyper):
+    """Each word's topic set is drawn from a subset of size ceil(deg*K)."""
+    deg = 0.34
+    state = sparse_word_init(key, tiny_corpus, tiny_hyper, degree=deg)
+    s = max(1, int(round(deg * tiny_hyper.num_topics)))
+    nnz = np.asarray(jnp.sum(state.n_wk > 0, axis=-1))
+    assert nnz.max() <= s
+    # and it is actually sparser than random init on hot words
+    rand = random_init(key, tiny_corpus, tiny_hyper)
+    assert nnz.sum() <= np.asarray(jnp.sum(rand.n_wk > 0, -1)).sum()
+
+
+def test_sparse_doc_init_bounds_doc_nnz(key, tiny_corpus, tiny_hyper):
+    state = sparse_doc_init(key, tiny_corpus, tiny_hyper, degree=0.34)
+    s = max(1, int(round(0.34 * tiny_hyper.num_topics)))
+    nnz = np.asarray(jnp.sum(state.n_kd > 0, axis=-1))
+    assert nnz.max() <= s
+
+
+def test_beta_boost_targets_unassigned(key, tiny_corpus, tiny_hyper):
+    state = sparse_word_init(key, tiny_corpus, tiny_hyper, degree=0.3)
+    bb = beta_boost(state, tiny_hyper, boost=2.0)
+    unassigned = np.asarray(state.n_wk == 0)
+    b = np.asarray(bb)
+    assert (b[unassigned] == tiny_hyper.beta * 2.0).all()
+    assert (b[~unassigned] == tiny_hyper.beta).all()
+
+
+def test_sparse_init_converges(key, tiny_corpus, tiny_hyper):
+    """Fig. 7: sparse init must still converge (side effect recovered)."""
+    from repro.core import LDATrainer, TrainConfig
+
+    tr = LDATrainer(
+        tiny_corpus, tiny_hyper,
+        TrainConfig(algorithm="zen", init="sparse_word",
+                    sparse_init_degree=0.3),
+    )
+    st = tr.init_state(key)
+    l0 = tr.llh(st)
+    for _ in range(10):
+        st = tr.step(st)
+    assert tr.llh(st) > l0

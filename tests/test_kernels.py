@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import topic_histogram, zen_sample
+from repro.kernels.ref import topic_histogram_ref, zen_probs_ref, zen_sample_ref
+from repro.kernels.zen_sampler import hash_uniform
+
+
+@pytest.mark.parametrize(
+    "t,k,bt,bk",
+    [
+        (64, 128, 64, 128),
+        (128, 256, 64, 128),
+        (9, 33, 8, 128),  # unaligned -> padding path
+        (300, 700, 64, 128),
+        (256, 1024, 128, 256),
+        (1, 5, 8, 128),
+    ],
+)
+def test_zen_sampler_bit_exact(t, k, bt, bk, rng):
+    nwk = jnp.asarray(rng.integers(0, 50, (t, k)), jnp.int32)
+    nkd = jnp.asarray(rng.integers(0, 20, (t, k)), jnp.int32)
+    z = jnp.asarray(rng.integers(0, k, (t,)), jnp.int32)
+    nk = jnp.asarray(np.asarray(nwk).sum(0) + 1, jnp.float32)
+    ak = jnp.asarray(rng.random(k) + 0.01, jnp.float32)
+    out = zen_sample(nwk, nkd, z, ak, nk, jnp.int32(7), beta=0.01,
+                     w_beta=5.0, bt=bt, bk=bk)
+    ref = zen_sample_ref(nwk, nkd, z, ak, nk, jnp.int32(7), beta=0.01,
+                         w_beta=5.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 80), st.integers(2, 200), st.integers(0, 2 ** 20))
+def test_zen_sampler_property_sweep(t, k, seed):
+    rng = np.random.default_rng(seed)
+    nwk = jnp.asarray(rng.integers(0, 9, (t, k)), jnp.int32)
+    nkd = jnp.asarray(rng.integers(0, 5, (t, k)), jnp.int32)
+    z = jnp.asarray(rng.integers(0, k, (t,)), jnp.int32)
+    nk = jnp.asarray(np.asarray(nwk).sum(0) + 1, jnp.float32)
+    ak = jnp.asarray(rng.random(k) + 0.01, jnp.float32)
+    out = zen_sample(nwk, nkd, z, ak, nk, jnp.int32(seed % 97), beta=0.05,
+                     w_beta=2.0, bt=8, bk=128)
+    ref = zen_sample_ref(nwk, nkd, z, ak, nk, jnp.int32(seed % 97),
+                         beta=0.05, w_beta=2.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_zen_sampler_distribution_chi_square(rng):
+    """The Gumbel-max draw follows the exact ¬dw conditional."""
+    k = 16
+    reps = 4000
+    nwk = jnp.asarray(np.tile(rng.integers(0, 20, (1, k)), (reps, 1)), jnp.int32)
+    nkd = jnp.asarray(np.tile(rng.integers(0, 8, (1, k)), (reps, 1)), jnp.int32)
+    z = jnp.full((reps,), 3, jnp.int32)
+    nk = jnp.asarray(np.asarray(nwk)[0] * 50 + 10, jnp.float32)
+    ak = jnp.asarray(rng.random(k) + 0.05, jnp.float32)
+    # different seed per batch -> independent draws of the same conditional
+    draws = []
+    for seed in range(6):
+        out = zen_sample(nwk, nkd, z, ak, nk, jnp.int32(seed), beta=0.01,
+                         w_beta=3.0, bt=8, bk=128)
+        draws.append(np.asarray(out))
+    emp = np.bincount(np.concatenate(draws), minlength=k) / (reps * 6)
+    p = np.asarray(
+        zen_probs_ref(nwk[:1], nkd[:1], z[:1], ak, nk, beta=0.01, w_beta=3.0)
+    )[0]
+    chi2 = ((emp - p) ** 2 / np.maximum(p, 1e-9)).sum() * reps * 6
+    assert chi2 < 3 * k, (chi2, emp, p)  # loose 3x dof bound
+
+
+def test_hash_uniform_statistics():
+    """The in-kernel counter hash is uniform enough: mean/var/KS checks."""
+    rows = jnp.arange(1 << 12, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(64, dtype=jnp.int32)[None, :]
+    u = np.asarray(hash_uniform(jnp.int32(123), rows, cols)).ravel()
+    assert 0.0 < u.min() and u.max() < 1.0
+    np.testing.assert_allclose(u.mean(), 0.5, atol=2e-3)
+    np.testing.assert_allclose(u.var(), 1.0 / 12, atol=2e-3)
+    # no obvious correlation between adjacent counters
+    c = np.corrcoef(u[:-1], u[1:])[0, 1]
+    assert abs(c) < 0.02
+
+
+@pytest.mark.parametrize(
+    "t,k,r",
+    [(256, 512, 40), (100, 48, 7), (1024, 256, 200), (8, 16, 1), (33, 9, 5)],
+)
+def test_topic_histogram_exact(t, k, r, rng):
+    rows = np.sort(rng.integers(0, r, t)).astype(np.int32)
+    zo = rng.integers(0, k, t).astype(np.int32)
+    zn = rng.integers(0, k, t).astype(np.int32)
+    inc = rng.integers(0, 2, t).astype(np.int32)
+    out = topic_histogram(
+        jnp.asarray(rows), jnp.asarray(zo), jnp.asarray(zn),
+        jnp.asarray(inc), r, k, bt=64, bk=128,
+    )
+    ref = topic_histogram_ref(
+        jnp.asarray(rows), jnp.asarray(zo), jnp.asarray(zn),
+        jnp.asarray(inc), r, k,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 120), st.integers(2, 60), st.integers(1, 30),
+       st.integers(0, 2 ** 20))
+def test_topic_histogram_property_sweep(t, k, r, seed):
+    rng = np.random.default_rng(seed)
+    rows = np.sort(rng.integers(0, r, t)).astype(np.int32)
+    zo = rng.integers(0, k, t).astype(np.int32)
+    zn = rng.integers(0, k, t).astype(np.int32)
+    inc = rng.integers(0, 2, t).astype(np.int32)
+    out = topic_histogram(
+        jnp.asarray(rows), jnp.asarray(zo), jnp.asarray(zn),
+        jnp.asarray(inc), r, k, bt=16, bk=128,
+    )
+    ref = topic_histogram_ref(
+        jnp.asarray(rows), jnp.asarray(zo), jnp.asarray(zn),
+        jnp.asarray(inc), r, k,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # row sums are zero: a move is (-1, +1) within the same row
+    np.testing.assert_array_equal(np.asarray(jnp.sum(out, 1)),
+                                  np.zeros(r, np.int32))

@@ -1,0 +1,67 @@
+"""Log-likelihood / perplexity metrics."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.init import random_init
+from repro.core.likelihood import joint_llh, perplexity, predictive_llh
+
+
+def test_predictive_llh_finite_and_negative(key, tiny_corpus, tiny_hyper):
+    state = random_init(key, tiny_corpus, tiny_hyper)
+    llh = float(predictive_llh(state, tiny_corpus, tiny_hyper))
+    assert np.isfinite(llh) and llh < 0
+
+
+def test_chunked_llh_matches(key, tiny_corpus, tiny_hyper):
+    state = random_init(key, tiny_corpus, tiny_hyper)
+    full = float(predictive_llh(state, tiny_corpus, tiny_hyper))
+    e = tiny_corpus.num_tokens
+    e4 = e - (e % 4)
+    import dataclasses
+
+    from repro.core.types import Corpus
+
+    c4 = Corpus(word=tiny_corpus.word[:e4], doc=tiny_corpus.doc[:e4],
+                num_words=tiny_corpus.num_words,
+                num_docs=tiny_corpus.num_docs)
+    s4 = dataclasses.replace(state, topic=state.topic[:e4],
+                             prev_topic=state.prev_topic[:e4],
+                             stale_iters=None, same_count=None)
+    a = float(predictive_llh(s4, c4, tiny_hyper))
+    b = float(predictive_llh(s4, c4, tiny_hyper, token_chunk=e4 // 4))
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_joint_llh_split(key, tiny_corpus, tiny_hyper):
+    """Fig. 7 metric: total == word part + doc part, all finite."""
+    state = random_init(key, tiny_corpus, tiny_hyper)
+    llh = joint_llh(state, tiny_corpus, tiny_hyper)
+    np.testing.assert_allclose(
+        float(llh.total), float(llh.word) + float(llh.doc), rtol=1e-6
+    )
+    assert np.isfinite(float(llh.word)) and np.isfinite(float(llh.doc))
+
+
+def test_perplexity_definition(key, tiny_corpus, tiny_hyper):
+    state = random_init(key, tiny_corpus, tiny_hyper)
+    llh = float(predictive_llh(state, tiny_corpus, tiny_hyper))
+    ppl = float(perplexity(state, tiny_corpus, tiny_hyper))
+    np.testing.assert_allclose(
+        ppl, np.exp(-llh / tiny_corpus.num_tokens), rtol=1e-5
+    )
+    # random assignment perplexity must be below vocab size, above 1
+    assert 1.0 < ppl <= tiny_corpus.num_words * 2
+
+
+def test_llh_improves_with_training(key, tiny_corpus, tiny_hyper):
+    from repro.core import LDATrainer, TrainConfig
+
+    tr = LDATrainer(tiny_corpus, tiny_hyper, TrainConfig(algorithm="zen"))
+    st = tr.init_state(key)
+    l0 = tr.llh(st)
+    j0 = tr.llh_split(st)
+    for _ in range(10):
+        st = tr.step(st)
+    assert tr.llh(st) > l0
+    j1 = tr.llh_split(st)
+    assert float(j1.total) > float(j0.total)

@@ -1,0 +1,69 @@
+"""Roofline tooling: HLO collective parser, shape-bytes math, terms."""
+import numpy as np
+
+from repro.launch.hloprof import bytes_by_op
+from repro.launch.roofline import (
+    _shape_bytes,
+    collective_bytes_from_text,
+    roofline_terms,
+)
+
+HLO = """
+HloModule jit_step
+
+fused_computation {
+  p0 = f32[8,128]{1,0} parameter(0)
+  ROOT m = f32[8,128]{1,0} multiply(p0, p0)
+}
+
+ENTRY main {
+  x = f32[8,128]{1,0} parameter(0)
+  ar = f32[8,128]{1,0} all-reduce(x), replica_groups={}, to_apply=add
+  ag = bf16[16,256]{1,0} all-gather(x), dimensions={0}
+  rs = (f32[4,128]{1,0}, f32[4,128]{1,0}) reduce-scatter(x, x), dimensions={0}
+  cp = f32[8,128]{1,0} collective-permute(x), source_target_pairs={{0,1}}
+  f = f32[8,128]{1,0} fusion(x), kind=kLoop, calls=fused_computation
+  d = f32[8,8]{1,0} dot(x, x), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  ROOT t = tuple(ar, ag, rs, cp, f, d)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]") == 8 * 128 * 4
+    assert _shape_bytes("bf16[16,256]") == 16 * 256 * 2
+    assert _shape_bytes("(f32[4,128], f32[4,128])") == 2 * 4 * 128 * 4
+    assert _shape_bytes("pred[3]") == 3
+    assert _shape_bytes("s32[]") == 4
+
+
+def test_collective_bytes_sums_all_collective_ops():
+    got = collective_bytes_from_text(HLO)
+    expect = (
+        8 * 128 * 4  # all-reduce
+        + 16 * 256 * 2  # all-gather
+        + 2 * 4 * 128 * 4  # reduce-scatter tuple
+        + 8 * 128 * 4  # collective-permute
+    )
+    assert got == expect, (got, expect)
+
+
+def test_bytes_by_op_buckets():
+    agg = bytes_by_op(HLO)
+    assert agg["all-reduce"] == 8 * 128 * 4
+    assert agg["dot"] == 8 * 8 * 4
+    assert "fusion" in agg
+
+
+def test_roofline_terms_and_bottleneck():
+    rec = {
+        "flops_per_device": 197e12,  # exactly 1 second of compute
+        "bytes_per_device": 819e9 * 2,  # 2 seconds of HBM
+        "collective_bytes_per_device": 50e9 * 0.5,
+    }
+    t = roofline_terms(rec)
+    np.testing.assert_allclose(t["compute_s"], 1.0)
+    np.testing.assert_allclose(t["memory_s"], 2.0)
+    np.testing.assert_allclose(t["collective_s"], 0.5)
+    assert t["bottleneck"] == "memory"
+    np.testing.assert_allclose(t["step_lower_bound_s"], 2.0)

@@ -1,0 +1,42 @@
+"""Dry-run cell spec construction: every (arch x shape) builds abstract
+inputs + shardings without error (regression guard for the launch layer)."""
+from helpers import run_with_devices
+
+
+def test_all_cells_build_specs():
+    run_with_devices("""
+import warnings; warnings.filterwarnings('ignore')
+import jax
+from repro.configs import SHAPES, get_config, list_archs, shapes_for
+from repro.configs.base import LDAArchConfig
+from repro.launch.specs import lda_cell_specs, lm_cell_specs
+
+mesh = jax.make_mesh((2, 2), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+built = 0
+for arch in list_archs():
+    cfg = get_config(arch)
+    if isinstance(cfg, LDAArchConfig):
+        kind, inputs, shardings, dims = lda_cell_specs(cfg, mesh)
+        assert kind == 'lda' and dims['e_cell'] > 0
+        # abstract state matches the sharding tree structure
+        assert jax.tree_util.tree_structure(inputs['state']) \
+            == jax.tree_util.tree_structure(shardings['state'])
+        built += 1
+        continue
+    for shape_name in shapes_for(cfg):
+        kind, inputs, shardings = lm_cell_specs(cfg, SHAPES[shape_name], mesh)
+        assert set(inputs) == set(shardings)
+        for k in inputs:
+            si = jax.tree_util.tree_structure(inputs[k])
+            ss = jax.tree_util.tree_structure(shardings[k])
+            assert si == ss, (arch, shape_name, k)
+        # no leaf is missing a sharding
+        n_in = len(jax.tree_util.tree_leaves(inputs))
+        n_sh = len(jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, 'spec')))
+        assert n_in == n_sh, (arch, shape_name)
+        built += 1
+print('built', built, 'cells')
+assert built == 35
+""", n_devices=4, timeout=900)
