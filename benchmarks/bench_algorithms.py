@@ -1,6 +1,9 @@
-"""Paper Figs. 3 + 4: ZenLDA vs LightLDA vs SparseLDA — time/iteration and
+"""Paper Figs. 3 + 4: every registered CGS backend — time/iteration and
 log-likelihood after equal iterations, all on the shared substrate
-("the only difference is the algorithm")."""
+("the only difference is the algorithm").
+
+The sweep list IS the registry: a newly registered backend shows up here
+with zero benchmark changes."""
 from __future__ import annotations
 
 import time
@@ -8,6 +11,7 @@ import time
 import jax
 
 from benchmarks.common import row
+from repro import algorithms
 from repro.core import LDATrainer, TrainConfig, LDAHyperParams
 from repro.data import synthetic_lda_corpus
 
@@ -18,7 +22,7 @@ def main(iters: int = 10):
     )
     hyper = LDAHyperParams(num_topics=32, alpha=0.05, beta=0.01)
     results = {}
-    for alg in ("zen", "zen_sparse", "zen_hybrid", "sparselda", "lightlda"):
+    for alg in algorithms.registered():
         tr = LDATrainer(
             corpus, hyper,
             TrainConfig(algorithm=alg, max_kw=64, max_kd=64, num_mh=8),

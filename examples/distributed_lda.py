@@ -17,13 +17,13 @@ from repro.core.distributed import (DistConfig, init_dist_state,
 from repro.core.graph import grid_partition
 from repro.core.types import LDAHyperParams
 from repro.data import synthetic_lda_corpus
+from repro.launch.mesh import make_mesh
 
 rows, cols = ROWS, COLS
 corpus, _ = synthetic_lda_corpus(0, num_docs=400, num_words=600,
                                  num_topics=16, avg_doc_len=60)
 hyper = LDAHyperParams(num_topics=16, alpha=0.05, beta=0.01)
-mesh = jax.make_mesh((rows, cols), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((rows, cols), ('data', 'model'))
 grid = grid_partition(corpus, rows, cols)
 print(f'devices={len(jax.devices())} mesh={rows}x{cols} '
       f'tokens={int(grid.mask.sum())} pad_overhead={grid.padding_overhead:.2%}')

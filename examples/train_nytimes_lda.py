@@ -50,7 +50,7 @@ def main():
             init="sparse_word", sparse_init_degree=0.2,
             exclusion=ExclusionConfig(enabled=True,
                                       start_iteration=excl_start),
-            token_chunk=None,
+            token_chunk=0,  # 0 = whole sweep (shared knob vocabulary)
         ),
     )
     mgr = CheckpointManager(args.ckpt, keep=2)

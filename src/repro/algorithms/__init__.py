@@ -1,0 +1,37 @@
+"""Pluggable CGS sampler backends behind one registry (DESIGN.md §4).
+
+The paper's generality claim — switching the CGS algorithm is "a few lines
+of code change" on a shared substrate — is this package's architecture:
+every algorithm (single-box, distributed, Pallas-fused) implements the
+``SamplerBackend`` contract and registers under a name; the trainer, the
+shard_map cell step, the launch CLIs, and the benchmarks all resolve through
+``algorithms.get(name)``.
+
+Adding an algorithm = one module with ``@register("name")``. Nothing else
+in the system changes.
+"""
+# NOTE: base + registry must be fully imported before the backend modules —
+# the backends pull in repro.core, whose __init__ imports the trainer, which
+# imports SamplerKnobs/get from this (then partially-initialized) package.
+from repro.algorithms.base import (  # noqa: F401
+    CellBackend,
+    SamplerBackend,
+    SamplerKnobs,
+    auto_pad,
+    resolve_row_pads,
+)
+from repro.algorithms.registry import (  # noqa: F401
+    describe,
+    get,
+    register,
+    registered,
+)
+
+# importing a backend module registers it (order = registered() order)
+from repro.algorithms import zen_dense  # noqa: F401,E402  zen, zen_dense, std
+from repro.algorithms import zen_sparse  # noqa: F401,E402
+from repro.algorithms import zen_hybrid  # noqa: F401,E402
+from repro.algorithms import sparselda  # noqa: F401,E402
+from repro.algorithms import lightlda  # noqa: F401,E402
+from repro.algorithms import zen_cdf  # noqa: F401,E402
+from repro.algorithms import zen_pallas  # noqa: F401,E402  + zen_dense_kernel

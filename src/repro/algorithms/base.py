@@ -1,0 +1,151 @@
+"""SamplerBackend protocol + the one shared knob dataclass (DESIGN.md §4).
+
+Every CGS sampling algorithm in the repo — single-box, distributed, and the
+fused Pallas kernel — implements the same contract over the shared
+counts/corpus substrate:
+
+* ``prepare(corpus, hyper, knobs) -> aux`` — optional per-run precompute
+  (e.g. LightLDA's CSR doc->token index). Called once by the driver; the
+  result is passed back into every ``sweep``.
+* ``sweep(state, corpus, hyper, knobs, aux) -> new_topics (E,)`` — one full
+  pass over all tokens against iteration-start (stale) counts. The driver
+  owns masking (token exclusion), the delta merge, and the state update, so
+  a backend is *only* the per-token draw.
+* ``cell_sweep(key, word, doc, z_old, mask, n_wk, n_kd, n_k, hyper,
+  num_words_pad, knobs) -> new_topics (T,)`` — the per-device form used
+  inside ``shard_map`` by the distributed runtime: all ids are local to the
+  device's (word-shard x doc-shard) cell and the count blocks are the local
+  shards. Only backends with ``supports_shard_map`` implement it.
+
+Capability flags let drivers adapt instead of hard-coding per-name logic:
+
+* ``supports_shard_map`` — has a ``cell_sweep`` the mesh path can call
+  (``make_dist_step`` rejects backends without it).
+* ``needs_row_pads``     — the trainer resolves ``max_kw``/``max_kd`` (>0)
+  before ``sweep`` (padded-sparse row widths; 0 = "auto from the counts").
+* ``needs_doc_index``    — declares the aux contract: ``prepare`` returns a
+  doc->token index that ``sweep`` requires (drivers call ``prepare``
+  unconditionally; the flag tells them the aux is a corpus-sized structure
+  worth budgeting for, not a behavior switch).
+
+``CellBackend`` derives the single-box ``sweep`` from ``cell_sweep`` by
+treating the whole corpus as one cell — this is what makes the distributed
+algorithms (``zen_cdf``, ``zen_dense``, ``zen_pallas``) selectable from the
+single-box trainer with zero extra code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerKnobs:
+    """Algorithm knobs shared by every backend and both drivers.
+
+    This unifies what used to be divergent fields on ``TrainConfig``
+    (``token_chunk: Optional[int]``) and ``DistConfig``
+    (``token_chunk: int = 0``): 0 always means "disabled / auto".
+    """
+
+    sampling_method: str = "cdf"  # dense paths: cdf | gumbel
+    max_kw: int = 0  # padded-sparse word-row width (0 = auto)
+    max_kd: int = 0  # padded-sparse doc-row width (0 = auto)
+    num_mh: int = 8  # LightLDA cycle-MH steps
+    token_chunk: int = 0  # bound peak memory by chunking tokens (0 = off)
+    bt: int = 256  # Pallas token-tile (zen_pallas)
+    bk: int = 512  # Pallas topic-tile (zen_pallas)
+
+    def chunk_or_none(self) -> Optional[int]:
+        return self.token_chunk or None
+
+
+class SamplerBackend:
+    """Base class: capability flags + the sweep contract."""
+
+    name: str = "?"
+    supports_shard_map: bool = False
+    needs_doc_index: bool = False
+    needs_row_pads: bool = False
+
+    def prepare(self, corpus, hyper, knobs: SamplerKnobs) -> Any:
+        """Per-run precompute; returns the aux object threaded into sweep."""
+        return None
+
+    def sweep(
+        self, state, corpus, hyper, knobs: SamplerKnobs, aux: Any = None
+    ) -> jax.Array:
+        raise NotImplementedError(
+            f"backend {self.name!r} has no single-box sweep"
+        )
+
+    def cell_sweep(
+        self, key, word, doc, z_old, mask, n_wk, n_kd, n_k, hyper,
+        num_words_pad: int, knobs: SamplerKnobs,
+    ) -> jax.Array:
+        raise NotImplementedError(
+            f"backend {self.name!r} does not support shard_map cells"
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        flags = [
+            f for f in ("supports_shard_map", "needs_doc_index",
+                        "needs_row_pads")
+            if getattr(self, f)
+        ]
+        return f"<{type(self).__name__} {self.name!r} {' '.join(flags)}>"
+
+
+class CellBackend(SamplerBackend):
+    """Single-box sweep derived from the per-device cell sweep: the whole
+    corpus is one cell, every id is already local, every token is live."""
+
+    supports_shard_map = True
+
+    def sweep(self, state, corpus, hyper, knobs, aux=None):
+        key = jax.random.fold_in(state.rng, state.iteration)
+        mask = jnp.ones(corpus.word.shape, bool)
+        return self.cell_sweep(
+            key, corpus.word, corpus.doc, state.topic, mask,
+            state.n_wk, state.n_kd, state.n_k, hyper, corpus.num_words,
+            knobs,
+        )
+
+
+def chunked_token_map(chunk_fn, key, arrays, token_chunk: int) -> jax.Array:
+    """Apply ``chunk_fn((arr0, arr1, ..., subkey)) -> (chunk,)`` over token
+    chunks (bounds peak memory; 0/oversized chunk = one whole-sweep call).
+
+    Every ``(E,)`` array in ``arrays`` is reshaped to ``(n, token_chunk)``;
+    E must divide evenly."""
+    e = arrays[0].shape[0]
+    if not token_chunk or token_chunk >= e:
+        return chunk_fn(tuple(arrays) + (key,))
+    assert e % token_chunk == 0, (e, token_chunk)
+    n = e // token_chunk
+    keys = jax.random.split(key, n)
+    out = jax.lax.map(
+        chunk_fn, tuple(a.reshape(n, -1) for a in arrays) + (keys,)
+    )
+    return out.reshape(e)
+
+
+def auto_pad(n: jax.Array, multiple: int = 8) -> int:
+    """Round a (traced-free) max-nnz up to a lane-friendly multiple."""
+    m = int(jax.device_get(n))
+    return max(multiple, ((m + multiple - 1) // multiple) * multiple)
+
+
+def resolve_row_pads(state, knobs: SamplerKnobs) -> SamplerKnobs:
+    """Fill max_kw/max_kd = 0 from the current counts (host-side; not for
+    use inside jit/shard_map — distributed configs set the widths)."""
+    if knobs.max_kw and knobs.max_kd:
+        return knobs
+    from repro.core.zen_sparse import max_row_nnz
+
+    max_kw = knobs.max_kw or auto_pad(max_row_nnz(state.n_wk))
+    max_kd = knobs.max_kd or auto_pad(max_row_nnz(state.n_kd))
+    return dataclasses.replace(knobs, max_kw=max_kw, max_kd=max_kd)

@@ -1,0 +1,25 @@
+"""``lightlda`` — LightLDA (Yuan et al.) cycle Metropolis-Hastings on the
+shared substrate (paper §7.2). ``prepare`` builds the CSR doc->token index
+that realizes the O(1) doc proposal."""
+from __future__ import annotations
+
+from repro.algorithms.base import SamplerBackend, SamplerKnobs
+from repro.algorithms.registry import register
+from repro.core.baselines import build_doc_index, lightlda_sweep
+
+
+@register("lightlda")
+class LightLDA(SamplerBackend):
+    """Alternating word/doc proposals, ``num_mh`` MH steps per token."""
+
+    needs_doc_index = True
+    needs_row_pads = True
+
+    def prepare(self, corpus, hyper, knobs: SamplerKnobs):
+        return build_doc_index(corpus)
+
+    def sweep(self, state, corpus, hyper, knobs: SamplerKnobs, aux=None):
+        assert aux is not None, "lightlda needs prepare()'s doc index"
+        return lightlda_sweep(
+            state, corpus, hyper, aux, knobs.max_kw, num_mh=knobs.num_mh
+        )

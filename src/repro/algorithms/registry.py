@@ -1,0 +1,65 @@
+"""The sampler-backend registry (DESIGN.md §4).
+
+Adding a CGS algorithm to the whole system — trainer, distributed mesh,
+launch CLIs, benchmarks — is one module that subclasses ``SamplerBackend``
+and decorates it with ``@register("name")``. Every driver resolves names
+through ``get()``, so there is exactly one dispatch point.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple, Type
+
+from repro.algorithms.base import SamplerBackend
+
+# name -> backend instance. Aliases map to the *same* instance, so
+# get("zen_pallas") is get("zen_dense_kernel") — one registry entry.
+_REGISTRY: Dict[str, SamplerBackend] = {}
+_PRIMARY: List[str] = []  # registration order, aliases excluded
+
+
+def register(name: str, *aliases: str):
+    """Class decorator: instantiate the backend and register it under
+    ``name`` (listed by ``registered()``) plus any legacy aliases."""
+
+    def deco(cls: Type[SamplerBackend]) -> Type[SamplerBackend]:
+        # validate every name before inserting any, so a collision can't
+        # leave the registry half-populated
+        for n in (name,) + aliases:
+            if n in _REGISTRY:
+                raise ValueError(f"sampler backend {n!r} already registered")
+        instance = cls()
+        instance.name = name
+        for n in (name,) + aliases:
+            _REGISTRY[n] = instance
+        _PRIMARY.append(name)
+        return cls
+
+    return deco
+
+
+def get(name: str) -> SamplerBackend:
+    """Resolve an algorithm name; unknown names raise with the full list."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sampler backend {name!r}; registered backends: "
+            f"{', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+def registered() -> Tuple[str, ...]:
+    """Primary backend names in registration order (aliases excluded)."""
+    return tuple(_PRIMARY)
+
+
+def describe() -> List[Tuple[str, SamplerBackend, Tuple[str, ...]]]:
+    """(primary name, backend, aliases) for every entry — CLI listings."""
+    out = []
+    for name in _PRIMARY:
+        b = _REGISTRY[name]
+        aliases = tuple(
+            n for n, inst in _REGISTRY.items() if inst is b and n != name
+        )
+        out.append((name, b, aliases))
+    return out

@@ -1,0 +1,19 @@
+"""``sparselda`` — SparseLDA (Yao et al.) on the shared substrate (paper
+§7.2): s/r/q three-bucket decomposition with linear search, fresh counts."""
+from __future__ import annotations
+
+from repro.algorithms.base import SamplerBackend, SamplerKnobs
+from repro.algorithms.registry import register
+from repro.core.baselines import sparselda_sweep
+
+
+@register("sparselda")
+class SparseLDA(SamplerBackend):
+    """s/r/q bucket sampler; work/token tracks O(K_d + K_w)."""
+
+    needs_row_pads = True
+
+    def sweep(self, state, corpus, hyper, knobs: SamplerKnobs, aux=None):
+        return sparselda_sweep(
+            state, corpus, hyper, knobs.max_kw, knobs.max_kd
+        )

@@ -1,0 +1,29 @@
+"""``zen_hybrid`` — ZenLDAHybrid (paper §3.1): per-token pick the
+decomposition whose fresh term ranges over the sparser row.
+
+Realized as two-group dispatch over the *registry's own* ``zen_sparse``
+(fresh term over K_d) and ``sparselda`` (fresh term over K_w) backends, so
+measured work tracks min(K_d, K_w) and the hybrid automatically follows any
+improvement to either constituent backend.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.algorithms.base import SamplerBackend, SamplerKnobs
+from repro.algorithms.registry import get, register
+
+
+@register("zen_hybrid")
+class ZenHybrid(SamplerBackend):
+    """Route each token to the sparser of the two decompositions."""
+
+    needs_row_pads = True
+
+    def sweep(self, state, corpus, hyper, knobs: SamplerKnobs, aux=None):
+        kd_nnz = jnp.sum(state.n_kd > 0, axis=-1)[corpus.doc]
+        kw_nnz = jnp.sum(state.n_wk > 0, axis=-1)[corpus.word]
+        use_zen = kd_nnz <= kw_nnz
+        z_zen = get("zen_sparse").sweep(state, corpus, hyper, knobs)
+        z_alt = get("sparselda").sweep(state, corpus, hyper, knobs)
+        return jnp.where(use_zen, z_zen, z_alt)

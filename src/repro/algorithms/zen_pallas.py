@@ -1,0 +1,52 @@
+"""``zen_pallas`` — the fused Gumbel-max Pallas kernel as a first-class
+backend (headline hot path; ``zen_dense_kernel`` kept as the legacy alias).
+
+One fused VMEM pass streams K-tiles of the three-term conditional and keeps
+only a running (max, argmax) carry per token: no normalization, no
+materialized (T, K) probability matrix in HBM, no second pass (see
+``kernels/zen_sampler.py`` and DESIGN.md §2). On CPU the same kernel runs
+in interpret mode, bit-identical to the ``kernels/ref.py`` oracle, so the
+backend is selectable everywhere: kernel on TPU, interpreted ref on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms.base import CellBackend, SamplerKnobs, chunked_token_map
+from repro.algorithms.registry import register
+
+
+@register("zen_pallas", "zen_dense_kernel")
+class ZenPallas(CellBackend):
+    """Fused three-term Gumbel-max sampler (Pallas TPU kernel)."""
+
+    def cell_sweep(
+        self, key, word, doc, z_old, mask, n_wk, n_kd, n_k, hyper,
+        num_words_pad, knobs: SamplerKnobs,
+    ):
+        # lazy: keep pallas out of the import path of everything that
+        # never selects this backend
+        from repro.kernels.ops import zen_sample
+
+        alpha_k = hyper.alpha_k(n_k)
+        n_k_f = n_k.astype(jnp.float32)
+        w_beta = num_words_pad * hyper.beta
+
+        def chunk(args):
+            w, d, z, subkey = args
+            seed = jax.random.randint(
+                subkey, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+            )
+            # int32 casts: the kernel tiles assume 4-byte count rows (the
+            # distributed path may hold N_kd in int16)
+            return zen_sample(
+                n_wk[w].astype(jnp.int32), n_kd[d].astype(jnp.int32), z,
+                alpha_k, n_k_f, seed,
+                beta=hyper.beta, w_beta=w_beta, bt=knobs.bt, bk=knobs.bk,
+            )
+
+        # chunking bounds the gathered (chunk, K) row tiles in HBM
+        return chunked_token_map(
+            chunk, key, (word, doc, z_old), knobs.token_chunk
+        )

@@ -1,0 +1,20 @@
+"""``zen_sparse`` — the faithful padded-sparse ZenLDA sampler (paper Alg. 2)
+behind the backend interface. The heavy lifting stays in
+``core.zen_sparse``; this wrapper only adapts the contract."""
+from __future__ import annotations
+
+from repro.algorithms.base import SamplerBackend, SamplerKnobs
+from repro.algorithms.registry import register
+from repro.core.zen_sparse import zen_sparse_sweep
+
+
+@register("zen_sparse")
+class ZenSparse(SamplerBackend):
+    """Alias tables + padded-sparse rows; work/token tracks O(K_d)."""
+
+    needs_row_pads = True
+
+    def sweep(self, state, corpus, hyper, knobs: SamplerKnobs, aux=None):
+        return zen_sparse_sweep(
+            state, corpus, hyper, knobs.max_kw, knobs.max_kd
+        )

@@ -12,6 +12,11 @@ Layers:
   hyper/compactvector     topic dedup, CompactVector (Alg. 4)
   graph/distributed       partitioning (DBH+) + multi-device iteration
   trainer                 single-box driver
+
+Algorithm dispatch lives one level up in ``repro.algorithms``: every CGS
+sampler (including the fused Pallas kernel) is a registered
+``SamplerBackend``; both the trainer and the distributed cell step resolve
+names through ``algorithms.get(name)`` (DESIGN.md §4).
 """
 from repro.core.types import CGSState, Corpus, LDAHyperParams  # noqa: F401
 from repro.core.trainer import LDATrainer, TrainConfig  # noqa: F401

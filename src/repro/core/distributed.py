@@ -16,20 +16,16 @@ One iteration, under ``shard_map`` on a ``(pod?, data, model)`` mesh:
   step 5  ΔN_k aggregated from the word side only (as the paper does —
           docs outnumber words 100+x)
 
-Sampling algorithms:
-  * ``zen_dense`` — dense (T, K) three-term probabilities + Gumbel-max/CDF.
-    Exact ¬dw self-exclusion. Simple; memory-bound at large K (the gathered
-    rows dominate HBM traffic). This is the hillclimb baseline.
-  * ``zen_cdf``   — the TPU-native faithful path: per-iteration precomputed
-    CDFs replace alias tables (log K binary-search gathers beat alias-table
-    random gathers on TPU), the fresh dSparse term runs over top-``max_kd``
-    sparse doc rows (O(K_d) gathers per token, the paper's complexity), and
-    staleness in gDense/wSparse is remedied by the paper's resampling trick.
+Sampling algorithms are resolved through the ``repro.algorithms`` registry
+(DESIGN.md §4): any backend with ``supports_shard_map`` plugs into step 3 —
+``zen_dense`` (dense Gumbel-max/CDF hillclimb baseline), ``zen_cdf`` (the
+TPU-native faithful path: precomputed CDFs + sparse doc rows + resampling
+remedy), and ``zen_pallas`` (the fused Gumbel-max Pallas kernel; interpret
+mode on CPU). The single-box trainer resolves the *same* entries.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -37,24 +33,40 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.decompositions import precompute_zen_terms
+from repro import algorithms
+from repro.algorithms import SamplerKnobs
 from repro.core.graph import GridPartition
 from repro.core.types import LDAHyperParams
+from repro.utils import compat
 
 
 @dataclasses.dataclass(frozen=True)
 class DistConfig:
-    algorithm: str = "zen_cdf"  # zen_cdf | zen_dense
+    algorithm: str = "zen_cdf"  # any registered backend w/ supports_shard_map
     sampling_method: str = "gumbel"  # zen_dense: gumbel | cdf
     max_kd: int = 64  # zen_cdf sparse doc-row width
     delta_dtype: str = "int32"  # int32 | int16 | int8 (psum payload width)
     rebuild_every: int = 0  # exact count rebuild period (0 = never)
     exclusion_start: int = 0  # 0 = disabled; else iteration to enable at
-    token_chunk: int = 0  # 0 = whole cell at once (zen_dense memory knob)
+    # 0 = whole cell at once (zen_dense / zen_pallas memory knob); nonzero
+    # values must divide the padded per-cell token count
+    token_chunk: int = 0
     # doc-topic state width: counts are bounded by doc length, so int16
     # halves every N_kd pass (top-k extraction, delta apply, llh reads) —
     # §Perf iteration l4. Requires max doc length < 32768.
     kd_dtype: str = "int32"  # int32 | int16
+    bt: int = 256  # zen_pallas token tile
+    bk: int = 512  # zen_pallas topic tile
+
+    def knobs(self) -> SamplerKnobs:
+        """The shared backend knob dataclass (same one TrainConfig builds)."""
+        return SamplerKnobs(
+            sampling_method=self.sampling_method,
+            max_kd=self.max_kd,
+            token_chunk=self.token_chunk,
+            bt=self.bt,
+            bk=self.bk,
+        )
 
 
 class DistLDAState(NamedTuple):
@@ -120,163 +132,6 @@ def _specs(mesh: Mesh) -> Tuple[DistLDAState, DistLDAData]:
 
 
 # ---------------------------------------------------------------------------
-# Local (per-device) sampling
-# ---------------------------------------------------------------------------
-
-def _searchsorted_rows(cdf: jax.Array, targets: jax.Array) -> jax.Array:
-    """Row-wise binary search: cdf (T, N) ascending, targets (T,) -> (T,).
-
-    Dense compare+sum — fine for narrow rows (the max_kd-wide doc CDFs);
-    wide shared/per-row K-sized CDFs must use ``_bsearch_gather`` instead
-    (the dense form materializes (T, K) — §Perf iteration l1)."""
-    return jnp.minimum(
-        jnp.sum(cdf < targets[:, None], axis=-1), cdf.shape[-1] - 1
-    ).astype(jnp.int32)
-
-
-def _bsearch_gather(
-    mat: jax.Array,  # (R, K) row-wise ascending CDFs
-    rows: jax.Array,  # (T,) row id per query
-    targets: jax.Array,  # (T,)
-) -> jax.Array:
-    """True O(log K) lower-bound per query: one scalar gather per halving
-    step, never materializing (T, K). This is the TPU rendering of the
-    paper's BSearch samplers (Table 1)."""
-    k = mat.shape[1]
-    pos = jnp.zeros(rows.shape, jnp.int32)
-    step = 1 << (k - 1).bit_length()
-    while step > 0:
-        cand = pos + step
-        safe = jnp.minimum(cand - 1, k - 1)
-        vals = mat[rows, safe]
-        take = (cand <= k) & (vals < targets)
-        pos = jnp.where(take, cand, pos)
-        step //= 2
-    return jnp.minimum(pos, k - 1)
-
-
-def _bsearch_shared(cdf: jax.Array, targets: jax.Array) -> jax.Array:
-    """Lower-bound of each target in one shared ascending CDF (K,)."""
-    return jnp.minimum(
-        jnp.searchsorted(cdf, targets).astype(jnp.int32), cdf.shape[0] - 1
-    )
-
-
-def _zen_dense_local(
-    key, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k, hyper, num_words_pad,
-    method: str, token_chunk: int,
-):
-    """Dense per-token (T, K) three-term probabilities; exact ¬dw."""
-    k = hyper.num_topics
-
-    def chunk(args):
-        w, d, z, subkey = args
-        onehot = jax.nn.one_hot(z, k, dtype=jnp.int32)
-        nw = (n_wk_l[w] - onehot).astype(jnp.float32)
-        nd = (n_kd_l[d] - onehot).astype(jnp.float32)
-        nk = (n_k[None, :] - onehot).astype(jnp.float32)
-        alpha_k = hyper.alpha_k(n_k)[None, :]
-        w_beta = num_words_pad * hyper.beta
-        t1 = 1.0 / (nk + w_beta)
-        p = (alpha_k * hyper.beta + nw * alpha_k + nd * (nw + hyper.beta)) * t1
-        if method == "gumbel":
-            g = jax.random.gumbel(subkey, p.shape, dtype=jnp.float32)
-            return jnp.argmax(jnp.log(jnp.maximum(p, 1e-30)) + g, -1).astype(jnp.int32)
-        cdf = jnp.cumsum(p, axis=-1)
-        u = jax.random.uniform(subkey, (p.shape[0], 1)) * cdf[:, -1:]
-        return _searchsorted_rows(cdf, u[:, 0])
-
-    e = word_l.shape[0]
-    if not token_chunk or token_chunk >= e:
-        return chunk((word_l, doc_l, z_old, key))
-    assert e % token_chunk == 0
-    n = e // token_chunk
-    keys = jax.random.split(key, n)
-    out = jax.lax.map(
-        chunk,
-        (word_l.reshape(n, -1), doc_l.reshape(n, -1), z_old.reshape(n, -1), keys),
-    )
-    return out.reshape(e)
-
-
-def _zen_cdf_local(
-    key, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k, hyper,
-    num_words_pad: int, max_kd: int,
-):
-    """TPU-native faithful ZenLDA: precomputed CDFs + sparse doc rows.
-
-    Work per token: O(log K) (terms 1-2) + O(max_kd) (term 3); per-iteration
-    precompute: two passes over the local N_w|k block.
-    """
-    k = hyper.num_topics
-    terms = precompute_zen_terms(n_k, hyper, num_words_pad)
-
-    # --- per-iteration precompute (the "build tables" stage, Alg. 2 l.5-13)
-    g_cdf = jnp.cumsum(terms.g_dense)  # (K,)
-    m1 = g_cdf[-1]
-    w_vals = n_wk_l.astype(jnp.float32) * terms.t4[None, :]  # (Ws, K)
-    w_cdf = jnp.cumsum(w_vals, axis=-1)
-    m2_all = w_cdf[:, -1]  # (Ws,)
-    # sparse doc rows: top-max_kd topics by count. approx_max_k lowers to
-    # the TPU PartialReduce unit (one pass over the block); exact top_k
-    # lowers to a full row sort (§Perf iteration l2)
-    kd_cnt, kd_idx = jax.lax.approx_max_k(
-        n_kd_l.astype(jnp.float32), min(max_kd, k), recall_target=0.95
-    )
-    kd_cnt = kd_cnt.astype(jnp.int32)
-
-    # --- per-token terms
-    rows_idx = kd_idx[doc_l]  # (T, max_kd)
-    rows_cnt = kd_cnt[doc_l]
-    nwk_at = n_wk_l[word_l[:, None], rows_idx]  # (T, max_kd) gathers
-    d_vals = (
-        rows_cnt.astype(jnp.float32)
-        * (nwk_at.astype(jnp.float32) + hyper.beta)
-        * terms.t1[rows_idx]
-    )
-    d_vals = jnp.where(rows_cnt > 0, d_vals, 0.0)
-    d_cdf = jnp.cumsum(d_vals, axis=-1)
-    m3 = d_cdf[:, -1]
-    m2 = m2_all[word_l]
-
-    def draw(key):
-        ku, kr = jax.random.split(key)
-        u = jax.random.uniform(ku, word_l.shape) * (m1 + m2 + m3)
-        # term 1: shared global CDF (replaces gTable) — O(log K)
-        z_g = _bsearch_shared(g_cdf, u)
-        # term 2: per-word CDF row (replaces wTable) — O(log K) scalar
-        # gathers per token; the dense form gathered (T, K) rows (31 GB at
-        # webchunk scale — §Perf iteration l1)
-        t2_target = jnp.maximum(u - m1, 0.0)
-        z_w = _bsearch_gather(w_cdf, word_l, t2_target)
-        # term 3: doc sparse row CDF (paper's dSparse + BSearch) — rows are
-        # only max_kd wide, dense compare is the cheaper form here
-        t3_target = jnp.maximum(u - m1 - m2, 0.0)
-        pos = _searchsorted_rows(d_cdf, t3_target)
-        z_d = jnp.take_along_axis(rows_idx, pos[:, None], -1)[:, 0]
-        branch = jnp.where(u < m1, 0, jnp.where(u < m1 + m2, 1, 2))
-        z = jnp.where(branch == 0, z_g, jnp.where(branch == 1, z_w, z_d))
-        return jnp.minimum(z, k - 1).astype(jnp.int32), branch
-
-    key_a, key_b, key_r = jax.random.split(key, 3)
-    z1, branch = draw(key_a)
-    z2, _ = draw(key_b)
-
-    # resampling remedy (§3.1) for the staleness of terms 2 and 3
-    nw_prev = jnp.maximum(
-        n_wk_l[word_l, z_old].astype(jnp.float32), 1.0
-    )
-    nd_prev = jnp.maximum(
-        n_kd_l[doc_l, z_old].astype(jnp.float32), 1.0
-    )
-    p_w = 1.0 / nw_prev
-    p_d = jnp.clip(1.0 / nd_prev + (nd_prev + nw_prev - 1.0) / (nd_prev * nw_prev), 0.0, 1.0)
-    remedy_p = jnp.where(branch == 1, p_w, jnp.where(branch == 2, p_d, 0.0))
-    u_r = jax.random.uniform(key_r, z1.shape)
-    return jnp.where((z1 == z_old) & (u_r < remedy_p), z2, z1)
-
-
-# ---------------------------------------------------------------------------
 # The distributed step
 # ---------------------------------------------------------------------------
 
@@ -307,6 +162,14 @@ def make_dist_step(
     num_words_pad = words_per_shard * mesh.shape[model]
     state_spec, data_spec = _specs(mesh)
     k = hyper.num_topics
+    backend = algorithms.get(cfg.algorithm)
+    if not backend.supports_shard_map:
+        raise ValueError(
+            f"backend {cfg.algorithm!r} does not support shard_map cells; "
+            f"mesh-capable backends: "
+            f"{', '.join(n for n in algorithms.registered() if algorithms.get(n).supports_shard_map)}"
+        )
+    knobs = cfg.knobs()
 
     def local_step(state: DistLDAState, data: DistLDAData) -> DistLDAState:
         # local views --------------------------------------------------
@@ -344,31 +207,12 @@ def make_dist_step(
             active = jnp.ones_like(mask)
         active = active & mask
 
-        # step 3: sample on stale counts --------------------------------
-        if cfg.algorithm == "zen_dense":
-            z_prop = _zen_dense_local(
-                k_sample, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k,
-                hyper, num_words_pad, cfg.sampling_method, cfg.token_chunk,
-            )
-        elif cfg.algorithm == "zen_dense_kernel":
-            # fused Pallas sampler (interpret-mode on CPU, Mosaic on TPU)
-            from repro.kernels.ops import zen_sample
-
-            seed = jax.random.randint(
-                k_sample, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
-            )
-            z_prop = zen_sample(
-                n_wk_l[word_l], n_kd_l[doc_l], z_old,
-                hyper.alpha_k(n_k), n_k.astype(jnp.float32), seed,
-                beta=hyper.beta, w_beta=num_words_pad * hyper.beta,
-            )
-        elif cfg.algorithm == "zen_cdf":
-            z_prop = _zen_cdf_local(
-                k_sample, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k,
-                hyper, num_words_pad, cfg.max_kd,
-            )
-        else:
-            raise ValueError(cfg.algorithm)
+        # step 3: sample on stale counts — one registry-resolved call
+        # (zen_dense / zen_cdf / zen_pallas / any future cell backend)
+        z_prop = backend.cell_sweep(
+            k_sample, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k,
+            hyper, num_words_pad, knobs,
+        )
         z_new = jnp.where(active, z_prop, z_old)
 
         # step 4: delta aggregation (§5.2) -------------------------------
@@ -416,9 +260,8 @@ def make_dist_step(
             rng=state.rng,
         )
 
-    step = jax.shard_map(
-        local_step, mesh=mesh, in_specs=(state_spec, data_spec),
-        out_specs=state_spec, check_vma=False,
+    step = compat.shard_map(
+        local_step, mesh, (state_spec, data_spec), state_spec,
     )
     return jax.jit(step, donate_argnums=(0,))
 
@@ -453,9 +296,8 @@ def make_rebuild_counts(
         n_k = jax.lax.psum(jnp.sum(n_wk, axis=0), model)
         return state._replace(n_wk=n_wk, n_kd=n_kd, n_k=n_k)
 
-    fn = jax.shard_map(
-        local, mesh=mesh, in_specs=(state_spec, data_spec),
-        out_specs=state_spec, check_vma=False,
+    fn = compat.shard_map(
+        local, mesh, (state_spec, data_spec), state_spec,
     )
     return jax.jit(fn, donate_argnums=(0,))
 
@@ -493,9 +335,8 @@ def make_dist_llh(
         local_sum = jnp.sum(jnp.where(mask, token_llh, 0.0))
         return jax.lax.psum(local_sum, all_axes)
 
-    fn = jax.shard_map(
-        local, mesh=mesh, in_specs=(state_spec, data_spec), out_specs=P(),
-        check_vma=False,
+    fn = compat.shard_map(
+        local, mesh, (state_spec, data_spec), P(),
     )
     return jax.jit(fn)
 

@@ -75,7 +75,6 @@ def conditional_probs(
     n_wk_rows, n_kd_rows = _gather_rows(state, corpus.word, corpus.doc)
     n_k = state.n_k
     if exclude_self:
-        e = corpus.word.shape[0]
         onehot = jax.nn.one_hot(state.topic, hyper.num_topics, dtype=jnp.int32)
         n_wk_rows = n_wk_rows - onehot
         n_kd_rows = n_kd_rows - onehot

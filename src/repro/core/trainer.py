@@ -1,10 +1,13 @@
-"""Single-box LDA trainer: algorithm selection + the optimization toggles.
+"""Single-box LDA trainer: registry-resolved algorithm + optimization
+toggles.
 
-This is the "driver program" layer (paper §2.3): pick a sampling algorithm
-(zen / zen_sparse / zen_hybrid / sparselda / lightlda / std), pick the
+This is the "driver program" layer (paper §2.3): resolve a sampling backend
+by name through ``repro.algorithms`` (``algorithms.registered()`` lists
+them — zen / zen_sparse / zen_hybrid / sparselda / lightlda / std plus the
+distributed-native zen_cdf and the fused-kernel zen_pallas), pick the
 initialization, toggle token exclusion / delta aggregation, and iterate.
-The distributed path (``repro.core.distributed``) reuses the same sweep
-functions under ``shard_map``.
+The distributed path (``repro.core.distributed``) resolves the *same*
+registry entries for its ``shard_map`` cell step.
 """
 from __future__ import annotations
 
@@ -14,20 +17,18 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import algorithms
+from repro.algorithms import SamplerKnobs
 from repro.core import counts as counts_lib
 from repro.core import init as init_lib
-from repro.core.baselines import build_doc_index, lightlda_sweep, sparselda_sweep
 from repro.core.exclusion import ExclusionConfig, active_mask, update_exclusion_stats
 from repro.core.likelihood import joint_llh, perplexity, predictive_llh
-from repro.core.sampler import cgs_sweep_stale
 from repro.core.types import CGSState, Corpus, LDAHyperParams
-from repro.core.zen_sparse import zen_sparse_sweep
 
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
-    algorithm: str = "zen"  # zen | zen_sparse | zen_hybrid | sparselda |
-    #                         lightlda | std
+    algorithm: str = "zen"  # any algorithms.registered() name
     init: str = "random"  # random | sparse_word | sparse_doc
     sparse_init_degree: float = 0.1
     sampling_method: str = "cdf"  # cdf | gumbel  (dense paths)
@@ -35,12 +36,21 @@ class TrainConfig:
     max_kw: int = 0  # 0 -> auto from data (padded-sparse paths)
     max_kd: int = 0
     num_mh: int = 8  # LightLDA MH steps (paper uses 8)
-    token_chunk: Optional[int] = None
+    token_chunk: int = 0  # 0 = whole sweep at once (memory knob)
+    bt: int = 256  # zen_pallas token tile
+    bk: int = 512  # zen_pallas topic tile
 
-
-def _auto_pad(n: jax.Array, multiple: int = 8) -> int:
-    m = int(jax.device_get(n))
-    return max(multiple, ((m + multiple - 1) // multiple) * multiple)
+    def knobs(self) -> SamplerKnobs:
+        """The shared backend knob dataclass (same one DistConfig builds)."""
+        return SamplerKnobs(
+            sampling_method=self.sampling_method,
+            max_kw=self.max_kw,
+            max_kd=self.max_kd,
+            num_mh=self.num_mh,
+            token_chunk=self.token_chunk or 0,  # tolerate legacy None
+            bt=self.bt,
+            bk=self.bk,
+        )
 
 
 class LDATrainer:
@@ -48,9 +58,9 @@ class LDATrainer:
         self.corpus = corpus
         self.hyper = hyper
         self.cfg = cfg
-        self._doc_index = None
-        if cfg.algorithm == "lightlda":
-            self._doc_index = build_doc_index(corpus)
+        self.backend = algorithms.get(cfg.algorithm)
+        self._knobs = cfg.knobs()
+        self._aux = self.backend.prepare(corpus, hyper, self._knobs)
 
     # -- initialization ----------------------------------------------------
     def init_state(self, rng: jax.Array) -> CGSState:
@@ -64,52 +74,14 @@ class LDATrainer:
         raise ValueError(self.cfg.init)
 
     # -- one iteration -----------------------------------------------------
-    def _pads(self, state: CGSState):
-        from repro.core.zen_sparse import max_row_nnz
-
-        max_kw = self.cfg.max_kw or _auto_pad(max_row_nnz(state.n_wk))
-        max_kd = self.cfg.max_kd or _auto_pad(max_row_nnz(state.n_kd))
-        return max_kw, max_kd
-
     def sweep(self, state: CGSState) -> jax.Array:
-        c, h, cfg = self.corpus, self.hyper, self.cfg
-        alg = cfg.algorithm
-        if alg in ("zen", "std"):
-            return cgs_sweep_stale(
-                state, c, h, method=cfg.sampling_method,
-                decomposition=alg, token_chunk=cfg.token_chunk,
-            )
-        if alg == "zen_sparse":
-            max_kw, max_kd = self._pads(state)
-            return zen_sparse_sweep(state, c, h, max_kw, max_kd)
-        if alg == "zen_hybrid":
-            # Hybrid = zen_sparse with the roles of word/doc rows swapped for
-            # tokens whose word row is sparser than their doc row. Realized
-            # as two-group dispatch so measured work tracks min(K_d, K_w).
-            return self._hybrid_sweep(state)
-        if alg == "sparselda":
-            max_kw, max_kd = self._pads(state)
-            return sparselda_sweep(state, c, h, max_kw, max_kd)
-        if alg == "lightlda":
-            max_kw, _ = self._pads(state)
-            return lightlda_sweep(
-                state, c, h, self._doc_index, max_kw, num_mh=cfg.num_mh
-            )
-        raise ValueError(alg)
-
-    def _hybrid_sweep(self, state: CGSState) -> jax.Array:
-        """ZenLDAHybrid (§3.1): per-token pick the decomposition whose fresh
-        term ranges over the sparser row; here realized by routing tokens to
-        the zen sweep (fresh term over K_d) or the sparselda sweep (fresh
-        term over K_w) by comparing row nnz."""
-        c, h = self.corpus, self.hyper
-        max_kw, max_kd = self._pads(state)
-        kd_nnz = jnp.sum(state.n_kd > 0, axis=-1)[c.doc]
-        kw_nnz = jnp.sum(state.n_wk > 0, axis=-1)[c.word]
-        use_zen = kd_nnz <= kw_nnz
-        z_zen = zen_sparse_sweep(state, c, h, max_kw, max_kd)
-        z_alt = sparselda_sweep(state, c, h, max_kw, max_kd)
-        return jnp.where(use_zen, z_zen, z_alt)
+        knobs = self._knobs
+        if self.backend.needs_row_pads:
+            # host-side auto pads from the current counts (0 = auto)
+            knobs = algorithms.resolve_row_pads(state, knobs)
+        return self.backend.sweep(
+            state, self.corpus, self.hyper, knobs, self._aux
+        )
 
     def step(self, state: CGSState) -> CGSState:
         c, h, cfg = self.corpus, self.hyper, self.cfg
@@ -137,14 +109,14 @@ class LDATrainer:
     # -- metrics -----------------------------------------------------------
     def llh(self, state: CGSState) -> float:
         return float(predictive_llh(state, self.corpus, self.hyper,
-                                     token_chunk=self.cfg.token_chunk))
+                                     token_chunk=self._knobs.chunk_or_none()))
 
     def llh_split(self, state: CGSState):
         return joint_llh(state, self.corpus, self.hyper)
 
     def perplexity(self, state: CGSState) -> float:
         return float(perplexity(state, self.corpus, self.hyper,
-                                 token_chunk=self.cfg.token_chunk))
+                                 token_chunk=self._knobs.chunk_or_none()))
 
     def change_rate(self, state: CGSState) -> float:
         """Fraction of tokens whose topic changed last iteration (Fig. 9a)."""

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils.compat import pallas_tpu_compiler_params
+
 
 def _hist_kernel(
     rank_ref,  # (bt, 1) int32 — token's row-rank within its tile
@@ -107,7 +109,7 @@ def topic_histogram_pallas(
         out_specs=pl.BlockSpec((bt, bk), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((t, k), jnp.int32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
     )(rank[:, None], z_old[:, None], z_new[:, None], inc[:, None])

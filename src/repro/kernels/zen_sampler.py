@@ -38,6 +38,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils.compat import pallas_tpu_compiler_params
+
 # Murmur3-style finalizer constants (avalanche mixing). Plain ints: traced
 # jnp constants would be captured as closure constants, which pallas rejects.
 _M1 = 0x85EBCA6B
@@ -169,7 +171,7 @@ def zen_sample_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((t, 1), jnp.int32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )(

@@ -23,6 +23,27 @@ def main():
     with open(args.optimized) as f:
         opt = json.load(f)
 
+    # legend: resolve each LDA arch's sampler through the backend registry
+    # (the same algorithms.get() the trainer / mesh step / dryrun use).
+    # Best-effort — the jax-backed imports stay inside a try so the plain
+    # JSON diff below never blocks on them.
+    try:
+        from repro import algorithms
+        from repro.configs import get_config
+        from repro.configs.base import LDAArchConfig
+    except Exception as e:  # pragma: no cover - jax-less environments
+        print(f"# (algorithm legend unavailable: {e})")
+    else:
+        for arch in sorted({k.split("|")[0] for k in base if "|" in k}):
+            try:
+                cfg = get_config(arch)
+                if isinstance(cfg, LDAArchConfig):
+                    backend = algorithms.get(cfg.algorithm)
+                    print(f"# {arch}: sampler backend {backend.name!r} "
+                          f"(shard_map={backend.supports_shard_map})")
+            except Exception as e:  # best-effort; never block the diff
+                print(f"# {arch}: (algorithm legend unavailable: {e})")
+
     def effective(store, key):
         """fitted record if present, else the raw cell record."""
         arch, shape, mesh = key.split("|")

@@ -78,9 +78,18 @@ def build_step(cfg, kind: str, dims=None):
 
         return serve_step
     if kind == "lda":
+        from repro import algorithms
         from repro.core.distributed import DistConfig, make_dist_step
         from repro.core.types import LDAHyperParams
 
+        # fail fast (before lowering) on unknown / non-mesh backends — the
+        # same registry entry the trainer and the mesh step resolve
+        backend = algorithms.get(cfg.algorithm)
+        if not backend.supports_shard_map:
+            raise ValueError(
+                f"LDA arch {cfg.name!r}: backend {cfg.algorithm!r} has no "
+                f"shard_map cell sweep"
+            )
         hyper = LDAHyperParams(num_topics=cfg.num_topics)
         dcfg = DistConfig(
             algorithm=cfg.algorithm, max_kd=cfg.max_kd,

@@ -1,12 +1,17 @@
-"""Distributed LDA training driver (launch-level CLI).
+"""LDA training driver (launch-level CLI) — any registered sampler backend.
 
-On a real TPU slice this runs under `jax.distributed` with the production
-mesh; on CPU hosts pass --host-devices to simulate N devices.
+The algorithm name resolves through the ``repro.algorithms`` registry:
+backends with ``supports_shard_map`` (zen_cdf, zen_dense, zen_pallas, ...)
+run the distributed mesh path; the rest (zen_sparse, lightlda, ...) fall
+back to the single-box trainer on the same corpus. On a real TPU slice the
+mesh path runs under `jax.distributed`; on CPU hosts pass --host-devices to
+simulate N devices.
 
     PYTHONPATH=src python -m repro.launch.train \
         --rows 2 --cols 2 --host-devices 4 --iters 50 \
-        [--corpus path.libsvm] [--ckpt DIR] [--algorithm zen_cdf]
+        [--corpus path.libsvm] [--ckpt DIR] [--algorithm <registered-name>]
         [--delta-dtype int16] [--exclusion-start 30]
+    PYTHONPATH=src python -m repro.launch.train --list-algorithms
 """
 import argparse
 import os
@@ -22,8 +27,14 @@ def main() -> None:
     ap.add_argument("--topics", type=int, default=64)
     ap.add_argument("--iters", type=int, default=50)
     ap.add_argument("--algorithm", default="zen_cdf",
-                    choices=["zen_cdf", "zen_dense", "zen_dense_kernel"])
-    ap.add_argument("--max-kd", type=int, default=64)
+                    help="any name from --list-algorithms")
+    ap.add_argument("--list-algorithms", action="store_true",
+                    help="print the registered sampler backends and exit")
+    ap.add_argument("--single-box", action="store_true",
+                    help="force the single-box trainer path")
+    ap.add_argument("--max-kd", type=int, default=None,
+                    help="sparse doc-row width (default: 64 on the mesh "
+                         "path, auto-sized on the single-box path)")
     ap.add_argument("--delta-dtype", default="int32",
                     choices=["int32", "int16", "int8"])
     ap.add_argument("--exclusion-start", type=int, default=0)
@@ -41,6 +52,65 @@ def main() -> None:
     import jax.numpy as jnp
     import numpy as np
 
+    from repro import algorithms
+
+    if args.list_algorithms:
+        for name, backend, aliases in algorithms.describe():
+            mesh = "mesh+single-box" if backend.supports_shard_map \
+                else "single-box"
+            alias_s = f" (aliases: {', '.join(aliases)})" if aliases else ""
+            print(f"{name:12s} {mesh}{alias_s}")
+        return
+
+    backend = algorithms.get(args.algorithm)  # one registry resolution
+
+    from repro.core.types import LDAHyperParams
+    from repro.data import load_libsvm, synthetic_corpus
+
+    if args.corpus:
+        corpus = load_libsvm(args.corpus)
+    else:
+        corpus = synthetic_corpus(0, num_docs=1000, num_words=2000,
+                                  avg_doc_len=80, zipf_a=1.2)
+    hyper = LDAHyperParams(num_topics=args.topics)
+
+    if args.single_box or not backend.supports_shard_map:
+        # single-box round trip: same registry entry, LDATrainer driver
+        from repro.core import LDATrainer, TrainConfig
+        from repro.core.exclusion import ExclusionConfig
+
+        if not backend.supports_shard_map and not args.single_box:
+            print(f"note: backend {args.algorithm!r} has no shard_map cell "
+                  f"sweep; running the single-box trainer")
+        ignored = [flag for flag, default, val in (
+            ("--ckpt", None, args.ckpt),
+            ("--delta-dtype", "int32", args.delta_dtype),
+            ("--rows/--cols", (2, 2), (args.rows, args.cols)),
+        ) if val != default]
+        if ignored:
+            print(f"note: single-box path ignores {', '.join(ignored)}")
+        excl = ExclusionConfig(enabled=args.exclusion_start > 0,
+                               start_iteration=args.exclusion_start)
+        tr = LDATrainer(corpus, hyper, TrainConfig(
+            algorithm=args.algorithm,
+            max_kd=args.max_kd or 0,  # 0 = auto-size from the counts
+            exclusion=excl,
+        ))
+        print(f"single-box  algorithm={args.algorithm}  "
+              f"tokens={corpus.num_tokens}")
+
+        def cb(state, metrics):
+            if metrics:
+                print(f"iter {int(state.iteration):4d}  "
+                      f"llh {metrics['llh']:.1f}  "
+                      f"change {metrics['change_rate']:.3f}")
+
+        final = tr.train(jax.random.key(0), args.iters,
+                         llh_every=args.llh_every, callback=cb)
+        print(f"finished at iteration {int(final.iteration)}; "
+              f"final llh {tr.llh(final):.1f}")
+        return
+
     from repro.core.distributed import (
         DistConfig,
         init_dist_state,
@@ -49,24 +119,17 @@ def main() -> None:
         make_rebuild_counts,
     )
     from repro.core.graph import grid_partition
-    from repro.core.types import LDAHyperParams
-    from repro.data import load_libsvm, synthetic_corpus
     from repro.launch.mesh import make_mesh
     from repro.train.checkpoint import CheckpointManager
     from repro.train.loop import LoopConfig, TrainLoop
 
-    if args.corpus:
-        corpus = load_libsvm(args.corpus)
-    else:
-        corpus = synthetic_corpus(0, num_docs=1000, num_words=2000,
-                                  avg_doc_len=80, zipf_a=1.2)
-    hyper = LDAHyperParams(num_topics=args.topics)
     mesh = make_mesh((args.rows, args.cols), ("data", "model"))
     grid = grid_partition(corpus, args.rows, args.cols)
     print(f"mesh {args.rows}x{args.cols}  tokens={int(grid.mask.sum())}  "
           f"pad={grid.padding_overhead:.2%}")
     dcfg = DistConfig(
-        algorithm=args.algorithm, max_kd=args.max_kd,
+        algorithm=args.algorithm,
+        max_kd=args.max_kd or 64,  # static width: shard_map needs a bound
         delta_dtype=args.delta_dtype, exclusion_start=args.exclusion_start,
     )
     state, data = init_dist_state(jax.random.key(0), mesh, grid, hyper)

@@ -1,10 +1,122 @@
-"""Subprocess helper for multi-device tests (device count locks at first
-jax init, so distributed tests run in children with their own XLA_FLAGS)."""
+"""Shared test utilities.
+
+1. ``run_with_devices`` — subprocess helper for multi-device tests (device
+   count locks at first jax init, so distributed tests run in children with
+   their own XLA_FLAGS).
+2. ``given`` / ``settings`` / ``st`` — re-exports of hypothesis, with a tiny
+   deterministic fallback shim when hypothesis is not installed (it is a dev
+   dependency, see requirements-dev.txt): the property tests then run a
+   fixed number of seeded random examples instead of erroring the whole
+   suite at collection.
+"""
+import functools
+import inspect
 import os
+import random
 import subprocess
 import sys
+import zlib
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis, or a seeded-random stand-in with the same surface
+# ---------------------------------------------------------------------------
+
+class _Strategy:
+    """A draw function wrapped with the bit of hypothesis API the tests use."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example_with(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class _StrategiesShim:
+    """Deterministic mini-`hypothesis.strategies`: just what the suite needs
+    (integers, floats, booleans, lists, composite)."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rnd):
+            n = rnd.randint(min_size, max_size)
+            return [elements.example_with(rnd) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def composite(fn):
+        def build(*args, **kwargs):
+            def draw_outer(rnd):
+                return fn(lambda s: s.example_with(rnd), *args, **kwargs)
+
+            return _Strategy(draw_outer)
+
+        return build
+
+
+def _shim_settings(max_examples=10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def _shim_given(*strategies):
+    """Run the test body over ``max_examples`` seeded draws. Drawn values
+    fill the RIGHTMOST parameters (hypothesis semantics), so pytest fixtures
+    on the left keep working; the wrapper's signature hides the drawn params
+    from pytest's fixture resolution."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n_drawn = len(strategies)
+        drawn_names = [p.name for p in params[len(params) - n_drawn:]]
+
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rnd = random.Random(seed)
+            for _ in range(getattr(runner, "_shim_max_examples", 10)):
+                drawn = {
+                    name: s.example_with(rnd)
+                    for name, s in zip(drawn_names, strategies)
+                }
+                fn(*args, **{**kwargs, **drawn})
+
+        runner.__signature__ = sig.replace(
+            parameters=params[: len(params) - n_drawn]
+        )
+        return runner
+
+    return deco
+
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    given = _shim_given
+    settings = _shim_settings
+    st = _StrategiesShim()
 
 
 def run_with_devices(code: str, n_devices: int = 4, timeout: int = 600) -> str:

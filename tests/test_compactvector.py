@@ -1,6 +1,6 @@
 """CompactVector (paper Alg. 4) vs dense oracle."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st  # hypothesis, or the fallback shim
 
 from repro.core.compactvector import CompactVector
 

@@ -1,7 +1,7 @@
 """Count maintenance: build/delta conservation invariants (property)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st  # hypothesis, or the fallback shim
 
 from repro.core.counts import build_counts, delta_counts, doc_lengths
 

@@ -10,6 +10,7 @@ from repro.data import synthetic_lda_corpus
 from repro.core.types import LDAHyperParams
 from repro.core.graph import grid_partition
 from repro.core import counts as counts_lib
+from repro.launch.mesh import make_mesh
 from repro.core.distributed import (DistConfig, init_dist_state,
                                     make_dist_step, make_dist_llh,
                                     make_rebuild_counts)
@@ -22,8 +23,7 @@ hyper = LDAHyperParams(num_topics=8, alpha=0.1, beta=0.05)
 def test_distributed_counts_match_serial():
     """Distributed rebuild == single-box build_counts on the same data."""
     run_with_devices(COMMON + """
-mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ('data', 'model'))
 grid = grid_partition(corpus, 2, 2)
 state, data = init_dist_state(jax.random.key(0), mesh, grid, hyper)
 # reference: flatten grid tokens and build on one box
@@ -41,8 +41,7 @@ print('MATCH')
 @pytest.mark.parametrize("alg", ["zen_dense", "zen_cdf", "zen_dense_kernel"])
 def test_distributed_invariants_and_convergence(alg):
     run_with_devices(COMMON + f"""
-mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ('data', 'model'))
 grid = grid_partition(corpus, 2, 2)
 E = int(grid.mask.sum())
 state, data = init_dist_state(jax.random.key(0), mesh, grid, hyper)
@@ -66,8 +65,7 @@ print('OK', l0, l1)
 def test_delta_compression_preserves_counts():
     """int16/int8 compressed psums keep exact totals on this workload."""
     run_with_devices(COMMON + """
-mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ('data', 'model'))
 grid = grid_partition(corpus, 2, 2)
 E = int(grid.mask.sum())
 for dd in ('int16', 'int8'):
@@ -87,8 +85,7 @@ def test_elastic_rescale():
     """Train on 2x2, checkpoint assignments, restore on 1x4 and 4x1 —
     counts rebuild correctly and training continues (DESIGN.md §3.2)."""
     run_with_devices(COMMON + """
-mesh_a = jax.make_mesh((2, 2), ('data', 'model'),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_a = make_mesh((2, 2), ('data', 'model'))
 grid_a = grid_partition(corpus, 2, 2)
 E = int(grid_a.mask.sum())
 state, data = init_dist_state(jax.random.key(0), mesh_a, grid_a, hyper)
@@ -114,8 +111,7 @@ saved = z_flat[order_a]
 
 # "new cluster": different mesh shape
 for shape in [(1, 4), (4, 1)]:
-    mesh_b = jax.make_mesh(shape, ('data', 'model'),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh_b = make_mesh(shape, ('data', 'model'))
     grid_b = grid_partition(corpus, shape[0], shape[1])
     wb = grid_b.word[grid_b.mask]; db = grid_b.doc[grid_b.mask]
     inv_wb = inverse_perm(grid_b.word_perm, grid_b.num_words_padded)
@@ -145,8 +141,7 @@ print('ELASTIC OK')
 
 def test_three_axis_pod_mesh():
     run_with_devices(COMMON + """
-mesh = jax.make_mesh((2, 1, 2), ('pod', 'data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2, 1, 2), ('pod', 'data', 'model'))
 grid = grid_partition(corpus, 2, 2)  # pod*data rows = 2
 E = int(grid.mask.sum())
 state, data = init_dist_state(jax.random.key(0), mesh, grid, hyper)

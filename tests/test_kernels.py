@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st  # hypothesis, or the fallback shim
 
 from repro.kernels.ops import topic_histogram, zen_sample
 from repro.kernels.ref import topic_histogram_ref, zen_probs_ref, zen_sample_ref

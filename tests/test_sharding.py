@@ -14,15 +14,16 @@ def test_param_specs_divide_on_production_shapes():
     run_with_devices("""
 import warnings; warnings.filterwarnings('ignore')
 import jax, numpy as np
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 from repro.configs import get_config, list_archs
 from repro.launch.specs import params_abstract
+from repro.utils.compat import abstract_mesh
 from repro.sharding.partition import param_specs
 
 # the REAL production meshes, as abstract shapes (no 512 devices needed)
 MESHES = [
-    AbstractMesh((16, 16), ('data', 'model')),
-    AbstractMesh((2, 16, 16), ('pod', 'data', 'model')),
+    abstract_mesh((16, 16), ('data', 'model')),
+    abstract_mesh((2, 16, 16), ('pod', 'data', 'model')),
 ]
 
 def axis_size(mesh, entry):
@@ -54,8 +55,8 @@ def test_sharded_matmul_runs():
 import warnings; warnings.filterwarnings('ignore')
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
-mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ('data', 'model'))
 x = jax.device_put(jnp.ones((8, 16)), NamedSharding(mesh, P('data', None)))
 w = jax.device_put(jnp.ones((16, 8)), NamedSharding(mesh, P(None, 'model')))
 y = jax.jit(lambda a, b: a @ b)(x, w)
@@ -71,8 +72,8 @@ import jax, jax.numpy as jnp
 from repro.configs import get_config
 from repro.models.model import init_cache
 from repro.sharding import cache_sharding
-mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2), ('data', 'model'))
 cfg = get_config('qwen3-8b')
 # decode_32k-like: batch divides -> batch over data, seq over model
 caches = init_cache(cfg, 4, 64, abstract=True)
@@ -99,9 +100,9 @@ from repro.sharding import batch_sharding, param_shardings
 from repro.launch.specs import _opt_shardings
 from repro.train.train_step import TrainState, init_train_state, make_train_step
 from repro.train.optimizer import OptConfig
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ('data', 'model'))
 import dataclasses
 cfg = get_config('qwen3-8b-smoke')
 cfg = dataclasses.replace(cfg, d_model=128, num_heads=4, num_kv_heads=2,

@@ -10,9 +10,9 @@ import jax
 from repro.configs import SHAPES, get_config, list_archs, shapes_for
 from repro.configs.base import LDAArchConfig
 from repro.launch.specs import lda_cell_specs, lm_cell_specs
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 2), ('data', 'model'))
 built = 0
 for arch in list_archs():
     cfg = get_config(arch)
