@@ -1,0 +1,84 @@
+"""Serving throughput: docs/sec vs batch size x bucket layout, per backend.
+
+The serving analogue of the training-sweep benchmarks: a frozen synthetic
+model, a mixed-length query load, and the bucketed ``LDAEngine`` from
+``repro.serving``. Derived column = docs/sec.
+
+    PYTHONPATH=src python benchmarks/run.py --only infer
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+BACKENDS = ("zen", "zen_cdf", "zen_pallas")
+NUM_DOCS = 96
+NUM_WORDS = 2000
+NUM_TOPICS = 64
+
+
+def _frozen_model():
+    import jax.numpy as jnp
+
+    from repro.core.types import LDAHyperParams
+    from repro.serving import FrozenLDAModel
+
+    rng = np.random.default_rng(0)
+    n_wk = rng.poisson(2.0, size=(NUM_WORDS, NUM_TOPICS)).astype(np.int32)
+    return FrozenLDAModel(
+        n_wk=jnp.asarray(n_wk),
+        n_k=jnp.asarray(n_wk.sum(0).astype(np.int32)),
+        hyper=LDAHyperParams(num_topics=NUM_TOPICS),
+    )
+
+
+def _load(rng):
+    """Mixed-length Zipf query docs (the serving traffic shape)."""
+    lengths = np.clip(rng.poisson(48, size=NUM_DOCS), 4, 240)
+    ranks = np.arange(1, NUM_WORDS + 1, dtype=np.float64) ** -1.2
+    pmf = ranks / ranks.sum()
+    return [
+        rng.choice(NUM_WORDS, size=n, p=pmf).astype(np.int32)
+        for n in lengths
+    ]
+
+
+def main() -> None:
+    from repro.serving import LDAEngine, LDAServeConfig
+
+    model = _frozen_model()
+    docs = _load(np.random.default_rng(1))
+    layouts = [
+        ("1bucket", (256,)),
+        ("2buckets", (64, 256)),
+        ("4buckets", (32, 64, 128, 256)),
+    ]
+    for backend in BACKENDS:
+        for batch in (8, 32):
+            for lname, buckets in layouts:
+                cfg = LDAServeConfig(
+                    buckets=buckets, max_batch=batch, num_sweeps=10,
+                    algorithm=backend,
+                )
+                engine = LDAEngine(model, cfg, seed=0)
+                # warm THIS engine's per-bucket jit caches (they are
+                # per-instance closures): one doc per bucket width
+                engine.infer_batch(
+                    [np.zeros(bl, np.int32) for bl in buckets]
+                )
+                t0 = time.perf_counter()
+                engine.infer_batch(docs)
+                dt = time.perf_counter() - t0
+                row(
+                    f"infer_{backend}_b{batch}_{lname}",
+                    dt * 1e6 / NUM_DOCS,
+                    f"{NUM_DOCS / dt:.1f} docs/s",
+                )
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
   fig10    redundant-computation elimination (Alg. 5)    (bench_redundant)
   table1   per-algorithm work terms (complexity model)   (bench_table1)
   sec41    partitioner quality (DBH+ et al.)             (bench_partition)
+  infer    serving throughput, batch x buckets x backend (bench_infer)
 """
 import argparse
 
@@ -32,6 +33,8 @@ def main() -> None:
         "table1": lambda: __import__("benchmarks.bench_table1",
                                      fromlist=["main"]).main(),
         "sec41": lambda: __import__("benchmarks.bench_partition",
+                                    fromlist=["main"]).main(),
+        "infer": lambda: __import__("benchmarks.bench_infer",
                                     fromlist=["main"]).main(),
     }
     wanted = args.only.split(",") if args.only else list(sections)

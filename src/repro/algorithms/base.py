@@ -16,6 +16,15 @@ counts/corpus substrate:
   inside ``shard_map`` by the distributed runtime: all ids are local to the
   device's (word-shard x doc-shard) cell and the count blocks are the local
   shards. Only backends with ``supports_shard_map`` implement it.
+* ``prepare_infer(n_wk, n_k, hyper, knobs) -> frozen aux`` /
+  ``infer_sweep(keys, words, mask, z_old, n_kd, n_wk, n_k, hyper, knobs,
+  aux) -> new_topics (B, L)`` — the *serving* form (frozen-model
+  inference, paper §4.3): the trained ``N_w|k``/``N_k`` are held fixed and
+  only the per-slot doc-topic counts move. The base class provides a
+  default derivation that every backend inherits (the dense frozen-phi
+  sweep, sweep-equivalent math with the word side frozen), so all
+  registered backends serve for free; ``zen_cdf`` and ``zen_pallas``
+  override it with their native machinery and set ``native_infer``.
 
 Capability flags let drivers adapt instead of hard-coding per-name logic:
 
@@ -90,13 +99,86 @@ class SamplerBackend:
             f"backend {self.name!r} does not support shard_map cells"
         )
 
+    # -- frozen-model serving (repro.serving.lda_engine) -------------------
+    native_infer: bool = False
+
+    def prepare_infer(self, n_wk, n_k, hyper, knobs: SamplerKnobs) -> Any:
+        """Freeze the trained model into a sampling-ready aux object.
+
+        Called once when a serving engine is built; the result is passed
+        back into every ``infer_sweep``. The default needs no tables."""
+        return None
+
+    def infer_sweep(
+        self, keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
+        knobs: SamplerKnobs, aux: Any = None,
+    ) -> jax.Array:
+        """One frozen-model CGS sweep over a padded slot batch.
+
+        ``keys`` (B,) per-slot PRNG keys; ``words``/``mask``/``z_old``
+        (B, L) padded token rows; ``n_kd`` (B, K) per-slot doc-topic
+        counts; ``n_wk``/``n_k`` the frozen trained model. Returns new
+        topics (B, L) (padded positions produce garbage the engine masks).
+
+        Contract of the *default derivation* (the engine's tests rely on
+        it): slot b consumes randomness only from ``keys[b]``, so results
+        are independent of batch composition; draws are prefix-stable in
+        L (threefry counters are per-token), so growing the bucket pad
+        never changes a real token's sample; and it is draw-for-draw
+        compatible with the single-doc oracle
+        ``repro.core.inference.cgs_infer`` (same conditional, same cdf
+        inversion, same key schedule), which the serving tests verify
+        bit-exactly. Overrides must keep slot chains *statistically*
+        independent but may weaken bit-stability (``zen_cdf`` keeps it;
+        ``zen_pallas`` cannot — its kernel hashes one scalar seed with
+        flat token coordinates; see its docstring).
+        """
+        return _dense_infer_sweep(
+            keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
+            knobs.sampling_method,
+        )
+
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         flags = [
             f for f in ("supports_shard_map", "needs_doc_index",
-                        "needs_row_pads")
+                        "needs_row_pads", "native_infer")
             if getattr(self, f)
         ]
         return f"<{type(self).__name__} {self.name!r} {' '.join(flags)}>"
+
+
+def _dense_infer_sweep(
+    keys, words, mask, z_old, n_kd, n_wk, n_k, hyper, method: str
+) -> jax.Array:
+    """Default frozen-model sweep: dense phi rows, doc-side-only exclusion.
+
+    Draw-for-draw identical to one ``cgs_infer`` sweep per slot (cdf
+    method): same conditional, same cumsum inversion, and per-slot keys so
+    slots are independent. Keep the op sequence in lockstep with
+    ``repro.core.inference.cgs_infer`` — tests enforce bit-equality.
+    """
+    k = hyper.num_topics
+    w_total = n_wk.shape[0]
+    alpha_k = hyper.alpha_k(n_k)
+    denom = n_k.astype(jnp.float32) + w_total * hyper.beta
+
+    def slot(key, w_row, m_row, z_row, nkd_row):
+        phi = (n_wk[w_row].astype(jnp.float32) + hyper.beta) / denom[None, :]
+        onehot = jax.nn.one_hot(z_row, k, dtype=jnp.int32) * m_row[:, None]
+        nkd_excl = (nkd_row[None, :] - onehot).astype(jnp.float32)
+        probs = phi * (nkd_excl + alpha_k)
+        if method == "gumbel":
+            g = jax.random.gumbel(key, probs.shape, dtype=jnp.float32)
+            return jnp.argmax(
+                jnp.log(jnp.maximum(probs, 1e-30)) + g, -1
+            ).astype(jnp.int32)
+        cdf = jnp.cumsum(probs, axis=-1)
+        u = jax.random.uniform(key, (probs.shape[0], 1))
+        return jnp.minimum(
+            jnp.sum(cdf < u * cdf[:, -1:], axis=-1), k - 1
+        ).astype(jnp.int32)
+
+    return jax.vmap(slot)(keys, words, mask.astype(jnp.int32), z_old, n_kd)
 
 
 class CellBackend(SamplerBackend):

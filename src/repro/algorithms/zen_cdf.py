@@ -9,6 +9,8 @@ resampling trick (§3.1).
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
@@ -127,9 +129,82 @@ def zen_cdf_cell(
     return jnp.where((z1 == z_old) & (u_r < remedy_p), z2, z1)
 
 
+class FrozenCdfTables(NamedTuple):
+    """Sampling-ready frozen model: the per-word prior-term CDFs.
+
+    Because the model never moves while serving, the per-iteration "build
+    tables" stage of training (Alg. 2 l.5-13) collapses to a one-time
+    precompute: ``a_cdf[w]`` is the cumulative of the doc-independent term
+    alpha_k * (N_w|k + beta) * t1, so branch-1 draws are O(log K) scalar
+    gathers per token for the engine's whole lifetime.
+    """
+
+    a_cdf: jax.Array  # (W, K) f32 row-wise CDF of the prior term
+    a_mass: jax.Array  # (W,) f32 row masses
+    t1: jax.Array  # (K,) f32 1 / (N_k + W*beta)
+    alpha_k: jax.Array  # (K,) f32
+
+
+def zen_cdf_infer_sweep(
+    keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
+    max_kd: int, tables: FrozenCdfTables,
+):
+    """Frozen-model sweep via the two-branch CDF decomposition.
+
+    With phi frozen the Eq. 3 conditional splits into a doc-independent
+    prior term (precomputed per-word CDFs, branch 1) and the sparse doc
+    term over the slot's at-most-L live topics (branch 2):
+
+        p(k) = [alpha_k + N_k|d^(-t)] * (N_w|k + beta) * t1
+
+    Randomness is drawn per slot (``keys[b]`` -> one uniform per token
+    position), so slots are independent and draws are prefix-stable in the
+    bucket pad.
+    """
+    b, l = words.shape
+    k = hyper.num_topics
+    kd = min(max_kd, k)
+
+    # sparse doc rows: exact top-kd per slot (serving docs hold <= L live
+    # topics; exact top_k keeps the engine's oracle comparison clean)
+    kd_cnt, kd_idx = jax.lax.top_k(n_kd, kd)  # (B, kd)
+
+    slot = jax.lax.broadcasted_iota(jnp.int32, (b, l), 0).reshape(-1)
+    w = words.reshape(-1)
+    z = z_old.reshape(-1)
+    live = mask.reshape(-1)
+
+    rows_idx = kd_idx[slot]  # (BL, kd)
+    rows_cnt = kd_cnt[slot]
+    # exact doc-side ¬t exclusion: drop the token's own current assignment
+    self_hit = (rows_idx == z[:, None]) & live[:, None]
+    rows_cnt = rows_cnt - self_hit.astype(rows_cnt.dtype)
+    nwk_at = n_wk[w[:, None], rows_idx].astype(jnp.float32)
+    d_vals = (
+        rows_cnt.astype(jnp.float32)
+        * (nwk_at + hyper.beta)
+        * tables.t1[rows_idx]
+    )
+    d_vals = jnp.where(rows_cnt > 0, d_vals, 0.0)
+    d_cdf = jnp.cumsum(d_vals, axis=-1)
+    m_d = d_cdf[:, -1]
+    m_a = tables.a_mass[w]
+
+    # one uniform per token, drawn from the token's *slot* key
+    u01 = jax.vmap(lambda kk: jax.random.uniform(kk, (l,)))(keys).reshape(-1)
+    u = u01 * (m_a + m_d)
+    z_a = _bsearch_gather(tables.a_cdf, w, jnp.minimum(u, m_a))
+    pos = _searchsorted_rows(d_cdf, jnp.maximum(u - m_a, 0.0))
+    z_d = jnp.take_along_axis(rows_idx, pos[:, None], -1)[:, 0]
+    z_new = jnp.where(u < m_a, z_a, z_d)
+    return jnp.minimum(z_new, k - 1).astype(jnp.int32).reshape(b, l)
+
+
 @register("zen_cdf")
 class ZenCdf(CellBackend):
     """Precomputed-CDF ZenLDA; works single-box (one cell) and sharded."""
+
+    native_infer = True
 
     def cell_sweep(
         self, key, word, doc, z_old, mask, n_wk, n_kd, n_k, hyper,
@@ -138,4 +213,25 @@ class ZenCdf(CellBackend):
         return zen_cdf_cell(
             key, word, doc, z_old, mask, n_wk, n_kd, n_k, hyper,
             num_words_pad, knobs.max_kd or DEFAULT_MAX_KD,
+        )
+
+    def prepare_infer(self, n_wk, n_k, hyper, knobs: SamplerKnobs):
+        w_total = n_wk.shape[0]
+        alpha_k = hyper.alpha_k(n_k)
+        t1 = 1.0 / (n_k.astype(jnp.float32) + w_total * hyper.beta)
+        a_vals = (n_wk.astype(jnp.float32) + hyper.beta) * (alpha_k * t1)
+        a_cdf = jnp.cumsum(a_vals, axis=-1)
+        return FrozenCdfTables(
+            a_cdf=a_cdf, a_mass=a_cdf[:, -1], t1=t1, alpha_k=alpha_k
+        )
+
+    def infer_sweep(
+        self, keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
+        knobs: SamplerKnobs, aux=None,
+    ):
+        if aux is None:
+            aux = self.prepare_infer(n_wk, n_k, hyper, knobs)
+        return zen_cdf_infer_sweep(
+            keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
+            knobs.max_kd or DEFAULT_MAX_KD, aux,
         )

@@ -21,6 +21,62 @@ from repro.algorithms.registry import register
 class ZenPallas(CellBackend):
     """Fused three-term Gumbel-max sampler (Pallas TPU kernel)."""
 
+    native_infer = True
+
+    def infer_sweep(
+        self, keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
+        knobs: SamplerKnobs, aux=None,
+    ):
+        """Frozen-model serving through the unchanged fused kernel.
+
+        The kernel applies exact ¬dw exclusion to all three counts
+        in-register; for frozen-phi inference only the *doc* side may be
+        excluded, so the gathered word rows are pre-compensated with the
+        token's own one-hot (the kernel's subtraction then restores the
+        frozen N_w|k exactly). N_k is shared across the batch and cannot
+        be compensated per token, so the denominator is off by one at the
+        token's current topic — a < 1/N_k relative approximation the
+        serving tests bound statistically.
+
+        Randomness caveat: the kernel draws counter-based noise from ONE
+        scalar seed and the flat token coordinates, so this backend does
+        not honor the per-slot-key bit-stability contract of the default
+        derivation — results are statistically exchangeable but depend on
+        batch layout. The seed mixes *every* slot's key (not just
+        keys[0]) so it changes every sweep even when some slots are
+        vacant and holding the engine's constant dummy key (a fixed seed
+        would degenerate the Gibbs chain into an iterated deterministic
+        map). A frozen-model kernel variant with per-slot seeds is a
+        ROADMAP follow-up.
+        """
+        from repro.kernels.ops import zen_sample
+
+        b, l = words.shape
+        k = hyper.num_topics
+        slot = jax.lax.broadcasted_iota(jnp.int32, (b, l), 0).reshape(-1)
+        w = words.reshape(-1)
+        z = z_old.reshape(-1)
+        live = mask.reshape(-1).astype(jnp.int32)
+
+        onehot = jax.nn.one_hot(z, k, dtype=jnp.int32) * live[:, None]
+        nwk_rows = n_wk[w].astype(jnp.int32) + onehot
+        nkd_rows = n_kd[slot].astype(jnp.int32)
+        alpha_k = hyper.alpha_k(n_k)
+        w_beta = n_wk.shape[0] * hyper.beta
+        # fold the slot index in before XOR-mixing so identical keys in two
+        # slots (or the engine's repeated dummy key) can never cancel out
+        mixed = jax.vmap(jax.random.fold_in)(keys, jnp.arange(b))
+        key_bits = jax.random.key_data(mixed).astype(jnp.uint32).reshape(-1)
+        folded = jax.lax.reduce(
+            key_bits, jnp.uint32(0), jax.lax.bitwise_xor, (0,)
+        )
+        seed = (folded & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+        out = zen_sample(
+            nwk_rows, nkd_rows, z, alpha_k, n_k.astype(jnp.float32), seed,
+            beta=hyper.beta, w_beta=w_beta, bt=knobs.bt, bk=knobs.bk,
+        )
+        return out.reshape(b, l)
+
     def cell_sweep(
         self, key, word, doc, z_old, mask, n_wk, n_kd, n_k, hyper,
         num_words_pad, knobs: SamplerKnobs,

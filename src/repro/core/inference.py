@@ -5,6 +5,14 @@
 * ``rtlda_infer`` — RT-LDA (paper [27]): replace the sampling operation with
   ``argmax`` of the conditional — deterministic, one pass per sweep, built
   for millisecond-latency online serving.
+
+``cgs_infer`` is the **single-document oracle** for the batched serving
+subsystem (``repro.serving.lda_engine``): the default backend
+``infer_sweep`` (``repro.algorithms.base._dense_infer_sweep``) replicates
+its conditional, cdf inversion, and key schedule draw-for-draw, and
+``tests/test_lda_engine.py`` asserts the served thetas are bit-equal to
+this function. Change the sampling math or RNG layout here only in
+lockstep with that default.
 """
 from __future__ import annotations
 

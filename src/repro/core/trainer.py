@@ -39,6 +39,10 @@ class TrainConfig:
     token_chunk: int = 0  # 0 = whole sweep at once (memory knob)
     bt: int = 256  # zen_pallas token tile
     bk: int = 512  # zen_pallas topic tile
+    # model checkpointing (the serving handoff): save N_wk/N_k + hyper to
+    # this directory every checkpoint_every iterations (0 = final only)
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
 
     def knobs(self) -> SamplerKnobs:
         """The shared backend knob dataclass (same one DistConfig builds)."""
@@ -122,6 +126,24 @@ class LDATrainer:
         """Fraction of tokens whose topic changed last iteration (Fig. 9a)."""
         return float(jnp.mean((state.topic != state.prev_topic).astype(jnp.float32)))
 
+    # -- model checkpointing (serving handoff) ------------------------------
+    def save_model(self, state: CGSState, directory: Optional[str] = None) -> str:
+        """Checkpoint the trained model (N_wk/N_k + hyper) for serving.
+
+        ``launch/serve_lda.py`` / ``FrozenLDAModel.from_checkpoint`` load
+        exactly this artifact.
+        """
+        from repro.train.checkpoint import save_lda_model
+
+        directory = directory or self.cfg.checkpoint_dir
+        if not directory:
+            raise ValueError("no checkpoint directory configured")
+        return save_lda_model(
+            directory, state.n_wk, state.n_k, self.hyper,
+            step=int(state.iteration),
+            extra_metadata={"algorithm": self.cfg.algorithm},
+        )
+
     # -- training loop with flexible termination (§4.3 utilities) ----------
     def train(
         self,
@@ -134,6 +156,8 @@ class LDATrainer:
     ) -> CGSState:
         if state is None:
             state = self.init_state(rng)
+        ckpt_dir, ckpt_every = self.cfg.checkpoint_dir, self.cfg.checkpoint_every
+        last_saved = -1
         for it in range(num_iterations):
             state = self.step(state)
             metrics = {}
@@ -142,7 +166,12 @@ class LDATrainer:
                 metrics["change_rate"] = self.change_rate(state)
             if callback is not None:
                 callback(state, metrics)
+            if ckpt_dir and ckpt_every and (it + 1) % ckpt_every == 0:
+                self.save_model(state)
+                last_saved = int(state.iteration)
             if target_perplexity is not None and llh_every and metrics:
                 if self.perplexity(state) <= target_perplexity:
                     break
+        if ckpt_dir and int(state.iteration) != last_saved:
+            self.save_model(state)
         return state

@@ -12,6 +12,10 @@ simulate N devices.
         [--corpus path.libsvm] [--ckpt DIR] [--algorithm <registered-name>]
         [--delta-dtype int16] [--exclusion-start 30]
     PYTHONPATH=src python -m repro.launch.train --list-algorithms
+
+``--checkpoint-dir`` writes *model* checkpoints (N_wk/N_k + hyper) on both
+paths — the artifact ``launch/serve_lda.py`` serves from. (``--ckpt`` on
+the mesh path remains the elastic *training* checkpoint: assignments only.)
 """
 import argparse
 import os
@@ -38,8 +42,17 @@ def main() -> None:
     ap.add_argument("--delta-dtype", default="int32",
                     choices=["int32", "int16", "int8"])
     ap.add_argument("--exclusion-start", type=int, default=0)
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="mesh-path training checkpoints (assignments)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="model checkpoints (N_wk/N_k + hyper) for serving")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="model-checkpoint cadence (0 = final only)")
     ap.add_argument("--llh-every", type=int, default=10)
+    ap.add_argument("--synthetic-docs", type=int, default=1000,
+                    help="synthetic corpus size (when --corpus is not given)")
+    ap.add_argument("--synthetic-words", type=int, default=2000)
+    ap.add_argument("--synthetic-len", type=int, default=80)
     args = ap.parse_args()
 
     if args.host_devices:
@@ -70,8 +83,9 @@ def main() -> None:
     if args.corpus:
         corpus = load_libsvm(args.corpus)
     else:
-        corpus = synthetic_corpus(0, num_docs=1000, num_words=2000,
-                                  avg_doc_len=80, zipf_a=1.2)
+        corpus = synthetic_corpus(0, num_docs=args.synthetic_docs,
+                                  num_words=args.synthetic_words,
+                                  avg_doc_len=args.synthetic_len, zipf_a=1.2)
     hyper = LDAHyperParams(num_topics=args.topics)
 
     if args.single_box or not backend.supports_shard_map:
@@ -95,6 +109,8 @@ def main() -> None:
             algorithm=args.algorithm,
             max_kd=args.max_kd or 0,  # 0 = auto-size from the counts
             exclusion=excl,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
         ))
         print(f"single-box  algorithm={args.algorithm}  "
               f"tokens={corpus.num_tokens}")
@@ -109,6 +125,10 @@ def main() -> None:
                          llh_every=args.llh_every, callback=cb)
         print(f"finished at iteration {int(final.iteration)}; "
               f"final llh {tr.llh(final):.1f}")
+        if args.checkpoint_dir:
+            print(f"model checkpoint: {args.checkpoint_dir} "
+                  f"(serve with: python -m repro.launch.serve_lda "
+                  f"--checkpoint-dir {args.checkpoint_dir})")
         return
 
     from repro.core.distributed import (
@@ -172,6 +192,21 @@ def main() -> None:
     final = loop.run(state)
     print(f"finished at iteration {int(final.iteration)}; "
           f"final llh {float(llh(final, data)):.1f}")
+    if args.checkpoint_dir:
+        # gather the (padded) sharded model and map the grid's relabeled
+        # word ids back to the corpus vocabulary
+        from repro.train.checkpoint import save_lda_model
+
+        n_wk_grid = np.asarray(jax.device_get(final.n_wk))
+        n_wk = n_wk_grid[grid.word_perm]  # (W, K) in original word ids
+        n_k = np.asarray(jax.device_get(final.n_k))
+        path = save_lda_model(
+            args.checkpoint_dir, n_wk, n_k, hyper,
+            step=int(final.iteration),
+            extra_metadata={"algorithm": args.algorithm,
+                            "mesh": [args.rows, args.cols]},
+        )
+        print(f"model checkpoint: {path}")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,9 @@
 from repro.serving.engine import ServeConfig, ServingEngine  # noqa: F401
+from repro.serving.lda_engine import (  # noqa: F401
+    FrozenLDAModel,
+    InferRequest,
+    LDAEngine,
+    LDAServeConfig,
+    doc_completion_perplexity,
+    docs_from_corpus,
+)

@@ -1,0 +1,431 @@
+"""Batched topic-inference serving engine over a frozen trained model.
+
+This is the deployment half of the paper's system (§4.3 "Model
+inference"): training produces ``N_w|k``/``N_k``; downstream traffic is
+unseen documents whose topic mixture theta must be inferred at high
+throughput. The engine:
+
+* freezes the trained counts into a :class:`FrozenLDAModel` (plus any
+  backend-specific sampling tables via ``SamplerBackend.prepare_infer`` —
+  e.g. ``zen_cdf`` builds its per-word CDFs once, for the engine's whole
+  lifetime);
+* packs incoming documents into **length-bucketed padded batches** — one
+  slot array per bucket width, so every jitted sweep sees a fixed shape
+  and XLA compiles each bucket exactly once;
+* runs continuously-admitting multi-document CGS sweeps through the
+  ``repro.algorithms`` registry's ``infer_sweep`` capability: finished
+  slots are refilled from the queue every step (the continuous-batching
+  idea of ``serving/engine.py``, applied to Gibbs sweeps instead of
+  decode steps).
+
+Statistical contract: each request's chain consumes randomness only from
+its own key, with the same schedule as the single-doc oracle
+``repro.core.inference.cgs_infer`` (z0 from ``randint(key)``, sweep j
+from ``split(key)[j]``). For the default (dense) backend with cdf
+sampling this makes a served document's theta *bit-identical* to
+``cgs_infer(key, ...)`` regardless of bucket padding or batch
+composition — the property ``tests/test_lda_engine.py`` pins down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import algorithms
+from repro.algorithms import SamplerKnobs
+from repro.core.types import LDAHyperParams
+
+
+@dataclasses.dataclass(frozen=True)
+class FrozenLDAModel:
+    """A trained LDA model frozen for serving: counts + hyper-parameters."""
+
+    n_wk: jax.Array  # (W, K) int32 word-topic counts
+    n_k: jax.Array  # (K,) int32 topic totals
+    hyper: LDAHyperParams
+
+    @property
+    def num_words(self) -> int:
+        return int(self.n_wk.shape[0])
+
+    @property
+    def num_topics(self) -> int:
+        return int(self.n_wk.shape[1])
+
+    def phi(self) -> jax.Array:
+        """Smoothed topic-word distributions, (W, K) column-normalized."""
+        w_beta = self.num_words * self.hyper.beta
+        return (self.n_wk.astype(jnp.float32) + self.hyper.beta) / (
+            self.n_k.astype(jnp.float32) + w_beta
+        )[None, :]
+
+    @classmethod
+    def from_state(cls, state, hyper: LDAHyperParams) -> "FrozenLDAModel":
+        """Freeze a trainer ``CGSState`` (single-box or gathered)."""
+        return cls(
+            n_wk=jnp.asarray(state.n_wk, jnp.int32),
+            n_k=jnp.asarray(state.n_k, jnp.int32),
+            hyper=hyper,
+        )
+
+    @classmethod
+    def from_checkpoint(cls, directory: str) -> "FrozenLDAModel":
+        """Load the newest committed model checkpoint (see
+        ``repro.train.checkpoint.save_lda_model``)."""
+        from repro.train.checkpoint import load_lda_model
+
+        n_wk, n_k, hyper, _meta, _step = load_lda_model(directory)
+        return cls(
+            n_wk=jnp.asarray(n_wk, jnp.int32),
+            n_k=jnp.asarray(n_k, jnp.int32),
+            hyper=hyper,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAServeConfig:
+    """Engine knobs.
+
+    ``burn_in < 0`` (default) reproduces the oracle estimator: theta from
+    the final sweep's doc-topic counts. ``burn_in >= 0`` switches to the
+    posterior-mean estimator: counts are sampled every ``thin`` sweeps
+    after the first ``burn_in`` and theta is their average — better
+    quality per sweep, no longer bit-comparable to ``cgs_infer``.
+    """
+
+    buckets: Tuple[int, ...] = (32, 64, 128, 256)
+    max_batch: int = 32  # slots per bucket
+    num_sweeps: int = 10
+    burn_in: int = -1  # < 0 => final-sweep theta (oracle-compatible)
+    thin: int = 1
+    algorithm: str = "zen"  # any algorithms.registered() name
+    sampling_method: str = "cdf"  # cdf | gumbel (dense default path)
+    max_kd: int = 0  # zen_cdf doc-row width (0 = backend default)
+
+    def knobs(self) -> SamplerKnobs:
+        return SamplerKnobs(
+            sampling_method=self.sampling_method, max_kd=self.max_kd
+        )
+
+
+@dataclasses.dataclass
+class InferRequest:
+    uid: int
+    words: np.ndarray  # filtered (and possibly truncated) token ids
+    key: jax.Array  # the request's whole-chain PRNG key
+    num_sweeps: int
+    burn_in: int
+    thin: int
+    orig_len: int = 0
+    truncated: bool = False
+    dropped_unknown: int = 0
+    theta: Optional[np.ndarray] = None
+    done: bool = False
+    # in-flight bookkeeping
+    sweeps_done: int = 0
+    theta_sum: Optional[np.ndarray] = None
+    theta_samples: int = 0
+
+
+class _Bucket:
+    """One fixed-shape slot batch: all device state for bucket width L."""
+
+    def __init__(self, length: int, slots: int, num_topics: int):
+        self.length = length
+        self.words = jnp.zeros((slots, length), jnp.int32)
+        self.mask = jnp.zeros((slots, length), bool)
+        self.z = jnp.zeros((slots, length), jnp.int32)
+        self.n_kd = jnp.zeros((slots, num_topics), jnp.int32)
+        self.active: List[Optional[InferRequest]] = [None] * slots
+        self.sweep_keys: List[Optional[jax.Array]] = [None] * slots
+
+    def free_slot(self) -> Optional[int]:
+        for s, r in enumerate(self.active):
+            if r is None:
+                return s
+        return None
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.active)
+
+
+class LDAEngine:
+    """Continuously-admitting batched frozen-model inference."""
+
+    def __init__(self, model: FrozenLDAModel, cfg: LDAServeConfig,
+                 seed: int = 0):
+        if not cfg.buckets:
+            raise ValueError("need at least one bucket length")
+        self.model = model
+        self.cfg = cfg
+        self.backend = algorithms.get(cfg.algorithm)
+        self._knobs = cfg.knobs()
+        self._aux = self.backend.prepare_infer(
+            model.n_wk, model.n_k, model.hyper, self._knobs
+        )
+        self._alpha_k = np.asarray(model.hyper.alpha_k(model.n_k), np.float32)
+        self._buckets = {
+            length: _Bucket(length, cfg.max_batch, model.num_topics)
+            for length in sorted(cfg.buckets)
+        }
+        self._sweep_fns: Dict[int, Any] = {}
+        self._base_key = jax.random.key(seed)
+        self._dummy_key = jax.random.key(0)
+        self.queue: List[InferRequest] = []
+        self._instant: List[InferRequest] = []  # empty docs: done at submit
+        self._uid = 0
+        self.docs_done = 0
+        self.sweeps_run = 0  # jitted bucket sweeps executed
+
+    # -- request intake ----------------------------------------------------
+    def submit(
+        self,
+        words,
+        key: Optional[jax.Array] = None,
+        num_sweeps: Optional[int] = None,
+        burn_in: Optional[int] = None,
+        thin: Optional[int] = None,
+    ) -> int:
+        """Queue one document; returns its uid.
+
+        Unknown word ids (outside the model vocabulary) are dropped;
+        over-long documents are truncated to the widest bucket; a document
+        that ends up empty completes immediately with the prior theta.
+        """
+        self._uid += 1
+        raw = np.asarray(words, np.int32).ravel()
+        known = raw[(raw >= 0) & (raw < self.model.num_words)]
+        max_len = max(self._buckets)
+        req = InferRequest(
+            uid=self._uid,
+            words=known[:max_len],
+            key=key if key is not None
+            else jax.random.fold_in(self._base_key, self._uid),
+            num_sweeps=self.cfg.num_sweeps if num_sweeps is None
+            else num_sweeps,
+            burn_in=self.cfg.burn_in if burn_in is None else burn_in,
+            thin=max(1, self.cfg.thin if thin is None else thin),
+            orig_len=int(raw.shape[0]),
+            truncated=known.shape[0] > max_len,
+            dropped_unknown=int(raw.shape[0] - known.shape[0]),
+        )
+        if req.words.shape[0] == 0:
+            # nothing observed: theta is the normalized prior
+            req.theta = self._alpha_k / self._alpha_k.sum()
+            req.done = True
+            self.docs_done += 1
+            self._instant.append(req)
+        elif req.num_sweeps <= 0:
+            # zero sweeps: theta straight from the z0 assignment, matching
+            # the oracle's empty scan (never occupies a slot)
+            z0 = np.asarray(jax.random.randint(
+                req.key, (req.words.shape[0],), 0, self.model.num_topics,
+                dtype=jnp.int32,
+            ))
+            n_kd0 = np.bincount(
+                z0, minlength=self.model.num_topics
+            ).astype(np.int32)
+            req.theta = self._theta(req, n_kd0)
+            req.done = True
+            self.docs_done += 1
+            self._instant.append(req)
+        else:
+            self.queue.append(req)
+        return req.uid
+
+    # -- admission ---------------------------------------------------------
+    def _bucket_for(self, length: int) -> _Bucket:
+        for bl in sorted(self._buckets):
+            if length <= bl:
+                return self._buckets[bl]
+        return self._buckets[max(self._buckets)]
+
+    def _admit(self) -> None:
+        still_queued = []
+        for req in self.queue:
+            bucket = self._bucket_for(req.words.shape[0])
+            slot = bucket.free_slot()
+            if slot is None:
+                still_queued.append(req)
+                continue
+            self._place(req, bucket, slot)
+        self.queue = still_queued
+
+    def _place(self, req: InferRequest, bucket: _Bucket, slot: int) -> None:
+        l, k = bucket.length, self.model.num_topics
+        n = req.words.shape[0]
+        words = np.zeros(l, np.int32)
+        words[:n] = req.words
+        mask = np.zeros(l, bool)
+        mask[:n] = True
+        # same schedule as cgs_infer: z0 from the request key itself, sweep
+        # j from split(key)[j]; randint/uniform draws are prefix-stable in
+        # the padded length, so the bucket width never changes the chain
+        z0 = jax.random.randint(req.key, (l,), 0, k, dtype=jnp.int32)
+        z0_np = np.asarray(z0)
+        n_kd = np.bincount(z0_np[:n], minlength=k).astype(np.int32)
+        bucket.words = bucket.words.at[slot].set(jnp.asarray(words))
+        bucket.mask = bucket.mask.at[slot].set(jnp.asarray(mask))
+        bucket.z = bucket.z.at[slot].set(z0)
+        bucket.n_kd = bucket.n_kd.at[slot].set(jnp.asarray(n_kd))
+        bucket.active[slot] = req
+        bucket.sweep_keys[slot] = (
+            jax.random.split(req.key, req.num_sweeps)
+            if req.num_sweeps > 0 else None
+        )
+
+    # -- the jitted per-bucket sweep ----------------------------------------
+    def _sweep_fn(self, length: int):
+        if length not in self._sweep_fns:
+            backend, hyper, knobs = self.backend, self.model.hyper, self._knobs
+
+            def fn(keys, words, mask, z, n_kd, n_wk, n_k, aux):
+                z_new = backend.infer_sweep(
+                    keys, words, mask, z, n_kd, n_wk, n_k, hyper, knobs, aux
+                )
+                z_new = jnp.where(mask, z_new, z)
+                onehot = (
+                    jax.nn.one_hot(z_new, hyper.num_topics, dtype=jnp.int32)
+                    * mask[..., None]
+                )
+                return z_new, jnp.sum(onehot, axis=1)
+
+            self._sweep_fns[length] = jax.jit(fn)
+        return self._sweep_fns[length]
+
+    # -- stepping ----------------------------------------------------------
+    def step(self) -> List[InferRequest]:
+        """Admit, run one sweep per non-empty bucket, finish ripe requests."""
+        self._admit()
+        finished, self._instant = self._instant, []
+        for bucket in self._buckets.values():
+            if bucket.num_active == 0:
+                continue
+            keys = jnp.stack([
+                bucket.sweep_keys[s][bucket.active[s].sweeps_done]
+                if bucket.active[s] is not None
+                and bucket.sweep_keys[s] is not None
+                and bucket.active[s].sweeps_done
+                < bucket.active[s].num_sweeps
+                else self._dummy_key
+                for s in range(len(bucket.active))
+            ])
+            bucket.z, bucket.n_kd = self._sweep_fn(bucket.length)(
+                keys, bucket.words, bucket.mask, bucket.z, bucket.n_kd,
+                self.model.n_wk, self.model.n_k, self._aux,
+            )
+            self.sweeps_run += 1
+            n_kd_host = None
+            for slot, req in enumerate(bucket.active):
+                if req is None:
+                    continue
+                req.sweeps_done += 1
+                want_sample = (
+                    req.burn_in >= 0
+                    and req.sweeps_done > req.burn_in
+                    and (req.sweeps_done - req.burn_in) % req.thin == 0
+                )
+                ripe = req.sweeps_done >= req.num_sweeps
+                if want_sample or ripe:
+                    if n_kd_host is None:
+                        n_kd_host = np.asarray(bucket.n_kd)
+                    if want_sample:
+                        if req.theta_sum is None:
+                            req.theta_sum = np.zeros(
+                                self.model.num_topics, np.float32
+                            )
+                        req.theta_sum += self._theta(req, n_kd_host[slot])
+                        req.theta_samples += 1
+                if ripe:
+                    self._finish(req, bucket, slot,
+                                 None if n_kd_host is None
+                                 else n_kd_host[slot])
+                    finished.append(req)
+        return finished
+
+    def _theta(self, req: InferRequest, n_kd_row: np.ndarray) -> np.ndarray:
+        l = req.words.shape[0]
+        return (n_kd_row.astype(np.float32) + self._alpha_k) / (
+            l + self._alpha_k.sum()
+        )
+
+    def _finish(self, req: InferRequest, bucket: _Bucket, slot: int,
+                n_kd_row: Optional[np.ndarray]) -> None:
+        if req.theta_samples:
+            req.theta = req.theta_sum / req.theta_samples
+        else:
+            if n_kd_row is None:  # num_sweeps == 0: counts from z0
+                n_kd_row = np.asarray(bucket.n_kd[slot])
+            req.theta = self._theta(req, n_kd_row)
+        req.done = True
+        bucket.active[slot] = None
+        bucket.sweep_keys[slot] = None
+        bucket.mask = bucket.mask.at[slot].set(False)
+        self.docs_done += 1
+
+    def run_until_done(self, max_steps: int = 100_000) -> List[InferRequest]:
+        done: List[InferRequest] = list(self._instant)
+        self._instant = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if not self.queue and all(
+                b.num_active == 0 for b in self._buckets.values()
+            ):
+                break
+        return done
+
+    def infer_batch(self, docs: Sequence, **submit_kw) -> np.ndarray:
+        """Submit many documents, drain the engine, return (N, K) thetas in
+        submission order."""
+        uids = [self.submit(d, **submit_kw) for d in docs]
+        by_uid = {r.uid: r for r in self.run_until_done()}
+        missing = [u for u in uids if u not in by_uid]
+        if missing:
+            raise RuntimeError(f"engine did not finish requests {missing}")
+        return np.stack([by_uid[u].theta for u in uids])
+
+
+# -- held-out evaluation ---------------------------------------------------
+def doc_completion_perplexity(
+    engine: LDAEngine, docs: Sequence[np.ndarray]
+) -> float:
+    """Doc-completion held-out perplexity (Wallach et al.'s estimator).
+
+    Each document is split alternately into an observed half (theta is
+    inferred on it through the engine) and a held-out half, scored as
+    ``p(w | theta, phi)``. Lower is better; this is the serving-quality
+    number ``launch/serve_lda.py --eval`` reports.
+    """
+    observed, heldout = [], []
+    for d in docs:
+        d = np.asarray(d, np.int32)
+        observed.append(d[0::2])
+        heldout.append(d[1::2])
+    thetas = engine.infer_batch(observed)  # (N, K)
+    phi = np.asarray(engine.model.phi(), np.float32)  # (W, K)
+    total_ll, total_tokens = 0.0, 0
+    for theta, held in zip(thetas, heldout):
+        held = held[(held >= 0) & (held < engine.model.num_words)]
+        if held.shape[0] == 0:
+            continue
+        p = phi[held] @ theta  # (n,)
+        total_ll += float(np.sum(np.log(np.maximum(p, 1e-30))))
+        total_tokens += int(held.shape[0])
+    if total_tokens == 0:
+        return float("nan")
+    return float(np.exp(-total_ll / total_tokens))
+
+
+def docs_from_corpus(corpus) -> List[np.ndarray]:
+    """Split an edge-list ``Corpus`` into per-document token arrays."""
+    words = np.asarray(corpus.word)
+    docs = np.asarray(corpus.doc)
+    order = np.argsort(docs, kind="stable")
+    words, docs = words[order], docs[order]
+    bounds = np.searchsorted(docs, np.arange(corpus.num_docs + 1))
+    return [words[bounds[d]:bounds[d + 1]] for d in range(corpus.num_docs)]

@@ -119,6 +119,59 @@ def restore_checkpoint(
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
 
 
+# -- trained-model checkpoints (the serving handoff) -----------------------
+# A *model* checkpoint is the frozen serving artifact: N_w|k + N_k + the
+# hyper-parameters, unlike the training checkpoints above which store
+# assignments (counts rebuild elastically). ``launch/train.py
+# --checkpoint-dir`` writes these; ``serving.FrozenLDAModel.from_checkpoint``
+# / ``launch/serve_lda.py`` read them.
+_LDA_MODEL_KIND = "lda_model"
+
+
+def save_lda_model(
+    directory: str,
+    n_wk,
+    n_k,
+    hyper,
+    step: int = 0,
+    extra_metadata: Optional[Dict] = None,
+    keep: int = 3,
+) -> str:
+    """Checkpoint a trained model for serving (atomic + checksummed)."""
+    meta = {
+        "kind": _LDA_MODEL_KIND,
+        "hyper": dataclasses.asdict(hyper),
+        **(extra_metadata or {}),
+    }
+    manager = CheckpointManager(directory, keep=keep)
+    return manager.save(step, {"n_k": n_k, "n_wk": n_wk}, meta)
+
+
+def load_lda_model(directory: str):
+    """Newest committed model checkpoint -> (n_wk, n_k, hyper, meta, step).
+
+    Raises ``FileNotFoundError`` when the directory holds no valid model
+    checkpoint.
+    """
+    from repro.core.types import LDAHyperParams
+
+    manager = CheckpointManager(directory)
+    # placeholder leaves (None would flatten to an empty pytree)
+    got = manager.restore_latest({"n_k": 0, "n_wk": 0})
+    if got is None:
+        raise FileNotFoundError(
+            f"no committed LDA model checkpoint under {directory!r}"
+        )
+    tree, meta, step = got
+    if meta.get("kind") != _LDA_MODEL_KIND:
+        raise FileNotFoundError(
+            f"checkpoint under {directory!r} is not an LDA model "
+            f"(kind={meta.get('kind')!r}); train with --checkpoint-dir"
+        )
+    hyper = LDAHyperParams(**meta["hyper"])
+    return tree["n_wk"], tree["n_k"], hyper, meta, step
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
