@@ -3,9 +3,16 @@ log-likelihood after equal iterations, all on the shared substrate
 ("the only difference is the algorithm").
 
 The sweep list IS the registry: a newly registered backend shows up here
-with zero benchmark changes."""
+with zero benchmark changes — on BOTH axes: the single-box sweep below,
+and a mesh x backend sweep that times the distributed step for every
+``supports_shard_map`` backend on a simulated 2-device CPU mesh. The mesh
+cells run in a subprocess because the host device count locks at first
+jax init (same trick as tests/helpers.py)."""
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -14,6 +21,76 @@ from benchmarks.common import row
 from repro import algorithms
 from repro.core import LDATrainer, TrainConfig, LDAHyperParams
 from repro.data import synthetic_lda_corpus
+
+_MESH_CHILD = """
+import warnings; warnings.filterwarnings('ignore')
+import time
+import jax, jax.numpy as jnp, numpy as np
+from repro.data import synthetic_lda_corpus
+from repro.core.types import LDAHyperParams
+from repro.core.graph import grid_partition
+from repro.launch.mesh import make_mesh
+from repro.core.distributed import (DistConfig, init_dist_state,
+                                    make_dist_step, resolve_dist_row_pads)
+corpus, _ = synthetic_lda_corpus(0, num_docs=400, num_words=800,
+                                 num_topics=32, avg_doc_len=64)
+hyper = LDAHyperParams(num_topics=32, alpha=0.05, beta=0.01)
+mesh = make_mesh((1, 2), ('data', 'model'))
+grid = grid_partition(corpus, 1, 2)
+state, data = init_dist_state(jax.random.key(0), mesh, grid, hyper)
+cfg = resolve_dist_row_pads(state, DistConfig(algorithm={alg!r},
+                                              max_kd=0, max_kw=0))
+step = make_dist_step(mesh, hyper, cfg, grid.words_per_shard,
+                      grid.docs_per_shard)
+state = step(state, data)  # warm compile
+jax.block_until_ready(state.n_k)
+t0 = time.perf_counter()
+for _ in range({iters}):
+    state = step(state, data)
+jax.block_until_ready(state.n_k)
+print('US_PER_ITER', (time.perf_counter() - t0) / {iters} * 1e6)
+"""
+
+
+def mesh_sweep(iters: int = 5) -> None:
+    """fig3 mesh axis: distributed step time for every mesh-capable
+    backend, 2 simulated CPU devices, (1, 2) data x model mesh."""
+    import repro
+
+    # repro is a namespace package (no __init__.py): locate src via __path__
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=2 "
+        + env.get("XLA_FLAGS", "")
+    ).strip()
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    from repro.launch.mesh import mesh_backends
+
+    for alg in mesh_backends():
+        # a bad cell (timeout, crash, missing marker) records an error row
+        # and the sweep moves on — one backend never aborts the whole run
+        try:
+            out = subprocess.run(
+                [sys.executable, "-c",
+                 _MESH_CHILD.format(alg=alg, iters=iters)],
+                env=env, capture_output=True, text=True, timeout=1800,
+            )
+        except subprocess.TimeoutExpired:
+            row(f"fig3_mesh2dev_time_per_iter_{alg}", float("nan"),
+                "error=timeout")
+            continue
+        us = next(
+            (float(line.split()[1]) for line in out.stdout.splitlines()
+             if line.startswith("US_PER_ITER")),
+            None,
+        )
+        if out.returncode != 0 or us is None:
+            err = out.stderr.strip().splitlines()
+            row(f"fig3_mesh2dev_time_per_iter_{alg}", float("nan"),
+                "error=" + err[-1][:80] if err else "error")
+            continue
+        row(f"fig3_mesh2dev_time_per_iter_{alg}", us)
 
 
 def main(iters: int = 10):
@@ -46,6 +123,7 @@ def main(iters: int = 10):
         f"ratio={results['sparselda'][0] / z:.2f}")
     row("fig4_llh_zen_minus_lightlda", 0.0,
         f"delta={results['zen_sparse'][1] - results['lightlda'][1]:.1f}")
+    mesh_sweep()
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from repro.algorithms.base import (  # noqa: F401
     SamplerBackend,
     SamplerKnobs,
     auto_pad,
+    fill_cell_row_pads,
     resolve_row_pads,
 )
 from repro.algorithms.registry import (  # noqa: F401

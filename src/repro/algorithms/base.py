@@ -37,6 +37,16 @@ Capability flags let drivers adapt instead of hard-coding per-name logic:
   unconditionally; the flag tells them the aux is a corpus-sized structure
   worth budgeting for, not a behavior switch).
 
+Backends also *declare their cell workspace shapes*: the distributed step
+calls ``resolve_cell_knobs(knobs, hyper)`` once at trace time, and the
+backend fills every knob that sizes a static per-cell workspace (padded
+row widths, tile sizes). Inside ``shard_map`` nothing can be data-derived,
+so 0/auto knobs must become concrete static widths here; drivers then
+treat the returned knobs as the backend's actual workspace commitment
+(benchmarks and launch scripts report them). Data-driven widths come from
+the *shards* instead: ``repro.core.distributed.resolve_dist_row_pads``
+fills 0 knobs from the sharded counts before the step is built.
+
 ``CellBackend`` derives the single-box ``sweep`` from ``cell_sweep`` by
 treating the whole corpus as one cell — this is what makes the distributed
 algorithms (``zen_cdf``, ``zen_dense``, ``zen_pallas``) selectable from the
@@ -98,6 +108,19 @@ class SamplerBackend:
         raise NotImplementedError(
             f"backend {self.name!r} does not support shard_map cells"
         )
+
+    def resolve_cell_knobs(
+        self, knobs: SamplerKnobs, hyper
+    ) -> SamplerKnobs:
+        """Declare the static per-cell workspace the backend will use.
+
+        Called once by ``make_dist_step`` before tracing: every knob that
+        sizes a ``cell_sweep`` workspace (padded row widths, tiles) must
+        come back concrete — 0/auto values replaced by the backend's
+        static defaults, capacities clamped to K. The default declares no
+        workspace (dense backends size everything from the shard blocks
+        themselves)."""
+        return knobs
 
     # -- frozen-model serving (repro.serving.lda_engine) -------------------
     native_infer: bool = False
@@ -187,6 +210,15 @@ class CellBackend(SamplerBackend):
 
     supports_shard_map = True
 
+    def resolve_cell_knobs(self, knobs: SamplerKnobs, hyper) -> SamplerKnobs:
+        """Padded-row backends (``needs_row_pads``) share one workspace
+        declaration: auto widths become the static defaults, clamped to K
+        (``fill_cell_row_pads``). Idempotent, so cell sweeps may re-apply
+        it defensively for direct callers that skipped resolution."""
+        if self.needs_row_pads:
+            return fill_cell_row_pads(knobs, hyper.num_topics)
+        return knobs
+
     def sweep(self, state, corpus, hyper, knobs, aux=None):
         key = jax.random.fold_in(state.rng, state.iteration)
         mask = jnp.ones(corpus.word.shape, bool)
@@ -223,7 +255,8 @@ def auto_pad(n: jax.Array, multiple: int = 8) -> int:
 
 def resolve_row_pads(state, knobs: SamplerKnobs) -> SamplerKnobs:
     """Fill max_kw/max_kd = 0 from the current counts (host-side; not for
-    use inside jit/shard_map — distributed configs set the widths)."""
+    use inside jit/shard_map — the distributed path resolves widths via
+    ``resolve_dist_row_pads`` / ``resolve_cell_knobs`` instead)."""
     if knobs.max_kw and knobs.max_kd:
         return knobs
     from repro.core.zen_sparse import max_row_nnz
@@ -231,3 +264,29 @@ def resolve_row_pads(state, knobs: SamplerKnobs) -> SamplerKnobs:
     max_kw = knobs.max_kw or auto_pad(max_row_nnz(state.n_wk))
     max_kd = knobs.max_kd or auto_pad(max_row_nnz(state.n_kd))
     return dataclasses.replace(knobs, max_kw=max_kw, max_kd=max_kd)
+
+
+# static fallback row widths for padded-sparse cell sweeps when nothing
+# data-driven was resolved: shard_map workspaces need concrete shapes, and
+# these match the paper's observed row-sparsity regime (K_d smaller than
+# K_w; both clamped to K so small-topic runs never over-pad)
+DEFAULT_CELL_MAX_KW = 128
+DEFAULT_CELL_MAX_KD = 64
+
+
+def fill_cell_row_pads(
+    knobs: SamplerKnobs,
+    num_topics: int,
+    default_kw: int = DEFAULT_CELL_MAX_KW,
+    default_kd: int = DEFAULT_CELL_MAX_KD,
+) -> SamplerKnobs:
+    """Make the padded-row widths concrete for a cell workspace: 0/auto
+    becomes the static default clamped to K (a row never holds more than K
+    live topics — wider pads are pure waste, the 'padding explodes'
+    failure mode). Explicit nonzero widths are honored untouched so
+    resolved single-box pads keep their exact (lane-rounded) shapes."""
+    return dataclasses.replace(
+        knobs,
+        max_kw=knobs.max_kw or min(default_kw, num_topics),
+        max_kd=knobs.max_kd or min(default_kd, num_topics),
+    )

@@ -9,6 +9,7 @@ resampling trick (§3.1).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -205,6 +206,12 @@ class ZenCdf(CellBackend):
     """Precomputed-CDF ZenLDA; works single-box (one cell) and sharded."""
 
     native_infer = True
+
+    def resolve_cell_knobs(self, knobs: SamplerKnobs, hyper):
+        return dataclasses.replace(
+            knobs,
+            max_kd=min(knobs.max_kd or DEFAULT_MAX_KD, hyper.num_topics),
+        )
 
     def cell_sweep(
         self, key, word, doc, z_old, mask, n_wk, n_kd, n_k, hyper,

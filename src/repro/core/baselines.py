@@ -31,18 +31,26 @@ from repro.core.zen_sparse import SparseRows, lookup_rows, sparsify_rows
 # SparseLDA
 # ---------------------------------------------------------------------------
 
-def sparselda_sweep(
-    state: CGSState,
-    corpus: Corpus,
+def sparselda_cell(
+    key: jax.Array,
+    word: jax.Array,  # (T,) shard-local word ids
+    doc: jax.Array,  # (T,) shard-local doc ids
+    z_old: jax.Array,  # (T,)
+    n_wk: jax.Array,  # (Ws, K) local block
+    n_kd: jax.Array,  # (Ds, K) local block
+    n_k: jax.Array,  # (K,) replicated
     hyper: LDAHyperParams,
+    num_words: int,  # global (padded) vocabulary — the W in W*beta
     max_kw: int,
     max_kd: int,
 ) -> jax.Array:
-    """One SparseLDA sweep (stale counts, exact self-exclusion). -> (E,)."""
-    terms = precompute_zen_terms(state.n_k, hyper, corpus.num_words)
-    kd_rows = sparsify_rows(state.n_kd, max_kd)
-    wk_rows = sparsify_rows(state.n_wk, max_kw)
-    w, d, z = corpus.word, corpus.doc, state.topic
+    """One SparseLDA pass over a cell's tokens (stale counts, exact
+    self-exclusion on the gathered values) -> (T,). Shard-relative: the
+    padded s/r/q rows are sparsified from the local count blocks only."""
+    terms = precompute_zen_terms(n_k, hyper, num_words)
+    kd_rows = sparsify_rows(n_kd, max_kd)
+    wk_rows = sparsify_rows(n_wk, max_kw)
+    w, d, z = word, doc, z_old
     k = hyper.num_topics
     beta = hyper.beta
 
@@ -75,7 +83,6 @@ def sparselda_sweep(
     q_mass = jnp.sum(q_vals, axis=-1)
 
     total = s_mass + r_mass + q_mass
-    key = jax.random.fold_in(state.rng, state.iteration)
     k_u, k_s = jax.random.split(key)
     u = jax.random.uniform(k_u, w.shape) * total
 
@@ -104,6 +111,22 @@ def sparselda_sweep(
     return jnp.minimum(z_new, k - 1).astype(jnp.int32)
 
 
+def sparselda_sweep(
+    state: CGSState,
+    corpus: Corpus,
+    hyper: LDAHyperParams,
+    max_kw: int,
+    max_kd: int,
+) -> jax.Array:
+    """One SparseLDA sweep (stale counts, exact self-exclusion). -> (E,)."""
+    key = jax.random.fold_in(state.rng, state.iteration)
+    return sparselda_cell(
+        key, corpus.word, corpus.doc, state.topic,
+        state.n_wk, state.n_kd, state.n_k, hyper, corpus.num_words,
+        max_kw, max_kd,
+    )
+
+
 # ---------------------------------------------------------------------------
 # LightLDA
 # ---------------------------------------------------------------------------
@@ -118,8 +141,23 @@ class DocIndex(NamedTuple):
 
 
 def build_doc_index(corpus: Corpus) -> DocIndex:
-    order = jnp.argsort(corpus.doc, stable=True).astype(jnp.int32)
-    lengths = jnp.zeros((corpus.num_docs,), jnp.int32).at[corpus.doc].add(1)
+    return build_cell_doc_index(
+        corpus.doc, jnp.ones(corpus.doc.shape, bool), corpus.num_docs
+    )
+
+
+def build_cell_doc_index(
+    doc: jax.Array, mask: jax.Array, num_docs: int
+) -> DocIndex:
+    """Trace-compatible ``DocIndex`` over one cell's (possibly padded)
+    tokens: masked-out tokens sort to the end behind a sentinel doc id and
+    contribute no length, so a doc's slice holds only its live local
+    tokens. With an all-true mask this reproduces ``build_doc_index``."""
+    sort_key = jnp.where(mask, doc, num_docs)
+    order = jnp.argsort(sort_key, stable=True).astype(jnp.int32)
+    lengths = (
+        jnp.zeros((num_docs,), jnp.int32).at[doc].add(mask.astype(jnp.int32))
+    )
     offsets = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(lengths).astype(jnp.int32)]
     )
@@ -127,37 +165,64 @@ def build_doc_index(corpus: Corpus) -> DocIndex:
 
 
 def _true_prob(
-    state: CGSState, w, d, z_self, ks, hyper: LDAHyperParams, num_words: int
+    n_wk_m, n_kd_m, n_k_v, w, d, z_self, ks, hyper: LDAHyperParams,
+    num_words: int,
 ):
     """Exact Eq. 3 p(k) at candidate topics ks (T,) with ¬dw exclusion."""
     self_hit = (ks == z_self).astype(jnp.float32)
-    n_wk = state.n_wk[w, ks].astype(jnp.float32) - self_hit
-    n_kd = state.n_kd[d, ks].astype(jnp.float32) - self_hit
-    n_k = state.n_k[ks].astype(jnp.float32) - self_hit
-    alpha_k = hyper.alpha_k(state.n_k)[ks]
+    n_wk = n_wk_m[w, ks].astype(jnp.float32) - self_hit
+    n_kd = n_kd_m[d, ks].astype(jnp.float32) - self_hit
+    n_k = n_k_v[ks].astype(jnp.float32) - self_hit
+    alpha_k = hyper.alpha_k(n_k_v)[ks]
     return (
         (n_wk + hyper.beta) / (n_k + num_words * hyper.beta) * (n_kd + alpha_k)
     )
 
 
-def lightlda_sweep(
-    state: CGSState,
-    corpus: Corpus,
+def lightlda_cell(
+    key: jax.Array,
+    word: jax.Array,  # (T,) shard-local word ids
+    doc: jax.Array,  # (T,) shard-local doc ids
+    z_old: jax.Array,  # (T,)
+    mask: jax.Array,  # (T,) bool — False on cell padding
+    n_wk: jax.Array,  # (Ws, K) local block
+    n_kd: jax.Array,  # (Ds, K) local block
+    n_k: jax.Array,  # (K,) replicated
     hyper: LDAHyperParams,
-    doc_index: DocIndex,
+    num_words: int,  # global (padded) vocabulary — the W in W*beta
+    doc_index: DocIndex,  # over THIS cell's tokens (shard-local doc ids)
     max_kw: int,
     num_mh: int = 8,
 ) -> jax.Array:
-    """One LightLDA sweep: ``num_mh`` cycle-MH steps per token. -> (E,)."""
+    """One LightLDA pass over a cell's tokens: ``num_mh`` cycle-MH steps
+    per token -> (T,).
+
+    Shard-relative: the word-proposal alias rows come from the local
+    ``n_wk`` block, and the O(1) doc proposal draws from the doc's tokens
+    *within this cell* (its word-shard slice). The proposal's MH density
+    must describe what was actually proposed, so ``doc_q`` is evaluated on
+    the cell-local doc-topic histogram of ``z_old`` — NOT the synced
+    ``n_kd`` block, which counts tokens on other word shards the proposal
+    can never draw. Acceptance targets the true conditional from the
+    synced blocks, so the chain is a valid MH sampler of Eq. 3 with a
+    locality-restricted proposal. Single-box (one cell, all tokens live)
+    the histogram equals ``n_kd`` exactly and draws are unchanged.
+    """
     k = hyper.num_topics
     beta = hyper.beta
-    w, d = corpus.word, corpus.doc
-    terms = precompute_zen_terms(state.n_k, hyper, corpus.num_words)
+    w, d = word, doc
+    terms = precompute_zen_terms(n_k, hyper, num_words)
     alpha_bar = jnp.mean(terms.alpha_k)  # doc proposal uses symmetric alpha
+    # the density the doc proposal actually samples from: this cell's live
+    # (doc, topic) histogram (== n_kd when the cell is the whole corpus)
+    n_kd_cell = (
+        jnp.zeros(n_kd.shape, jnp.int32)
+        .at[doc, z_old].add(mask.astype(jnp.int32))
+    )
 
     # word proposal = mixture of sparse part N_wk*t1 (per-word alias) and
     # dense part beta*t1 (one global alias shared by every word).
-    wk_rows = sparsify_rows(state.n_wk, max_kw)
+    wk_rows = sparsify_rows(n_wk, max_kw)
     t1 = jnp.concatenate([terms.t1, jnp.zeros((1,), jnp.float32)])
     w_vals = wk_rows.cnt.astype(jnp.float32) * t1[wk_rows.idx]
     w_alias = jax.vmap(build_alias)(w_vals)
@@ -189,7 +254,7 @@ def lightlda_sweep(
     def word_q(w_ids, ks, z_self):
         """q_w(k) ∝ (N_wk + beta) * t1[k], with self-exclusion skipped —
         LightLDA proposals are stale by construction."""
-        return (state.n_wk[w_ids, ks].astype(jnp.float32) + beta) * terms.t1[ks]
+        return (n_wk[w_ids, ks].astype(jnp.float32) + beta) * terms.t1[ks]
 
     def doc_proposal(key, d_ids):
         k1, k2, k3 = jax.random.split(key, 3)
@@ -204,15 +269,14 @@ def lightlda_sweep(
             (u * jnp.maximum(mass_doc, 1.0)).astype(jnp.int32),
             jnp.maximum(doc_index.lengths[d_ids] - 1, 0),
         )
-        z_doc = state.topic[doc_index.token_of[tok]]
+        z_doc = z_old[doc_index.token_of[tok]]
         z_unif = jax.random.randint(k3, d_ids.shape, 0, k, dtype=jnp.int32)
         return jnp.where(pick_doc, z_doc, z_unif)
 
     def doc_q(d_ids, ks):
-        return state.n_kd[d_ids, ks].astype(jnp.float32) + alpha_bar
+        return n_kd_cell[d_ids, ks].astype(jnp.float32) + alpha_bar
 
-    key = jax.random.fold_in(state.rng, state.iteration)
-    z0 = state.topic
+    z0 = z_old
 
     def mh_step(i, carry):
         z_cur, key = carry
@@ -223,13 +287,31 @@ def lightlda_sweep(
         z_d = doc_proposal(k_prop, d)
         z_new = jnp.where(use_word, z_w, z_d)
 
-        p_new = _true_prob(state, w, d, state.topic, z_new, hyper, corpus.num_words)
-        p_old = _true_prob(state, w, d, state.topic, z_cur, hyper, corpus.num_words)
-        q_new = jnp.where(use_word, word_q(w, z_new, state.topic), doc_q(d, z_new))
-        q_old = jnp.where(use_word, word_q(w, z_cur, state.topic), doc_q(d, z_cur))
+        p_new = _true_prob(n_wk, n_kd, n_k, w, d, z0, z_new, hyper, num_words)
+        p_old = _true_prob(n_wk, n_kd, n_k, w, d, z0, z_cur, hyper, num_words)
+        q_new = jnp.where(use_word, word_q(w, z_new, z0), doc_q(d, z_new))
+        q_old = jnp.where(use_word, word_q(w, z_cur, z0), doc_q(d, z_cur))
         ratio = (p_new * q_old) / jnp.maximum(p_old * q_new, 1e-30)
         accept = jax.random.uniform(k_acc, z_cur.shape) < jnp.minimum(ratio, 1.0)
         return jnp.where(accept, z_new, z_cur), key
 
     z, _ = jax.lax.fori_loop(0, num_mh, mh_step, (z0, key))
     return z.astype(jnp.int32)
+
+
+def lightlda_sweep(
+    state: CGSState,
+    corpus: Corpus,
+    hyper: LDAHyperParams,
+    doc_index: DocIndex,
+    max_kw: int,
+    num_mh: int = 8,
+) -> jax.Array:
+    """One LightLDA sweep: ``num_mh`` cycle-MH steps per token. -> (E,)."""
+    key = jax.random.fold_in(state.rng, state.iteration)
+    mask = jnp.ones(corpus.word.shape, bool)
+    return lightlda_cell(
+        key, corpus.word, corpus.doc, state.topic, mask,
+        state.n_wk, state.n_kd, state.n_k, hyper, corpus.num_words,
+        doc_index, max_kw, num_mh=num_mh,
+    )

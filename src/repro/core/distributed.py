@@ -18,10 +18,17 @@ One iteration, under ``shard_map`` on a ``(pod?, data, model)`` mesh:
 
 Sampling algorithms are resolved through the ``repro.algorithms`` registry
 (DESIGN.md §4): any backend with ``supports_shard_map`` plugs into step 3 —
-``zen_dense`` (dense Gumbel-max/CDF hillclimb baseline), ``zen_cdf`` (the
-TPU-native faithful path: precomputed CDFs + sparse doc rows + resampling
-remedy), and ``zen_pallas`` (the fused Gumbel-max Pallas kernel; interpret
-mode on CPU). The single-box trainer resolves the *same* entries.
+the dense paths (``zen_dense``, ``zen_cdf``, ``zen_pallas``) and the
+padded-sparse ones (``zen_sparse``, ``zen_hybrid``, ``sparselda``,
+``lightlda``), whose Alg. 2 row machinery runs cell-locally on the shard
+blocks. The single-box trainer resolves the *same* entries.
+
+The step makes no dense-backend assumptions: each backend declares its
+static per-cell workspace through ``resolve_cell_knobs`` (padded row
+widths, tiles), and data-driven widths are filled from the *sharded*
+counts by ``resolve_dist_row_pads`` before the step is built — capacities
+are per-shard row maxima (clamped to K), never a gather of the global
+matrices.
 """
 from __future__ import annotations
 
@@ -44,7 +51,13 @@ from repro.utils import compat
 class DistConfig:
     algorithm: str = "zen_cdf"  # any registered backend w/ supports_shard_map
     sampling_method: str = "gumbel"  # zen_dense: gumbel | cdf
-    max_kd: int = 64  # zen_cdf sparse doc-row width
+    # padded-sparse row widths (doc / word side). 0 = auto: fill from the
+    # sharded counts via ``resolve_dist_row_pads``, else the backend's
+    # static default via ``resolve_cell_knobs`` (shard_map workspaces need
+    # concrete widths at trace time).
+    max_kd: int = 0
+    max_kw: int = 0
+    num_mh: int = 8  # lightlda cycle-MH steps per token
     delta_dtype: str = "int32"  # int32 | int16 | int8 (psum payload width)
     rebuild_every: int = 0  # exact count rebuild period (0 = never)
     exclusion_start: int = 0  # 0 = disabled; else iteration to enable at
@@ -62,7 +75,9 @@ class DistConfig:
         """The shared backend knob dataclass (same one TrainConfig builds)."""
         return SamplerKnobs(
             sampling_method=self.sampling_method,
+            max_kw=self.max_kw,
             max_kd=self.max_kd,
+            num_mh=self.num_mh,
             token_chunk=self.token_chunk,
             bt=self.bt,
             bk=self.bk,
@@ -135,6 +150,41 @@ def _specs(mesh: Mesh) -> Tuple[DistLDAState, DistLDAData]:
 # The distributed step
 # ---------------------------------------------------------------------------
 
+def resolve_dist_row_pads(state: DistLDAState, cfg: DistConfig) -> DistConfig:
+    """Fill auto (0) padded-row widths from the *sharded* counts.
+
+    Capacity is the per-shard row maximum: the nnz reduction runs
+    shard-locally under the arrays' sharding (no shard gathers another's
+    block) and only two scalars reach the host. SPMD compiles one program
+    for all shards, so the static width is the max over the per-shard
+    maxima — lane-rounded and clamped to K (``shard_row_capacity``), which
+    keeps a hot word's global density from exploding every cell's pad.
+
+    The width is frozen into the compiled step, but rows keep moving: a
+    row that later grows past the capacity is *truncated by the sparse
+    tables* (its overflow topics become unproposable that iteration — a
+    sampling-quality bias, never a count-corruption, since the driver
+    merges deltas against the dense state). One lane multiple of headroom
+    is added against that drift; random init starts rows near their
+    occupancy ceiling, so growth past init+headroom is rare. Re-resolving
+    (and re-jitting) on the ``rebuild_every`` cadence is the full answer
+    and lives with the capacity follow-ups in ROADMAP.md.
+
+    Host-side, once per (re)build — not callable inside jit/shard_map.
+    """
+    backend = algorithms.get(cfg.algorithm)
+    if not backend.needs_row_pads or (cfg.max_kw and cfg.max_kd):
+        return cfg
+    from repro.core.zen_sparse import shard_row_capacity
+
+    k = state.n_wk.shape[-1]
+    return dataclasses.replace(
+        cfg,
+        max_kw=cfg.max_kw or min(shard_row_capacity(state.n_wk) + 8, k),
+        max_kd=cfg.max_kd or min(shard_row_capacity(state.n_kd) + 8, k),
+    )
+
+
 def _compress_psum(delta: jax.Array, axes, dtype: str) -> jax.Array:
     """Width-compressed collective (§5.2 delta aggregation, TPU realization).
 
@@ -169,7 +219,9 @@ def make_dist_step(
             f"mesh-capable backends: "
             f"{', '.join(n for n in algorithms.registered() if algorithms.get(n).supports_shard_map)}"
         )
-    knobs = cfg.knobs()
+    # the backend declares its static per-cell workspace (padded row
+    # widths, tiles): every auto knob must be concrete before tracing
+    knobs = backend.resolve_cell_knobs(cfg.knobs(), hyper)
 
     def local_step(state: DistLDAState, data: DistLDAData) -> DistLDAState:
         # local views --------------------------------------------------

@@ -61,6 +61,22 @@ def max_row_nnz(dense: jax.Array) -> jax.Array:
     return jnp.max(jnp.sum(dense > 0, axis=-1))
 
 
+def shard_row_capacity(dense_block: jax.Array, multiple: int = 8) -> int:
+    """Padded-row capacity for one shard's count block (host-side).
+
+    The capacity is computed from the rows the shard will actually
+    sparsify — a lane-friendly round-up of the block's max row nnz, capped
+    at K (a row can never hold more than K live topics, so any larger pad
+    is pure waste). On a sharded global-view array the reduction runs
+    shard-locally and only the scalar max crosses devices, so no shard ever
+    gathers another shard's block.
+    """
+    k = dense_block.shape[-1]
+    m = int(jax.device_get(max_row_nnz(dense_block)))
+    m = max(multiple, ((m + multiple - 1) // multiple) * multiple)
+    return min(m, k)
+
+
 def densify_rows(rows: SparseRows) -> jax.Array:
     r = rows.idx.shape[0]
     out = jnp.zeros((r, rows.num_topics + 1), jnp.int32)
@@ -209,6 +225,31 @@ def zen_sample_tokens(
     return jnp.where(take_second, z2, z1).astype(jnp.int32)
 
 
+def zen_sparse_cell(
+    key: jax.Array,
+    word: jax.Array,  # (T,) shard-local word ids
+    doc: jax.Array,  # (T,) shard-local doc ids
+    z_old: jax.Array,  # (T,)
+    n_wk: jax.Array,  # (Ws, K) local word-topic block
+    n_kd: jax.Array,  # (Ds, K) local doc-topic block
+    n_k: jax.Array,  # (K,) replicated
+    hyper: LDAHyperParams,
+    num_words: int,  # global (padded) vocabulary — the W in W*beta
+    max_kw: int,
+    max_kd: int,
+) -> jax.Array:
+    """One faithful ZenLDA pass over a cell's tokens (stale counts) -> (T,).
+
+    Everything is shard-relative: ids index the local count blocks, the
+    padded-sparse tables are built from the local blocks only (widths are
+    the *per-shard* capacities, see ``shard_row_capacity``), and only the
+    replicated ``n_k``/``num_words`` carry global scale. The single-box
+    sweep is this with the whole corpus as one cell.
+    """
+    tables = build_tables(n_wk, n_kd, n_k, hyper, num_words, max_kw, max_kd)
+    return zen_sample_tokens(key, tables, word, doc, z_old, hyper)
+
+
 def zen_sparse_sweep(
     state: CGSState,
     corpus: Corpus,
@@ -217,11 +258,9 @@ def zen_sparse_sweep(
     max_kd: int,
 ) -> jax.Array:
     """One faithful ZenLDA sweep over all tokens (stale counts). -> (E,)."""
-    tables = build_tables(
+    key = jax.random.fold_in(state.rng, state.iteration)
+    return zen_sparse_cell(
+        key, corpus.word, corpus.doc, state.topic,
         state.n_wk, state.n_kd, state.n_k, hyper, corpus.num_words,
         max_kw, max_kd,
-    )
-    key = jax.random.fold_in(state.rng, state.iteration)
-    return zen_sample_tokens(
-        key, tables, corpus.word, corpus.doc, state.topic, hyper
     )

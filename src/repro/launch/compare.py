@@ -31,9 +31,11 @@ def main():
         from repro import algorithms
         from repro.configs import get_config
         from repro.configs.base import LDAArchConfig
+        from repro.launch.mesh import mesh_backends
     except Exception as e:  # pragma: no cover - jax-less environments
         print(f"# (algorithm legend unavailable: {e})")
     else:
+        print(f"# mesh-capable backends: {', '.join(mesh_backends())}")
         for arch in sorted({k.split("|")[0] for k in base if "|" in k}):
             try:
                 cfg = get_config(arch)

@@ -18,3 +18,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / small runs)."""
     return _make_mesh(shape, axes)
+
+
+def mesh_backends():
+    """Registered sampler backends that can run on the mesh path (i.e.
+    declare a ``cell_sweep``). Since the padded-sparse backends went
+    cell-local this is every algorithm except the textbook ``std`` — the
+    launch CLIs no longer gate ``--algorithm`` choices beyond this list."""
+    from repro import algorithms
+
+    return tuple(
+        n for n in algorithms.registered()
+        if algorithms.get(n).supports_shard_map
+    )

@@ -1,11 +1,12 @@
 """LDA training driver (launch-level CLI) — any registered sampler backend.
 
-The algorithm name resolves through the ``repro.algorithms`` registry:
-backends with ``supports_shard_map`` (zen_cdf, zen_dense, zen_pallas, ...)
-run the distributed mesh path; the rest (zen_sparse, lightlda, ...) fall
-back to the single-box trainer on the same corpus. On a real TPU slice the
-mesh path runs under `jax.distributed`; on CPU hosts pass --host-devices to
-simulate N devices.
+The algorithm name resolves through the ``repro.algorithms`` registry.
+Every backend with ``supports_shard_map`` runs the distributed mesh path —
+the dense paths (zen_cdf, zen_dense, zen_pallas) *and* the padded-sparse
+ones (zen_sparse, zen_hybrid, sparselda, lightlda); only backends without
+a cell sweep (std) fall back to the single-box trainer. On a real TPU
+slice the mesh path runs under `jax.distributed`; on CPU hosts pass
+--host-devices to simulate N devices.
 
     PYTHONPATH=src python -m repro.launch.train \
         --rows 2 --cols 2 --host-devices 4 --iters 50 \
@@ -37,8 +38,12 @@ def main() -> None:
     ap.add_argument("--single-box", action="store_true",
                     help="force the single-box trainer path")
     ap.add_argument("--max-kd", type=int, default=None,
-                    help="sparse doc-row width (default: 64 on the mesh "
-                         "path, auto-sized on the single-box path)")
+                    help="sparse doc-row width (default: auto — resolved "
+                         "from the sharded counts on the mesh path, from "
+                         "the state on the single-box path)")
+    ap.add_argument("--max-kw", type=int, default=None,
+                    help="sparse word-row width (padded-sparse backends; "
+                         "default: auto, like --max-kd)")
     ap.add_argument("--delta-dtype", default="int32",
                     choices=["int32", "int16", "int8"])
     ap.add_argument("--exclusion-start", type=int, default=0)
@@ -108,6 +113,7 @@ def main() -> None:
         tr = LDATrainer(corpus, hyper, TrainConfig(
             algorithm=args.algorithm,
             max_kd=args.max_kd or 0,  # 0 = auto-size from the counts
+            max_kw=args.max_kw or 0,
             exclusion=excl,
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every,
@@ -137,6 +143,7 @@ def main() -> None:
         make_dist_llh,
         make_dist_step,
         make_rebuild_counts,
+        resolve_dist_row_pads,
     )
     from repro.core.graph import grid_partition
     from repro.launch.mesh import make_mesh
@@ -149,10 +156,17 @@ def main() -> None:
           f"pad={grid.padding_overhead:.2%}")
     dcfg = DistConfig(
         algorithm=args.algorithm,
-        max_kd=args.max_kd or 64,  # static width: shard_map needs a bound
+        max_kd=args.max_kd or 0,  # 0 = auto (resolved below / by backend)
+        max_kw=args.max_kw or 0,
         delta_dtype=args.delta_dtype, exclusion_start=args.exclusion_start,
     )
     state, data = init_dist_state(jax.random.key(0), mesh, grid, hyper)
+    # shard-relative padded-row capacities for the sparse backends: fill
+    # auto widths from the sharded init counts (per-shard maxima, not a
+    # global gather), so the cell workspaces are sized to the data
+    dcfg = resolve_dist_row_pads(state, dcfg)
+    if backend.needs_row_pads:
+        print(f"padded-row widths: max_kw={dcfg.max_kw} max_kd={dcfg.max_kd}")
     step = make_dist_step(mesh, hyper, dcfg, grid.words_per_shard,
                           grid.docs_per_shard)
     llh = make_dist_llh(mesh, hyper, grid.words_per_shard,

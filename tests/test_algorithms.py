@@ -41,9 +41,13 @@ def test_capability_flags():
     assert algorithms.get("zen_cdf").supports_shard_map
     assert algorithms.get("zen_pallas").supports_shard_map
     assert algorithms.get("zen").supports_shard_map
-    assert not algorithms.get("lightlda").supports_shard_map
+    # the padded-sparse backends are mesh-capable since their cell-local
+    # refactor; only the textbook std path stays single-box
+    for name in ("zen_sparse", "zen_hybrid", "sparselda", "lightlda"):
+        assert algorithms.get(name).supports_shard_map, name
+        assert algorithms.get(name).needs_row_pads, name
+    assert not algorithms.get("std").supports_shard_map
     assert algorithms.get("lightlda").needs_doc_index
-    assert algorithms.get("zen_sparse").needs_row_pads
 
 
 @pytest.mark.parametrize("name", algorithms.registered())
@@ -135,9 +139,77 @@ def test_dist_step_rejects_single_box_only_backends(key, tiny_corpus, tiny_hyper
     grid = grid_partition(tiny_corpus, 1, 1)
     with pytest.raises(ValueError, match="shard_map"):
         make_dist_step(
-            mesh, tiny_hyper, DistConfig(algorithm="lightlda"),
+            mesh, tiny_hyper, DistConfig(algorithm="std"),
             grid.words_per_shard, grid.docs_per_shard,
         )
+
+
+def test_hybrid_switch_uses_effective_rows():
+    """Regression (crafted corpus): the hybrid's switch prices each
+    constituent by the rows it will ACTUALLY sample — raw nnz clamped to
+    the padded capacity it sparsifies at — not by global row density."""
+    import jax.numpy as jnp
+
+    from repro.algorithms.zen_hybrid import hybrid_route_doc_side
+
+    k = 16
+    # doc 0: 10 live topics; word 0: 12 live topics. On raw density the
+    # doc side looks sparser (10 <= 12) — but with the word rows padded to
+    # 4 slots the word side samples a 4-wide row and must win.
+    n_kd = jnp.zeros((1, k), jnp.int32).at[0, :10].set(1)
+    n_wk = jnp.zeros((1, k), jnp.int32).at[0, :12].set(1)
+    word = jnp.zeros((3,), jnp.int32)
+    doc = jnp.zeros((3,), jnp.int32)
+
+    raw = hybrid_route_doc_side(n_wk, n_kd, word, doc, max_kw=16, max_kd=16)
+    assert bool(raw.all())  # unclamped: doc side (the old global decision)
+    clamped = hybrid_route_doc_side(n_wk, n_kd, word, doc, max_kw=4, max_kd=16)
+    assert not bool(clamped.any())  # truncated word rows are cheaper: switch
+    # symmetric: clamp the doc side instead and the doc side wins again
+    back = hybrid_route_doc_side(n_wk, n_kd, word, doc, max_kw=4, max_kd=2)
+    assert bool(back.all())
+
+
+def test_hybrid_cell_sweep_composes_constituents_by_route(
+    key, tiny_corpus, tiny_hyper
+):
+    """Integration: ZenHybrid.cell_sweep IS where(route, zen_sparse draw,
+    sparselda draw) — same key, same blocks, same (clamped) widths. Run
+    with a width split (max_kw < max_kd) so both routes are exercised and
+    a cell_sweep that mis-passed widths or re-derived the route inline
+    would produce different draws."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.algorithms.zen_hybrid import hybrid_route_doc_side
+    from repro.core.init import random_init
+
+    st = random_init(key, tiny_corpus, tiny_hyper)
+    hybrid = algorithms.get("zen_hybrid")
+    # clamp the doc side below K while word-row nnz spans [1, K] (zipf
+    # vocabulary: rare words hold few topics), so both routes are taken
+    knobs = dataclasses.replace(
+        TrainConfig().knobs(), max_kw=tiny_hyper.num_topics,
+        max_kd=tiny_hyper.num_topics // 2,
+    )
+    k_cell = jax.random.key(3)
+    mask = jnp.ones(tiny_corpus.word.shape, bool)
+    args = (k_cell, tiny_corpus.word, tiny_corpus.doc, st.topic, mask,
+            st.n_wk, st.n_kd, st.n_k, tiny_hyper, tiny_corpus.num_words,
+            knobs)
+    z_hybrid = hybrid.cell_sweep(*args)
+
+    route = hybrid_route_doc_side(
+        st.n_wk, st.n_kd, tiny_corpus.word, tiny_corpus.doc,
+        knobs.max_kw, knobs.max_kd,
+    )
+    assert bool(route.any()) and not bool(route.all())  # both routes live
+    z_zen = algorithms.get("zen_sparse").cell_sweep(*args)
+    z_alt = algorithms.get("sparselda").cell_sweep(*args)
+    np.testing.assert_array_equal(
+        np.asarray(z_hybrid), np.asarray(jnp.where(route, z_zen, z_alt))
+    )
 
 
 def test_shared_knobs_unify_train_and_dist_configs():

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import given, settings, st
+
 from repro.core.decompositions import precompute_zen_terms
 from repro.core.init import random_init
 from repro.core.types import LDAHyperParams
@@ -12,6 +14,7 @@ from repro.core.zen_sparse import (
     densify_rows,
     lookup_rows,
     max_row_nnz,
+    shard_row_capacity,
     sparsify_rows,
     zen_sample_tokens,
     zen_sparse_sweep,
@@ -99,3 +102,67 @@ def test_convergence(key, tiny_corpus, tiny_hyper):
         st = tr.step(st)
     st.check_invariants(tiny_corpus)
     assert tr.llh(st) > llh0
+
+
+# ---------------------------------------------------------------------------
+# Property tests: the shard-relative padded-row builder (mesh cell sweeps
+# sparsify each shard's local count block at its own capacity)
+# ---------------------------------------------------------------------------
+
+
+def _random_shard_slices(rnd_matrix, r, nshards, rng):
+    """Cut a dense (R, K) matrix into <= nshards contiguous row slices at
+    arbitrary (possibly degenerate/empty) boundaries."""
+    cuts = sorted(int(c) for c in rng.integers(0, r + 1, size=nshards - 1))
+    bounds = [0] + cuts + [r]
+    return [rnd_matrix[a:b] for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 24),  # rows
+    st.integers(1, 20),  # topics K
+    st.integers(0, 10**6),  # data seed
+    st.integers(1, 6),  # shard count
+)
+def test_shard_slices_never_drop_or_duplicate_counts(r, k, seed, nshards):
+    """Sparsify each arbitrary shard slice at its own per-shard capacity,
+    densify, reassemble: every (row, topic) count survives exactly once."""
+    rng = np.random.default_rng(seed)
+    dense = rng.integers(0, 4, size=(r, k)).astype(np.int32)
+    parts = []
+    for block in _random_shard_slices(dense, r, nshards, rng):
+        if block.shape[0] == 0:
+            parts.append(block)
+            continue
+        cap = shard_row_capacity(jnp.asarray(block))
+        rows = sparsify_rows(jnp.asarray(block), cap)
+        parts.append(np.asarray(densify_rows(rows)))
+    rebuilt = np.concatenate([p for p in parts if p.shape[0]] or
+                             [np.zeros((0, k), np.int32)], axis=0)
+    np.testing.assert_array_equal(rebuilt, dense)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 24),
+    st.integers(1, 64),
+    st.integers(0, 10**6),
+)
+def test_shard_row_capacity_bounds_are_tight(r, k, seed):
+    """Per-shard capacity is sufficient (>= max row nnz) and tight (within
+    one lane-rounding multiple of it, never past K)."""
+    rng = np.random.default_rng(seed)
+    # mix dense and sparse rows so max nnz spans the whole [0, k] range
+    dense = rng.integers(0, 3, size=(r, k)).astype(np.int32)
+    dense[rng.random(r) < 0.3] = 0
+    block = jnp.asarray(dense)
+    m = int(max_row_nnz(block))
+    cap = shard_row_capacity(block)
+    assert cap >= min(max(m, 1), k)  # sufficient: nothing truncates
+    assert cap <= k  # never explodes past K
+    assert cap <= max(8, m + 7)  # tight: one rounding multiple at most
+    # sufficiency is functional, not just numeric: round-trip is exact
+    np.testing.assert_array_equal(
+        np.asarray(densify_rows(sparsify_rows(block, cap))), dense
+    )
