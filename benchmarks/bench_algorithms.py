@@ -5,7 +5,9 @@ log-likelihood after equal iterations, all on the shared substrate
 The sweep list IS the registry: a newly registered backend shows up here
 with zero benchmark changes — on BOTH axes: the single-box sweep below,
 and a mesh x backend sweep that times the distributed step for every
-``supports_shard_map`` backend on a simulated 2-device CPU mesh. The mesh
+``supports_shard_map`` backend on a simulated 2-device CPU mesh. Both
+axes drive the same ``TrainSession`` API (mesh_shape selects the plan),
+so what is timed is exactly what ``launch/train.py`` runs. The mesh
 cells run in a subprocess because the host device count locks at first
 jax init (same trick as tests/helpers.py)."""
 from __future__ import annotations
@@ -19,34 +21,28 @@ import jax
 
 from benchmarks.common import row
 from repro import algorithms
-from repro.core import LDATrainer, TrainConfig, LDAHyperParams
+from repro.core import LDAHyperParams
 from repro.data import synthetic_lda_corpus
+from repro.train.session import RunConfig, TrainSession
 
 _MESH_CHILD = """
 import warnings; warnings.filterwarnings('ignore')
 import time
-import jax, jax.numpy as jnp, numpy as np
+import jax
 from repro.data import synthetic_lda_corpus
 from repro.core.types import LDAHyperParams
-from repro.core.graph import grid_partition
-from repro.launch.mesh import make_mesh
-from repro.core.distributed import (DistConfig, init_dist_state,
-                                    make_dist_step, resolve_dist_row_pads)
+from repro.train.session import RunConfig, TrainSession
 corpus, _ = synthetic_lda_corpus(0, num_docs=400, num_words=800,
                                  num_topics=32, avg_doc_len=64)
 hyper = LDAHyperParams(num_topics=32, alpha=0.05, beta=0.01)
-mesh = make_mesh((1, 2), ('data', 'model'))
-grid = grid_partition(corpus, 1, 2)
-state, data = init_dist_state(jax.random.key(0), mesh, grid, hyper)
-cfg = resolve_dist_row_pads(state, DistConfig(algorithm={alg!r},
-                                              max_kd=0, max_kw=0))
-step = make_dist_step(mesh, hyper, cfg, grid.words_per_shard,
-                      grid.docs_per_shard)
-state = step(state, data)  # warm compile
+session = TrainSession(corpus, hyper,
+                       RunConfig(algorithm={alg!r}, mesh_shape=(1, 2)))
+state = session.init(jax.random.key(0))
+state = session.step(state)  # warm compile
 jax.block_until_ready(state.n_k)
 t0 = time.perf_counter()
 for _ in range({iters}):
-    state = step(state, data)
+    state = session.step(state)
 jax.block_until_ready(state.n_k)
 print('US_PER_ITER', (time.perf_counter() - t0) / {iters} * 1e6)
 """
@@ -100,17 +96,17 @@ def main(iters: int = 10):
     hyper = LDAHyperParams(num_topics=32, alpha=0.05, beta=0.01)
     results = {}
     for alg in algorithms.registered():
-        tr = LDATrainer(
+        session = TrainSession(
             corpus, hyper,
-            TrainConfig(algorithm=alg, max_kw=64, max_kd=64, num_mh=8),
+            RunConfig(algorithm=alg, max_kw=64, max_kd=64, num_mh=8),
         )
-        st = tr.init_state(jax.random.key(0))
-        st = tr.step(st)  # warm compile
+        st = session.init(jax.random.key(0))
+        st = session.step(st)  # warm compile
         t0 = time.perf_counter()
         for _ in range(iters):
-            st = tr.step(st)
+            st = session.step(st)
         dt = (time.perf_counter() - t0) / iters
-        llh = tr.llh(st)
+        llh = session.llh(st)
         results[alg] = (dt, llh)
         row(f"fig3_time_per_iter_{alg}", dt * 1e6, f"llh={llh:.1f}")
     # headline ratios (paper: 2-6x over LightLDA, ~14x over SparseLDA for

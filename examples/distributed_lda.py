@@ -11,35 +11,31 @@ import sys
 BODY = """
 import warnings; warnings.filterwarnings('ignore')
 import time
-import jax, jax.numpy as jnp, numpy as np
-from repro.core.distributed import (DistConfig, init_dist_state,
-                                    make_dist_llh, make_dist_step)
-from repro.core.graph import grid_partition
+import jax, jax.numpy as jnp
 from repro.core.types import LDAHyperParams
 from repro.data import synthetic_lda_corpus
-from repro.launch.mesh import make_mesh
+from repro.train.session import RunConfig, TrainSession
 
 rows, cols = ROWS, COLS
 corpus, _ = synthetic_lda_corpus(0, num_docs=400, num_words=600,
                                  num_topics=16, avg_doc_len=60)
 hyper = LDAHyperParams(num_topics=16, alpha=0.05, beta=0.01)
-mesh = make_mesh((rows, cols), ('data', 'model'))
-grid = grid_partition(corpus, rows, cols)
+cfg = RunConfig(algorithm='zen_cdf', mesh_shape=(rows, cols), max_kd=24,
+                delta_dtype='int16', num_iterations=20, eval_every=5)
+session = TrainSession(corpus, hyper, cfg)
+grid = session.plan.grid
 print(f'devices={len(jax.devices())} mesh={rows}x{cols} '
       f'tokens={int(grid.mask.sum())} pad_overhead={grid.padding_overhead:.2%}')
-state, data = init_dist_state(jax.random.key(0), mesh, grid, hyper)
-step = make_dist_step(mesh, hyper,
-                      DistConfig(algorithm='zen_cdf', max_kd=24,
-                                 delta_dtype='int16'),
-                      grid.words_per_shard, grid.docs_per_shard)
-llh = make_dist_llh(mesh, hyper, grid.words_per_shard, grid.docs_per_shard)
-print(f'llh0 = {float(llh(state, data)):.1f}')
-for it in range(1, 21):
-    t0 = time.time()
-    state = step(state, data)
-    if it % 5 == 0:
-        print(f'iter {it:2d}  {(time.time()-t0)*1e3:6.1f} ms  '
-              f'llh {float(llh(state, data)):12.1f}')
+state = session.init(jax.random.key(0))
+print(f'llh0 = {session.llh(state):.1f}')
+t0 = [time.time()]
+def cb(st, metrics):
+    if metrics:
+        print(f'iter {int(st.iteration):2d}  '
+              f'{(time.time() - t0[0]) * 1e3:6.1f} ms  '
+              f'llh {metrics["llh"]:12.1f}')
+    t0[0] = time.time()
+state = session.run(state=state, callback=cb)
 print('count conservation:', int(jnp.sum(state.n_k)) == int(grid.mask.sum()))
 """
 

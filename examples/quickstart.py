@@ -1,12 +1,18 @@
 """Quickstart: train ZenLDA on a synthetic corpus and print topics.
 
+Uses the unified ``TrainSession`` API (DESIGN.md §6): one declarative
+``RunConfig`` describes the whole run — algorithm, iteration count, eval
+cadence — and ``session.run`` drives it (the same config with
+``mesh_shape=(rows, cols)`` would run on a device mesh instead).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
-from repro.core import LDAHyperParams, LDATrainer, TrainConfig
+from repro.core import LDAHyperParams
 from repro.data import synthetic_lda_corpus
+from repro.train.session import RunConfig, TrainSession
 
 
 def main():
@@ -14,16 +20,21 @@ def main():
         seed=0, num_docs=200, num_words=300, num_topics=10, avg_doc_len=50
     )
     hyper = LDAHyperParams(num_topics=10, alpha=0.1, beta=0.01)
-    trainer = LDATrainer(corpus, hyper, TrainConfig(algorithm="zen"))
+    session = TrainSession(
+        corpus, hyper,
+        RunConfig(algorithm="zen", num_iterations=30, eval_every=10),
+    )
 
-    state = trainer.init_state(jax.random.key(0))
-    print(f"corpus: {corpus.num_tokens} tokens, llh0 = {trainer.llh(state):.1f}")
-    for it in range(1, 31):
-        state = trainer.step(state)
-        if it % 10 == 0:
-            print(f"iter {it:3d}  llh {trainer.llh(state):12.1f}  "
-                  f"perplexity {trainer.perplexity(state):8.2f}  "
-                  f"change_rate {trainer.change_rate(state):.3f}")
+    state = session.init(jax.random.key(0))
+    print(f"corpus: {corpus.num_tokens} tokens, llh0 = {session.llh(state):.1f}")
+
+    def report(st, metrics):
+        if metrics:
+            print(f"iter {int(st.iteration):3d}  llh {metrics['llh']:12.1f}  "
+                  f"perplexity {metrics['perplexity']:8.2f}  "
+                  f"change_rate {metrics['change_rate']:.3f}")
+
+    state = session.run(state=state, callback=report)
 
     # top words per learned topic
     n_wk = np.asarray(state.n_wk)

@@ -19,6 +19,7 @@ from repro.algorithms.base import (  # noqa: F401
     SamplerKnobs,
     auto_pad,
     fill_cell_row_pads,
+    knobs_from,
     resolve_row_pads,
 )
 from repro.algorithms.registry import (  # noqa: F401

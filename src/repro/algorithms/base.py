@@ -82,6 +82,17 @@ class SamplerKnobs:
         return self.token_chunk or None
 
 
+_KNOB_FIELDS = tuple(f.name for f in dataclasses.fields(SamplerKnobs))
+
+
+def knobs_from(cfg) -> SamplerKnobs:
+    """THE SamplerKnobs derivation — every driver config builds its knobs
+    here (``RunConfig``, and the deprecated ``TrainConfig``/``DistConfig``
+    shims), so a new knob is one field on ``SamplerKnobs`` plus one field
+    on ``RunConfig``, never a per-config copy."""
+    return SamplerKnobs(**{f: getattr(cfg, f) for f in _KNOB_FIELDS})
+
+
 class SamplerBackend:
     """Base class: capability flags + the sweep contract."""
 

@@ -11,12 +11,15 @@ Layers:
   likelihood/inference    metrics + RT-LDA serving inference
   hyper/compactvector     topic dedup, CompactVector (Alg. 4)
   graph/distributed       partitioning (DBH+) + multi-device iteration
-  trainer                 single-box driver
+  trainer                 deprecated single-box shims (LDATrainer)
 
 Algorithm dispatch lives one level up in ``repro.algorithms``: every CGS
 sampler (including the fused Pallas kernel) is a registered
-``SamplerBackend``; both the trainer and the distributed cell step resolve
-names through ``algorithms.get(name)`` (DESIGN.md §4).
+``SamplerBackend`` resolved through ``algorithms.get(name)`` (DESIGN.md
+§4). The *driver* lives in ``repro.train.session`` (DESIGN.md §6): a
+``TrainSession`` + declarative ``RunConfig`` runs both the single-box and
+the mesh plan behind one schedule-driven interface; ``LDATrainer`` /
+``TrainConfig`` below are thin deprecation shims over it.
 """
 from repro.core.types import CGSState, Corpus, LDAHyperParams  # noqa: F401
 from repro.core.trainer import LDATrainer, TrainConfig  # noqa: F401

@@ -72,16 +72,9 @@ class DistConfig:
     bk: int = 512  # zen_pallas topic tile
 
     def knobs(self) -> SamplerKnobs:
-        """The shared backend knob dataclass (same one TrainConfig builds)."""
-        return SamplerKnobs(
-            sampling_method=self.sampling_method,
-            max_kw=self.max_kw,
-            max_kd=self.max_kd,
-            num_mh=self.num_mh,
-            token_chunk=self.token_chunk,
-            bt=self.bt,
-            bk=self.bk,
-        )
+        """The shared backend knob dataclass (the single ``knobs_from``
+        derivation — same one ``RunConfig``/``TrainConfig`` use)."""
+        return algorithms.knobs_from(self)
 
 
 class DistLDAState(NamedTuple):
@@ -166,9 +159,10 @@ def resolve_dist_row_pads(state: DistLDAState, cfg: DistConfig) -> DistConfig:
     sampling-quality bias, never a count-corruption, since the driver
     merges deltas against the dense state). One lane multiple of headroom
     is added against that drift; random init starts rows near their
-    occupancy ceiling, so growth past init+headroom is rare. Re-resolving
-    (and re-jitting) on the ``rebuild_every`` cadence is the full answer
-    and lives with the capacity follow-ups in ROADMAP.md.
+    occupancy ceiling, so growth past init+headroom is rare. The full
+    answer is periodic re-resolution: ``TrainSession``'s "repad" schedule
+    action re-runs this on the ``rebuild_every`` cadence against the
+    current counts and rebuilds the jitted step when the widths changed.
 
     Host-side, once per (re)build — not callable inside jit/shard_map.
     """

@@ -1,13 +1,18 @@
-"""Single-box LDA trainer: registry-resolved algorithm + optimization
-toggles.
+"""Deprecated single-box driver shims: ``LDATrainer`` / ``TrainConfig``.
 
-This is the "driver program" layer (paper §2.3): resolve a sampling backend
-by name through ``repro.algorithms`` (``algorithms.registered()`` lists
-them — zen / zen_sparse / zen_hybrid / sparselda / lightlda / std plus the
-distributed-native zen_cdf and the fused-kernel zen_pallas), pick the
-initialization, toggle token exclusion / delta aggregation, and iterate.
-The distributed path (``repro.core.distributed``) resolves the *same*
-registry entries for its ``shard_map`` cell step.
+The real driver is ``repro.train.session.TrainSession`` driven by a
+declarative ``RunConfig`` (DESIGN.md §6) — one schedule-driven loop for
+single-box AND mesh training. These shims keep the historical single-box
+surface alive (``LDATrainer(corpus, hyper, TrainConfig(...))`` with
+``init_state/sweep/step/llh/train``) by delegating every call to a
+session whose single-box plan reproduces the old numerics bit-for-bit
+(same key schedule, same delta merge — pinned by
+``tests/test_session.py``). New code should construct ``TrainSession``
+directly:
+
+    from repro.train.session import RunConfig, TrainSession
+    session = TrainSession(corpus, hyper, RunConfig(algorithm="zen", ...))
+    final = session.run(jax.random.key(0))
 """
 from __future__ import annotations
 
@@ -15,19 +20,22 @@ import dataclasses
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro import algorithms
-from repro.algorithms import SamplerKnobs
-from repro.core import counts as counts_lib
-from repro.core import init as init_lib
-from repro.core.exclusion import ExclusionConfig, active_mask, update_exclusion_stats
-from repro.core.likelihood import joint_llh, perplexity, predictive_llh
+from repro.algorithms import SamplerKnobs, knobs_from
+from repro.core.exclusion import ExclusionConfig
 from repro.core.types import CGSState, Corpus, LDAHyperParams
+
+# NOTE: repro.train.session is imported lazily inside the shims — the
+# session module itself imports repro.algorithms, whose backend modules
+# import repro.core, whose __init__ imports this module; a top-level
+# import here would close that cycle on a partially-initialized module.
 
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
+    """Deprecated: the single-box slice of ``RunConfig`` (kept for the
+    historical call sites; every field maps 1:1 via ``to_run_config``)."""
+
     algorithm: str = "zen"  # any algorithms.registered() name
     init: str = "random"  # random | sparse_word | sparse_doc
     sparse_init_degree: float = 0.1
@@ -39,112 +47,85 @@ class TrainConfig:
     token_chunk: int = 0  # 0 = whole sweep at once (memory knob)
     bt: int = 256  # zen_pallas token tile
     bk: int = 512  # zen_pallas topic tile
-    # model checkpointing (the serving handoff): save N_wk/N_k + hyper to
-    # this directory every checkpoint_every iterations (0 = final only)
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
 
     def knobs(self) -> SamplerKnobs:
-        """The shared backend knob dataclass (same one DistConfig builds)."""
-        return SamplerKnobs(
+        return knobs_from(self)  # the one shared derivation
+
+    def to_run_config(
+        self,
+        num_iterations: int = 0,
+        eval_every: int = 0,
+        target_perplexity: Optional[float] = None,
+    ) -> "RunConfig":
+        from repro.train.session import RunConfig
+
+        # legacy (enabled=True, start_iteration=0) means "on from the
+        # start"; RunConfig's 0 means disabled, and enabling at iteration
+        # 1 is bit-identical (fresh stats give resample probability 1)
+        excl_start = 0
+        if self.exclusion.enabled:
+            excl_start = max(int(self.exclusion.start_iteration), 1)
+        return RunConfig(
+            algorithm=self.algorithm,
             sampling_method=self.sampling_method,
-            max_kw=self.max_kw,
-            max_kd=self.max_kd,
-            num_mh=self.num_mh,
-            token_chunk=self.token_chunk or 0,  # tolerate legacy None
-            bt=self.bt,
-            bk=self.bk,
+            max_kw=self.max_kw, max_kd=self.max_kd, num_mh=self.num_mh,
+            token_chunk=self.token_chunk, bt=self.bt, bk=self.bk,
+            init=self.init, sparse_init_degree=self.sparse_init_degree,
+            mesh_shape=None,
+            num_iterations=num_iterations,
+            eval_every=eval_every,
+            target_perplexity=target_perplexity,
+            exclusion_start=excl_start,
+            exclusion_min_prob=self.exclusion.min_sample_prob,
+            checkpoint_dir=self.checkpoint_dir,
+            checkpoint_every=self.checkpoint_every,
         )
 
 
 class LDATrainer:
+    """Deprecated: a thin veneer over a single-box ``TrainSession``."""
+
     def __init__(self, corpus: Corpus, hyper: LDAHyperParams, cfg: TrainConfig):
+        from repro.train.session import TrainSession
+
         self.corpus = corpus
         self.hyper = hyper
         self.cfg = cfg
-        self.backend = algorithms.get(cfg.algorithm)
-        self._knobs = cfg.knobs()
-        self._aux = self.backend.prepare(corpus, hyper, self._knobs)
+        self._session = TrainSession(corpus, hyper, cfg.to_run_config())
+        self.backend = self._session.backend
 
     # -- initialization ----------------------------------------------------
     def init_state(self, rng: jax.Array) -> CGSState:
-        c, h = self.corpus, self.hyper
-        if self.cfg.init == "random":
-            return init_lib.random_init(rng, c, h)
-        if self.cfg.init == "sparse_word":
-            return init_lib.sparse_word_init(rng, c, h, self.cfg.sparse_init_degree)
-        if self.cfg.init == "sparse_doc":
-            return init_lib.sparse_doc_init(rng, c, h, self.cfg.sparse_init_degree)
-        raise ValueError(self.cfg.init)
+        return self._session.init(rng)
 
     # -- one iteration -----------------------------------------------------
     def sweep(self, state: CGSState) -> jax.Array:
-        knobs = self._knobs
-        if self.backend.needs_row_pads:
-            # host-side auto pads from the current counts (0 = auto)
-            knobs = algorithms.resolve_row_pads(state, knobs)
-        return self.backend.sweep(
-            state, self.corpus, self.hyper, knobs, self._aux
-        )
+        return self._session.plan.sweep(state)
 
     def step(self, state: CGSState) -> CGSState:
-        c, h, cfg = self.corpus, self.hyper, self.cfg
-        key = jax.random.fold_in(state.rng, 2**20 + state.iteration)
-        mask = active_mask(state, cfg.exclusion, key)
-        z_new_all = self.sweep(state)
-        z_new = jnp.where(mask, z_new_all, state.topic)
-        d_wk, d_kd, d_k = counts_lib.delta_counts(
-            c.word, c.doc, state.topic, z_new, c.num_words, c.num_docs,
-            h.num_topics,
-        )
-        i_new, t_new = update_exclusion_stats(state, z_new, mask)
-        return CGSState(
-            topic=z_new,
-            prev_topic=state.topic,
-            n_wk=state.n_wk + d_wk,
-            n_kd=state.n_kd + d_kd,
-            n_k=state.n_k + d_k,
-            rng=state.rng,
-            iteration=state.iteration + 1,
-            stale_iters=i_new,
-            same_count=t_new,
-        )
+        return self._session.step(state)
 
     # -- metrics -----------------------------------------------------------
     def llh(self, state: CGSState) -> float:
-        return float(predictive_llh(state, self.corpus, self.hyper,
-                                     token_chunk=self._knobs.chunk_or_none()))
+        return self._session.llh(state)
 
     def llh_split(self, state: CGSState):
-        return joint_llh(state, self.corpus, self.hyper)
+        return self._session.plan.llh_split(state)
 
     def perplexity(self, state: CGSState) -> float:
-        return float(perplexity(state, self.corpus, self.hyper,
-                                 token_chunk=self._knobs.chunk_or_none()))
+        return self._session.perplexity(state)
 
     def change_rate(self, state: CGSState) -> float:
         """Fraction of tokens whose topic changed last iteration (Fig. 9a)."""
-        return float(jnp.mean((state.topic != state.prev_topic).astype(jnp.float32)))
+        return self._session.plan.change_rate(state)
 
     # -- model checkpointing (serving handoff) ------------------------------
     def save_model(self, state: CGSState, directory: Optional[str] = None) -> str:
-        """Checkpoint the trained model (N_wk/N_k + hyper) for serving.
+        return self._session.save_model(state, directory)
 
-        ``launch/serve_lda.py`` / ``FrozenLDAModel.from_checkpoint`` load
-        exactly this artifact.
-        """
-        from repro.train.checkpoint import save_lda_model
-
-        directory = directory or self.cfg.checkpoint_dir
-        if not directory:
-            raise ValueError("no checkpoint directory configured")
-        return save_lda_model(
-            directory, state.n_wk, state.n_k, self.hyper,
-            step=int(state.iteration),
-            extra_metadata={"algorithm": self.cfg.algorithm},
-        )
-
-    # -- training loop with flexible termination (§4.3 utilities) ----------
+    # -- training loop ------------------------------------------------------
     def train(
         self,
         rng: jax.Array,
@@ -154,24 +135,19 @@ class LDATrainer:
         callback: Optional[Callable[[CGSState, dict], None]] = None,
         target_perplexity: Optional[float] = None,
     ) -> CGSState:
-        if state is None:
-            state = self.init_state(rng)
-        ckpt_dir, ckpt_every = self.cfg.checkpoint_dir, self.cfg.checkpoint_every
-        last_saved = -1
-        for it in range(num_iterations):
-            state = self.step(state)
-            metrics = {}
-            if llh_every and (it + 1) % llh_every == 0:
-                metrics["llh"] = self.llh(state)
-                metrics["change_rate"] = self.change_rate(state)
-            if callback is not None:
-                callback(state, metrics)
-            if ckpt_dir and ckpt_every and (it + 1) % ckpt_every == 0:
-                self.save_model(state)
-                last_saved = int(state.iteration)
-            if target_perplexity is not None and llh_every and metrics:
-                if self.perplexity(state) <= target_perplexity:
-                    break
-        if ckpt_dir and int(state.iteration) != last_saved:
-            self.save_model(state)
-        return state
+        """Delegates to ``TrainSession.run`` (sharing the already-prepared
+        plan). ``num_iterations`` counts *additional* steps from the given
+        state (the historical semantics); the session's own config counts
+        absolute iterations. ``target_perplexity`` is honored on every
+        eval tick, derived from the eval's already-computed llh (no second
+        likelihood pass). One deliberate deviation: eval/checkpoint ticks
+        fire on *absolute*-iteration multiples of the cadence (so a
+        resumed run fires on the same grid as an uninterrupted one),
+        where the old loop counted relative to the resume point."""
+        start = 0 if state is None else int(state.iteration)
+        session = self._session.with_run_params(
+            num_iterations=start + num_iterations,
+            eval_every=llh_every,
+            target_perplexity=target_perplexity,
+        )
+        return session.run(rng=rng, state=state, callback=callback)

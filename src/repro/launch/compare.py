@@ -1,7 +1,20 @@
-"""Before/after comparison of two dry-run result stores (§Perf evidence).
+"""Before/after comparison — dry-run result stores, or live training runs.
 
-    PYTHONPATH=src python -m repro.launch.compare \
-        results/dryrun_baseline.json results/dryrun_opt.json
+Two modes, both going through the unified driver stack:
+
+* store diff (default): compare two dry-run JSON stores (§Perf evidence)
+
+      PYTHONPATH=src python -m repro.launch.compare \
+          results/dryrun_baseline.json results/dryrun_opt.json
+
+* session compare (``--sessions``): the positional arguments are
+  ``RunConfig`` JSON files (the ``launch/train.py --dump-config``
+  artifact); each runs on a shared synthetic corpus through
+  ``TrainSession.run()`` — no hand-assembled ``make_dist_step``/loop
+  wiring — and the eval trajectories print side by side
+
+      PYTHONPATH=src python -m repro.launch.compare --sessions \
+          run_baseline.json run_opt.json [--topics 32] [--eval-every 5]
 """
 from __future__ import annotations
 
@@ -11,13 +24,67 @@ import json
 from repro.launch.roofline import roofline_terms
 
 
+def compare_sessions(args) -> None:
+    """Run two RunConfigs via TrainSession on one corpus; print llh/ppl."""
+    import jax
+
+    from repro.core.types import LDAHyperParams
+    from repro.data import synthetic_corpus
+    from repro.train.session import RunConfig, TrainSession
+
+    corpus = synthetic_corpus(
+        0, num_docs=args.synthetic_docs, num_words=args.synthetic_words,
+        avg_doc_len=args.synthetic_len, zipf_a=1.2,
+    )
+    hyper = LDAHyperParams(num_topics=args.topics)
+    runs = {}
+    for path in (args.baseline, args.optimized):
+        with open(path) as f:
+            cfg = RunConfig.from_json(f.read())
+        if args.eval_every:
+            import dataclasses
+
+            cfg = dataclasses.replace(cfg, eval_every=args.eval_every)
+        session = TrainSession(corpus, hyper, cfg)
+        traj = []
+        session.run(
+            jax.random.key(args.seed),
+            callback=lambda st, m: traj.append(
+                (int(st.iteration), m["llh"], m["perplexity"])
+            ) if "llh" in m else None,
+        )
+        runs[path] = traj
+        plan = "single-box" if cfg.mesh_shape is None else \
+            f"mesh {cfg.mesh_shape[0]}x{cfg.mesh_shape[1]}"
+        print(f"# {path}: algorithm={cfg.algorithm} plan={plan}")
+    a, b = runs[args.baseline], runs[args.optimized]
+    print("| iter | baseline llh | optimized llh | baseline ppl | optimized ppl |")
+    print("|---|---|---|---|---|")
+    for (ia, la, pa), (ib, lb, pb) in zip(a, b):
+        it = ia if ia == ib else f"{ia}/{ib}"
+        print(f"| {it} | {la:.1f} | {lb:.1f} | {pa:.2f} | {pb:.2f} |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
     ap.add_argument("optimized")
     ap.add_argument("--min-ratio", type=float, default=1.05,
                     help="only print cells that moved by this factor")
+    ap.add_argument("--sessions", action="store_true",
+                    help="treat the positionals as RunConfig JSONs and "
+                         "compare live TrainSession runs")
+    ap.add_argument("--topics", type=int, default=32)
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="override both configs' eval cadence")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--synthetic-docs", type=int, default=400)
+    ap.add_argument("--synthetic-words", type=int, default=800)
+    ap.add_argument("--synthetic-len", type=int, default=64)
     args = ap.parse_args()
+    if args.sessions:
+        compare_sessions(args)
+        return
     with open(args.baseline) as f:
         base = json.load(f)
     with open(args.optimized) as f:

@@ -1,29 +1,45 @@
-"""LDA training driver (launch-level CLI) — any registered sampler backend.
+"""LDA training driver (launch-level CLI) — one ``TrainSession`` for both
+paths.
 
-The algorithm name resolves through the ``repro.algorithms`` registry.
-Every backend with ``supports_shard_map`` runs the distributed mesh path —
-the dense paths (zen_cdf, zen_dense, zen_pallas) *and* the padded-sparse
-ones (zen_sparse, zen_hybrid, sparselda, lightlda); only backends without
-a cell sweep (std) fall back to the single-box trainer. On a real TPU
-slice the mesh path runs under `jax.distributed`; on CPU hosts pass
---host-devices to simulate N devices.
+Every run is a declarative ``RunConfig`` driving a ``TrainSession``
+(DESIGN.md §6): the algorithm resolves once through the ``repro.algorithms``
+registry, ``mesh_shape`` selects the execution plan (single-box vs the
+shard_map mesh), and periodic events — llh/perplexity eval, model +
+elastic training checkpoints, exclusion enablement, exact count rebuild,
+padded-row re-resolution, duplicate-topic merging — fire from the
+session's schedule. Every backend with ``supports_shard_map`` runs the
+mesh plan; only backends without a cell sweep (std) fall back to
+single-box. On a real TPU slice the mesh plan runs under
+``jax.distributed``; on CPU hosts pass --host-devices to simulate N
+devices.
 
     PYTHONPATH=src python -m repro.launch.train \
         --rows 2 --cols 2 --host-devices 4 --iters 50 \
         [--corpus path.libsvm] [--ckpt DIR] [--algorithm <registered-name>]
-        [--delta-dtype int16] [--exclusion-start 30]
+        [--delta-dtype int16] [--exclusion-start 30] [--rebuild-every 10]
+    PYTHONPATH=src python -m repro.launch.train --config run.json
+    PYTHONPATH=src python -m repro.launch.train --dump-config run.json ...
     PYTHONPATH=src python -m repro.launch.train --list-algorithms
 
+``--config`` loads a ``RunConfig`` JSON (the ``to_json`` round-trip);
+``--dump-config`` writes the resolved config and exits, so any CLI
+invocation can be frozen into a reproducible run file.
+
 ``--checkpoint-dir`` writes *model* checkpoints (N_wk/N_k + hyper) on both
-paths — the artifact ``launch/serve_lda.py`` serves from. (``--ckpt`` on
-the mesh path remains the elastic *training* checkpoint: assignments only.)
+paths — the artifact ``launch/serve_lda.py`` serves from. ``--ckpt``
+remains the elastic *training* checkpoint (assignments only; resumes
+automatically).
 """
 import argparse
 import os
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None,
+                    help="load a RunConfig JSON (overrides per-field flags)")
+    ap.add_argument("--dump-config", default=None, metavar="PATH",
+                    help="write the resolved RunConfig JSON and exit")
     ap.add_argument("--rows", type=int, default=2, help="data-parallel rows")
     ap.add_argument("--cols", type=int, default=2, help="model-parallel cols")
     ap.add_argument("--host-devices", type=int, default=0,
@@ -36,29 +52,42 @@ def main() -> None:
     ap.add_argument("--list-algorithms", action="store_true",
                     help="print the registered sampler backends and exit")
     ap.add_argument("--single-box", action="store_true",
-                    help="force the single-box trainer path")
+                    help="force the single-box plan")
     ap.add_argument("--max-kd", type=int, default=None,
                     help="sparse doc-row width (default: auto — resolved "
-                         "from the sharded counts on the mesh path, from "
-                         "the state on the single-box path)")
+                         "from the counts, and re-resolved on the "
+                         "--rebuild-every cadence on the mesh plan)")
     ap.add_argument("--max-kw", type=int, default=None,
                     help="sparse word-row width (padded-sparse backends; "
                          "default: auto, like --max-kd)")
     ap.add_argument("--delta-dtype", default="int32",
                     choices=["int32", "int16", "int8"])
     ap.add_argument("--exclusion-start", type=int, default=0)
+    ap.add_argument("--rebuild-every", type=int, default=0,
+                    help="exact count rebuild + padded-row re-resolution "
+                         "cadence (0 = never)")
+    ap.add_argument("--merge-every", type=int, default=0,
+                    help="duplicate-topic merge cadence (0 = never)")
+    ap.add_argument("--merge-threshold", type=float, default=0.05)
     ap.add_argument("--ckpt", default=None,
-                    help="mesh-path training checkpoints (assignments)")
+                    help="elastic training checkpoints (assignments)")
     ap.add_argument("--checkpoint-dir", default=None,
                     help="model checkpoints (N_wk/N_k + hyper) for serving")
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="model-checkpoint cadence (0 = final only)")
-    ap.add_argument("--llh-every", type=int, default=10)
+    ap.add_argument("--llh-every", type=int, default=10,
+                    help="eval cadence (llh/perplexity)")
+    ap.add_argument("--target-perplexity", type=float, default=None,
+                    help="stop once eval perplexity reaches this")
     ap.add_argument("--synthetic-docs", type=int, default=1000,
                     help="synthetic corpus size (when --corpus is not given)")
     ap.add_argument("--synthetic-words", type=int, default=2000)
     ap.add_argument("--synthetic-len", type=int, default=80)
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     if args.host_devices:
         os.environ["XLA_FLAGS"] = (
@@ -67,10 +96,9 @@ def main() -> None:
         )
 
     import jax
-    import jax.numpy as jnp
-    import numpy as np
 
     from repro import algorithms
+    from repro.train.session import RunConfig, TrainSession
 
     if args.list_algorithms:
         for name, backend, aliases in algorithms.describe():
@@ -80,7 +108,43 @@ def main() -> None:
             print(f"{name:12s} {mesh}{alias_s}")
         return
 
-    backend = algorithms.get(args.algorithm)  # one registry resolution
+    if args.config:
+        with open(args.config) as f:
+            cfg = RunConfig.from_json(f.read())
+    else:
+        backend = algorithms.get(args.algorithm)  # one registry resolution
+        mesh_shape = None
+        if backend.supports_shard_map and not args.single_box:
+            mesh_shape = (args.rows, args.cols)
+        elif not backend.supports_shard_map and not args.single_box:
+            print(f"note: backend {args.algorithm!r} has no shard_map cell "
+                  f"sweep; running the single-box plan")
+        if mesh_shape is None and args.delta_dtype != "int32":
+            print("note: single-box plan ignores --delta-dtype")
+        cfg = RunConfig(
+            algorithm=args.algorithm,
+            max_kd=args.max_kd or 0,  # 0 = auto-size from the counts
+            max_kw=args.max_kw or 0,
+            mesh_shape=mesh_shape,
+            delta_dtype=args.delta_dtype,
+            num_iterations=args.iters,
+            eval_every=args.llh_every,
+            target_perplexity=args.target_perplexity,
+            exclusion_start=args.exclusion_start,
+            rebuild_every=args.rebuild_every,
+            merge_every=args.merge_every,
+            merge_threshold=args.merge_threshold,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            train_checkpoint_dir=args.ckpt,
+            train_checkpoint_every=25 if args.ckpt else 0,
+        )
+
+    if args.dump_config:
+        with open(args.dump_config, "w") as f:
+            f.write(cfg.to_json() + "\n")
+        print(f"wrote {args.dump_config}")
+        return
 
     from repro.core.types import LDAHyperParams
     from repro.data import load_libsvm, synthetic_corpus
@@ -93,134 +157,41 @@ def main() -> None:
                                   avg_doc_len=args.synthetic_len, zipf_a=1.2)
     hyper = LDAHyperParams(num_topics=args.topics)
 
-    if args.single_box or not backend.supports_shard_map:
-        # single-box round trip: same registry entry, LDATrainer driver
-        from repro.core import LDATrainer, TrainConfig
-        from repro.core.exclusion import ExclusionConfig
-
-        if not backend.supports_shard_map and not args.single_box:
-            print(f"note: backend {args.algorithm!r} has no shard_map cell "
-                  f"sweep; running the single-box trainer")
-        ignored = [flag for flag, default, val in (
-            ("--ckpt", None, args.ckpt),
-            ("--delta-dtype", "int32", args.delta_dtype),
-            ("--rows/--cols", (2, 2), (args.rows, args.cols)),
-        ) if val != default]
-        if ignored:
-            print(f"note: single-box path ignores {', '.join(ignored)}")
-        excl = ExclusionConfig(enabled=args.exclusion_start > 0,
-                               start_iteration=args.exclusion_start)
-        tr = LDATrainer(corpus, hyper, TrainConfig(
-            algorithm=args.algorithm,
-            max_kd=args.max_kd or 0,  # 0 = auto-size from the counts
-            max_kw=args.max_kw or 0,
-            exclusion=excl,
-            checkpoint_dir=args.checkpoint_dir,
-            checkpoint_every=args.checkpoint_every,
-        ))
-        print(f"single-box  algorithm={args.algorithm}  "
+    session = TrainSession(corpus, hyper, cfg)
+    if cfg.mesh_shape is None:
+        print(f"single-box  algorithm={cfg.algorithm}  "
               f"tokens={corpus.num_tokens}")
+    else:
+        grid = session.plan.grid
+        rows, cols = cfg.mesh_shape
+        print(f"mesh {rows}x{cols}  tokens={int(grid.mask.sum())}  "
+              f"pad={grid.padding_overhead:.2%}")
 
-        def cb(state, metrics):
-            if metrics:
-                print(f"iter {int(state.iteration):4d}  "
-                      f"llh {metrics['llh']:.1f}  "
-                      f"change {metrics['change_rate']:.3f}")
+    state = session.init(jax.random.key(0))
+    if session.backend.needs_row_pads and cfg.mesh_shape is not None:
+        kw, kd = session.row_pads
+        print(f"padded-row widths: max_kw={kw} max_kd={kd}")
 
-        final = tr.train(jax.random.key(0), args.iters,
-                         llh_every=args.llh_every, callback=cb)
-        print(f"finished at iteration {int(final.iteration)}; "
-              f"final llh {tr.llh(final):.1f}")
-        if args.checkpoint_dir:
-            print(f"model checkpoint: {args.checkpoint_dir} "
-                  f"(serve with: python -m repro.launch.serve_lda "
-                  f"--checkpoint-dir {args.checkpoint_dir})")
-        return
+    def cb(st, metrics):
+        if not metrics:
+            return
+        line = f"iter {int(st.iteration):4d}"
+        if "llh" in metrics:
+            line += (f"  llh {metrics['llh']:.1f}"
+                     f"  ppl {metrics['perplexity']:.1f}"
+                     f"  change {metrics['change_rate']:.3f}")
+        if "row_pads" in metrics:
+            kw, kd = metrics["row_pads"]
+            line += f"  repad kw={kw} kd={kd}"
+        print(line)
 
-    from repro.core.distributed import (
-        DistConfig,
-        init_dist_state,
-        make_dist_llh,
-        make_dist_step,
-        make_rebuild_counts,
-        resolve_dist_row_pads,
-    )
-    from repro.core.graph import grid_partition
-    from repro.launch.mesh import make_mesh
-    from repro.train.checkpoint import CheckpointManager
-    from repro.train.loop import LoopConfig, TrainLoop
-
-    mesh = make_mesh((args.rows, args.cols), ("data", "model"))
-    grid = grid_partition(corpus, args.rows, args.cols)
-    print(f"mesh {args.rows}x{args.cols}  tokens={int(grid.mask.sum())}  "
-          f"pad={grid.padding_overhead:.2%}")
-    dcfg = DistConfig(
-        algorithm=args.algorithm,
-        max_kd=args.max_kd or 0,  # 0 = auto (resolved below / by backend)
-        max_kw=args.max_kw or 0,
-        delta_dtype=args.delta_dtype, exclusion_start=args.exclusion_start,
-    )
-    state, data = init_dist_state(jax.random.key(0), mesh, grid, hyper)
-    # shard-relative padded-row capacities for the sparse backends: fill
-    # auto widths from the sharded init counts (per-shard maxima, not a
-    # global gather), so the cell workspaces are sized to the data
-    dcfg = resolve_dist_row_pads(state, dcfg)
-    if backend.needs_row_pads:
-        print(f"padded-row widths: max_kw={dcfg.max_kw} max_kd={dcfg.max_kd}")
-    step = make_dist_step(mesh, hyper, dcfg, grid.words_per_shard,
-                          grid.docs_per_shard)
-    llh = make_dist_llh(mesh, hyper, grid.words_per_shard,
-                        grid.docs_per_shard)
-
-    def loop_step(state):
-        state = step(state, data)
-        metrics = {}
-        it = int(state.iteration)
-        if args.llh_every and it % args.llh_every == 0:
-            metrics["llh"] = float(llh(state, data))
-        return state, metrics
-
-    # checkpoint = assignments only (counts rebuild on restore; elastic)
-    rebuild = make_rebuild_counts(mesh, hyper, grid.words_per_shard,
-                                  grid.docs_per_shard)
-
-    def restore(state, tree):
-        state = state._replace(
-            topic=jax.device_put(tree["topic"], state.topic.sharding),
-            iteration=jnp.asarray(tree["iteration"]),
-        )
-        return rebuild(state, data)
-
-    loop = TrainLoop(
-        loop_step,
-        LoopConfig(num_steps=args.iters, checkpoint_every=25,
-                   checkpoint_dir=args.ckpt, log_every=args.llh_every),
-        checkpoint_tree_fn=lambda s: {
-            "topic": s.topic, "iteration": s.iteration,
-        },
-        restore_fn=restore if args.ckpt else None,
-    )
-    import logging
-
-    logging.basicConfig(level=logging.INFO)
-    final = loop.run(state)
+    final = session.run(state=state, callback=cb)
     print(f"finished at iteration {int(final.iteration)}; "
-          f"final llh {float(llh(final, data)):.1f}")
-    if args.checkpoint_dir:
-        # gather the (padded) sharded model and map the grid's relabeled
-        # word ids back to the corpus vocabulary
-        from repro.train.checkpoint import save_lda_model
-
-        n_wk_grid = np.asarray(jax.device_get(final.n_wk))
-        n_wk = n_wk_grid[grid.word_perm]  # (W, K) in original word ids
-        n_k = np.asarray(jax.device_get(final.n_k))
-        path = save_lda_model(
-            args.checkpoint_dir, n_wk, n_k, hyper,
-            step=int(final.iteration),
-            extra_metadata={"algorithm": args.algorithm,
-                            "mesh": [args.rows, args.cols]},
-        )
-        print(f"model checkpoint: {path}")
+          f"final llh {session.llh(final):.1f}")
+    if cfg.checkpoint_dir:
+        print(f"model checkpoint: {cfg.checkpoint_dir} "
+              f"(serve with: python -m repro.launch.serve_lda "
+              f"--checkpoint-dir {cfg.checkpoint_dir})")
 
 
 if __name__ == "__main__":

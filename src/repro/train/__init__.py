@@ -1,2 +1,34 @@
-from repro.train.optimizer import adafactor_init, adafactor_update, adamw_init, adamw_update, make_optimizer  # noqa: F401
-from repro.train.train_step import make_train_step, TrainState  # noqa: F401
+"""Training substrate: sessions/schedules (LDA), LM train step, optimizers,
+checkpointing, and the legacy fault-tolerant loop.
+
+Re-exports are lazy (PEP 562) so importing one corner — e.g.
+``repro.train.session`` from the core trainer shim — never pulls the LM
+model stack in.
+"""
+_EXPORTS = {
+    "RunConfig": ("repro.train.session", "RunConfig"),
+    "TrainSession": ("repro.train.session", "TrainSession"),
+    "Schedule": ("repro.train.schedule", "Schedule"),
+    "ScheduledAction": ("repro.train.schedule", "ScheduledAction"),
+    "adafactor_init": ("repro.train.optimizer", "adafactor_init"),
+    "adafactor_update": ("repro.train.optimizer", "adafactor_update"),
+    "adamw_init": ("repro.train.optimizer", "adamw_init"),
+    "adamw_update": ("repro.train.optimizer", "adamw_update"),
+    "make_optimizer": ("repro.train.optimizer", "make_optimizer"),
+    "make_train_step": ("repro.train.train_step", "make_train_step"),
+    "TrainState": ("repro.train.train_step", "TrainState"),
+}
+
+
+def __getattr__(name):
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    import importlib
+
+    return getattr(importlib.import_module(module), attr)
+
+
+def __dir__():
+    return sorted(_EXPORTS)

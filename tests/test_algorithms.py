@@ -212,14 +212,28 @@ def test_hybrid_cell_sweep_composes_constituents_by_route(
     )
 
 
-def test_shared_knobs_unify_train_and_dist_configs():
-    """Both config dataclasses build the one SamplerKnobs type, and the
-    token_chunk vocabulary is unified (0 = disabled on both)."""
+def test_shared_knobs_unify_all_driver_configs():
+    """Every driver config builds its SamplerKnobs through the single
+    ``algorithms.knobs_from`` derivation (RunConfig owns it; the
+    deprecated TrainConfig/DistConfig shims delegate), and the
+    token_chunk vocabulary is unified (0 = disabled everywhere)."""
     from repro.core.distributed import DistConfig
+    from repro.train.session import RunConfig
 
     tk = TrainConfig().knobs()
     dk = DistConfig().knobs()
-    assert type(tk) is type(dk) is algorithms.SamplerKnobs
-    assert tk.token_chunk == 0 and dk.token_chunk == 0
-    # legacy None still tolerated on the train side
-    assert TrainConfig(token_chunk=None).knobs().token_chunk == 0
+    rk = RunConfig().knobs()
+    assert type(tk) is type(dk) is type(rk) is algorithms.SamplerKnobs
+    assert tk.token_chunk == dk.token_chunk == rk.token_chunk == 0
+    # RunConfig's None sampling_method = "plan default" (TrainSession
+    # resolves it to cdf single-box / gumbel mesh — the two shims'
+    # historical defaults, preserved)
+    assert rk.sampling_method is None
+    assert tk.sampling_method == "cdf" and dk.sampling_method == "gumbel"
+    # identical field-for-field knobs from identical settings, whichever
+    # config carries them
+    assert TrainConfig(max_kw=32, token_chunk=128).knobs() == \
+        RunConfig(max_kw=32, token_chunk=128,
+                  sampling_method="cdf").knobs() == \
+        DistConfig(max_kw=32, token_chunk=128,
+                   sampling_method="cdf").knobs()

@@ -1,0 +1,402 @@
+"""TrainSession / RunConfig / Schedule — the unified driver (DESIGN.md §6).
+
+Covers the api_redesign contract:
+* bit-equality of the single-box session against an inline re-derivation
+  of the historical LDATrainer step (same seed, same backend, identical
+  final N_wk / N_kd / z) and against the deprecated shim;
+* schedule firing-order / cadence property tests;
+* RunConfig JSON round-trip (and unknown-field rejection);
+* target-perplexity termination from the eval tick's own llh — one
+  likelihood evaluation per tick (counting spy), honored on every tick;
+* duplicate-topic merging as a scheduled action (count conservation);
+* mesh re-pad: a grown row is no longer truncated after the
+  rebuild-cadence capacity re-resolution (subprocess, 2 CPU devices).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import given, run_with_devices, settings, st
+
+from repro.core import counts as counts_lib
+from repro.core import LDATrainer, TrainConfig
+from repro.core.exclusion import ExclusionConfig, active_mask, update_exclusion_stats
+from repro.core.types import CGSState
+from repro.train.schedule import ActionContext, Schedule, ScheduledAction
+from repro.train.session import RunConfig, TrainSession
+
+
+# ---------------------------------------------------------------------------
+# bit-equality with the legacy single-box path
+# ---------------------------------------------------------------------------
+
+def _legacy_step(trainer_cfg, corpus, hyper, backend, knobs, aux, state):
+    """The historical LDATrainer.step, re-derived inline: this is the
+    independent oracle the session's single-box plan must match bit-for-
+    bit (same key schedule, same delta merge, same exclusion masking)."""
+    from repro import algorithms
+
+    key = jax.random.fold_in(state.rng, 2**20 + state.iteration)
+    mask = active_mask(state, trainer_cfg.exclusion, key)
+    k = knobs
+    if backend.needs_row_pads:
+        k = algorithms.resolve_row_pads(state, k)
+    z_all = backend.sweep(state, corpus, hyper, k, aux)
+    z_new = jnp.where(mask, z_all, state.topic)
+    d_wk, d_kd, d_k = counts_lib.delta_counts(
+        corpus.word, corpus.doc, state.topic, z_new,
+        corpus.num_words, corpus.num_docs, hyper.num_topics,
+    )
+    i_new, t_new = update_exclusion_stats(state, z_new, mask)
+    return CGSState(
+        topic=z_new, prev_topic=state.topic,
+        n_wk=state.n_wk + d_wk, n_kd=state.n_kd + d_kd,
+        n_k=state.n_k + d_k, rng=state.rng,
+        iteration=state.iteration + 1,
+        stale_iters=i_new, same_count=t_new,
+    )
+
+
+@pytest.mark.parametrize("alg,excl_start", [
+    ("zen", 0), ("zen_sparse", 0), ("zen_sparse", 3),
+])
+def test_single_box_session_bit_equal_legacy(
+    key, tiny_corpus, tiny_hyper, alg, excl_start
+):
+    """Same seed, same backend: the session's run and an inline legacy
+    step loop produce identical final N_wk / N_kd / z — including with
+    the exclusion event enabled mid-run."""
+    from repro import algorithms
+
+    iters = 6
+    tcfg = TrainConfig(
+        algorithm=alg,
+        exclusion=ExclusionConfig(enabled=excl_start > 0,
+                                  start_iteration=excl_start),
+    )
+    session = TrainSession(
+        tiny_corpus, tiny_hyper,
+        RunConfig(algorithm=alg, num_iterations=iters,
+                  exclusion_start=excl_start),
+    )
+    st_sess = session.init(key)
+
+    backend = algorithms.get(alg)
+    knobs = tcfg.knobs()
+    aux = backend.prepare(tiny_corpus, tiny_hyper, knobs)
+    st_ref = session.init(key)  # identical init (same rng, same cfg)
+
+    st_sess = session.run(state=st_sess)
+    for _ in range(iters):
+        st_ref = _legacy_step(tcfg, tiny_corpus, tiny_hyper, backend,
+                              knobs, aux, st_ref)
+
+    np.testing.assert_array_equal(np.asarray(st_sess.topic),
+                                  np.asarray(st_ref.topic))
+    np.testing.assert_array_equal(np.asarray(st_sess.n_wk),
+                                  np.asarray(st_ref.n_wk))
+    np.testing.assert_array_equal(np.asarray(st_sess.n_kd),
+                                  np.asarray(st_ref.n_kd))
+    np.testing.assert_array_equal(np.asarray(st_sess.stale_iters),
+                                  np.asarray(st_ref.stale_iters))
+
+    # the deprecated shim rides the same plan: bit-identical too
+    tr = LDATrainer(tiny_corpus, tiny_hyper, tcfg)
+    st_shim = tr.train(key, iters)
+    np.testing.assert_array_equal(np.asarray(st_shim.topic),
+                                  np.asarray(st_ref.topic))
+    np.testing.assert_array_equal(np.asarray(st_shim.n_wk),
+                                  np.asarray(st_ref.n_wk))
+
+
+# ---------------------------------------------------------------------------
+# schedule cadence + firing order
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 7), st.integers(0, 7), st.integers(1, 9),
+       st.integers(1, 30))
+def test_schedule_cadence_property(every_a, every_b, at_c, num_iters):
+    """Firing is a pure function of (every, start, at): simulate
+    num_iters iterations and check the event log against the closed
+    form, with order == registration order within each iteration."""
+    sched = Schedule()
+    sched.add(ScheduledAction("a", lambda ctx, s: s, every=every_a))
+    sched.add(ScheduledAction("b", lambda ctx, s: s + 1 if every_b else s,
+                              every=every_b, start=3))
+    sched.add(ScheduledAction("c", lambda ctx, s: s, at=at_c))
+    ctx = ActionContext()
+    state = 0
+    for it in range(1, num_iters + 1):
+        state = sched.fire(ctx, state, it)
+    expected = []
+    for it in range(1, num_iters + 1):
+        if every_a and it % every_a == 0:
+            expected.append((it, "a"))
+        if every_b and it >= 3 and it % every_b == 0:
+            expected.append((it, "b"))
+        if it == at_c:
+            expected.append((it, "c"))
+    assert ctx.fired == expected
+    # state threading: every "b" firing incremented the state
+    assert state == sum(1 for _, n in expected if n == "b")
+
+
+def test_schedule_rejects_duplicates_and_bad_actions():
+    sched = Schedule()
+    sched.add(ScheduledAction("x", lambda ctx, s: s, every=2))
+    with pytest.raises(ValueError, match="duplicate"):
+        sched.add(ScheduledAction("x", lambda ctx, s: s, every=3))
+    with pytest.raises(ValueError, match="exclusive"):
+        ScheduledAction("y", lambda ctx, s: s, every=2, at=5)
+
+
+def test_session_schedule_registration_order(tmp_path, tiny_corpus,
+                                             tiny_hyper):
+    """Structural events precede observational ones, so an eval on the
+    same iteration sees post-rebuild/post-merge counts."""
+    cfg = RunConfig(algorithm="zen", num_iterations=4, eval_every=2,
+                    rebuild_every=2, merge_every=2, exclusion_start=3,
+                    checkpoint_dir=str(tmp_path / "m"), checkpoint_every=2,
+                    train_checkpoint_dir=str(tmp_path / "t"),
+                    train_checkpoint_every=2)
+    session = TrainSession(tiny_corpus, tiny_hyper, cfg)
+    names = session.schedule.names()
+    assert names == ("exclusion_on", "rebuild", "merge", "eval",
+                     "model_checkpoint", "train_checkpoint")
+    # the plan-default sampling method resolved at construction
+    assert session.cfg.sampling_method == "cdf"
+    # zen is dense: no repad action; a padded-sparse backend gets one
+    sparse = TrainSession(
+        tiny_corpus, tiny_hyper,
+        RunConfig(algorithm="zen_sparse", num_iterations=4, rebuild_every=2),
+    )
+    assert sparse.schedule.names() == ("rebuild", "repad")
+    assert session.schedule.due(2) == ("rebuild", "merge", "eval",
+                                       "model_checkpoint",
+                                       "train_checkpoint")
+    assert session.schedule.due(3) == ("exclusion_on",)
+
+
+# ---------------------------------------------------------------------------
+# RunConfig JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_runconfig_json_roundtrip():
+    cfg = RunConfig(
+        algorithm="lightlda", sampling_method="gumbel", max_kw=48,
+        max_kd=24, num_mh=4, token_chunk=256, mesh_shape=(2, 3),
+        delta_dtype="int16", kd_dtype="int16", num_iterations=77,
+        eval_every=5, target_perplexity=123.5, exclusion_start=30,
+        rebuild_every=10, merge_every=20, merge_threshold=0.1,
+        checkpoint_dir="/tmp/m", checkpoint_every=25,
+        train_checkpoint_dir="/tmp/t", train_checkpoint_every=50,
+    )
+    assert RunConfig.from_json(cfg.to_json()) == cfg
+    # mesh_shape survives as a tuple, default None survives as None
+    assert RunConfig.from_json(RunConfig().to_json()) == RunConfig()
+    with pytest.raises(ValueError, match="unknown RunConfig fields"):
+        RunConfig.from_json('{"algorithm": "zen", "definitely_not": 1}')
+
+
+# ---------------------------------------------------------------------------
+# target perplexity from the eval tick (no second likelihood pass)
+# ---------------------------------------------------------------------------
+
+def test_target_perplexity_single_eval_per_tick(
+    monkeypatch, key, tiny_corpus, tiny_hyper
+):
+    import repro.train.session as session_mod
+
+    calls = {"n": 0}
+    real = session_mod.predictive_llh
+
+    def spy(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(session_mod, "predictive_llh", spy)
+
+    # no target: exactly one likelihood evaluation per eval tick
+    session = TrainSession(
+        tiny_corpus, tiny_hyper,
+        RunConfig(algorithm="zen", num_iterations=6, eval_every=2),
+    )
+    session.run(key)
+    assert calls["n"] == 3
+
+    # an immediately-satisfied target stops at the FIRST eval tick and
+    # still pays only that tick's single evaluation
+    calls["n"] = 0
+    session = TrainSession(
+        tiny_corpus, tiny_hyper,
+        RunConfig(algorithm="zen", num_iterations=50, eval_every=1,
+                  target_perplexity=1e9),
+    )
+    final = session.run(key)
+    assert int(final.iteration) == 1
+    assert calls["n"] == 1
+
+    # unreachable target: every tick checks (runs to num_iterations)
+    calls["n"] = 0
+    session = TrainSession(
+        tiny_corpus, tiny_hyper,
+        RunConfig(algorithm="zen", num_iterations=4, eval_every=1,
+                  target_perplexity=1e-9),
+    )
+    final = session.run(key)
+    assert int(final.iteration) == 4
+    assert calls["n"] == 4
+
+    # the deprecated shim inherits the fix
+    calls["n"] = 0
+    tr = LDATrainer(tiny_corpus, tiny_hyper, TrainConfig(algorithm="zen"))
+    final = tr.train(key, 50, llh_every=1, target_perplexity=1e9)
+    assert int(final.iteration) == 1
+    assert calls["n"] == 1
+
+
+# ---------------------------------------------------------------------------
+# duplicate-topic merge as a scheduled action
+# ---------------------------------------------------------------------------
+
+def test_merge_action_merges_duplicates_and_conserves_counts(tiny_corpus,
+                                                             tiny_hyper):
+    """Seed the sampler state with pairwise-duplicate topics (0<->1 and
+    2<->3 carry identical word distributions); the merge action collapses
+    each pair without breaking count conservation."""
+    k = 4
+    hyper = dataclasses.replace(tiny_hyper, num_topics=k)
+    cfg = RunConfig(algorithm="zen", num_iterations=1, merge_every=1,
+                    merge_threshold=0.2)
+    session = TrainSession(tiny_corpus, hyper, cfg)
+
+    # duplicated init: the "true" topic of token t is (word_t % 2); the
+    # duplicate label splits each true topic over two ids by alternating
+    # within every word's own token list, so columns 2j and 2j+1 carry
+    # near-identical word distributions (each word's count splits in half)
+    w = np.asarray(tiny_corpus.word)
+    true = w % 2
+    occ = np.zeros_like(w)
+    seen: dict = {}
+    for idx in np.argsort(w, kind="stable"):
+        occ[idx] = seen.get(w[idx], 0)
+        seen[w[idx]] = occ[idx] + 1
+    dup = true * 2 + (occ % 2)
+    state = session.init(jax.random.key(0), init_topics=dup.astype(np.int32))
+
+    from repro.core.hyper import duplicate_topic_map
+
+    tm = duplicate_topic_map(np.asarray(state.n_wk), cfg.merge_threshold)
+    assert tm[1] == 0 and tm[3] == 2, tm  # the pairs ARE duplicates
+
+    merged = session.merge_duplicates(state)
+    merged.check_invariants(tiny_corpus)
+    n_k = np.asarray(merged.n_k)
+    assert n_k[1] == 0 and n_k[3] == 0  # merged-away columns emptied
+    assert n_k.sum() == tiny_corpus.num_tokens
+    z = np.asarray(merged.topic)
+    assert set(np.unique(z)) <= {0, 2}
+
+    # end-to-end: one scheduled iteration fires the merge action
+    ctx_names = []
+    final = session.run(
+        state=session.init(jax.random.key(0),
+                           init_topics=dup.astype(np.int32)),
+        callback=lambda s, m: ctx_names.append(int(s.iteration)),
+    )
+    final.check_invariants(tiny_corpus)
+
+
+# ---------------------------------------------------------------------------
+# elastic training checkpoints through the session surface
+# ---------------------------------------------------------------------------
+
+def test_session_train_checkpoint_resume(tmp_path, key, tiny_corpus,
+                                         tiny_hyper):
+    """A second session with the same train_checkpoint_dir resumes from
+    the saved assignments (counts rebuild exactly) and finishes the
+    remaining iterations."""
+    cfg = RunConfig(algorithm="zen", num_iterations=4,
+                    train_checkpoint_dir=str(tmp_path),
+                    train_checkpoint_every=2)
+    s1 = TrainSession(tiny_corpus, tiny_hyper, cfg)
+    mid = s1.run(key)
+    assert int(mid.iteration) == 4
+
+    cfg2 = dataclasses.replace(cfg, num_iterations=6)
+    s2 = TrainSession(tiny_corpus, tiny_hyper, cfg2)
+    final = s2.run(key)
+    assert int(final.iteration) == 6
+    final.check_invariants(tiny_corpus)
+    # the restored counts matched the saved assignments exactly
+    n_wk, n_kd, n_k = counts_lib.build_counts(
+        tiny_corpus.word, tiny_corpus.doc, final.topic,
+        tiny_corpus.num_words, tiny_corpus.num_docs, tiny_hyper.num_topics,
+    )
+    np.testing.assert_array_equal(np.asarray(final.n_wk), np.asarray(n_wk))
+
+
+# ---------------------------------------------------------------------------
+# mesh re-pad: grown rows stop being truncated (2 CPU devices)
+# ---------------------------------------------------------------------------
+
+def test_mesh_repad_unfreezes_grown_rows():
+    run_with_devices("""
+import warnings; warnings.filterwarnings('ignore')
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.data import synthetic_lda_corpus
+from repro.core.types import LDAHyperParams
+from repro.core.zen_sparse import shard_row_capacity
+from repro.train.session import RunConfig, TrainSession
+
+corpus, _ = synthetic_lda_corpus(0, num_docs=80, num_words=60,
+                                 num_topics=8, avg_doc_len=40)
+# symmetric, exploration-heavy priors: the asymmetric prior would keep
+# reinforcing the degenerate init instead of letting rows grow
+hyper = LDAHyperParams(num_topics=64, alpha=2.0, beta=0.5,
+                       asymmetric_alpha=False)
+
+def run(rebuild_every):
+    cfg = RunConfig(algorithm='zen_sparse', mesh_shape=(1, 2),
+                    num_iterations=8, rebuild_every=rebuild_every)
+    session = TrainSession(corpus, hyper, cfg)
+    assert session.cfg.sampling_method == 'gumbel'  # mesh plan default
+    # degenerate init: every token on topic 0 -> row capacities freeze at
+    # the lane minimum even though K=64 leaves lots of room to grow
+    init = np.zeros(session.plan.grid.word.shape, np.int32)
+    state = session.init(jax.random.key(0), init_topics=init)
+    pads0 = session.row_pads
+    state = session.run(state=state)
+    return session, state, pads0
+
+# frozen capacities: the init widths never move, and by the end the real
+# row occupancy has outgrown them -> the sparse tables were truncating
+frozen, st_f, pads0_f = run(rebuild_every=0)
+assert frozen.row_pads == pads0_f
+need_kw = shard_row_capacity(st_f.n_wk)
+need_kd = shard_row_capacity(st_f.n_kd)
+assert need_kw > pads0_f[0] or need_kd > pads0_f[1], (
+    pads0_f, need_kw, need_kd)
+
+# with the rebuild-cadence repad the capacities were re-resolved upward:
+# the step's padded widths now cover every live row (no truncation)
+repad, st_r, pads0_r = run(rebuild_every=2)
+assert pads0_r == pads0_f
+kw, kd = repad.row_pads
+assert (kw, kd) != pads0_r, (kw, kd)
+# the final repad resolved against the final (rebuilt) counts, so the
+# step's padded widths cover every live row — no truncation remains
+assert kw >= shard_row_capacity(st_r.n_wk), (kw,)
+assert kd >= shard_row_capacity(st_r.n_kd), (kd,)
+# and nothing was corrupted along the way
+E = repad.plan.num_tokens
+assert int(jnp.sum(st_r.n_k)) == E
+np.testing.assert_array_equal(np.asarray(jnp.sum(st_r.n_wk, 0)),
+                              np.asarray(st_r.n_k))
+print('REPAD OK', pads0_r, '->', (kw, kd))
+""", n_devices=2, timeout=900)
