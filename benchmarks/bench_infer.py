@@ -1,8 +1,14 @@
-"""Serving throughput: docs/sec vs batch size x bucket layout, per backend.
+"""Serving benchmarks: throughput sweep + latency-vs-throughput frontier.
 
-The serving analogue of the training-sweep benchmarks: a frozen synthetic
-model, a mixed-length query load, and the bucketed ``LDAEngine`` from
-``repro.serving``. Derived column = docs/sec.
+Two serving questions, same frozen synthetic model (DESIGN.md §5):
+
+* **Throughput** — docs/sec vs batch size x bucket layout, per backend,
+  for the chain-based CGS mode (the original PR 2 sweep).
+* **Frontier** — per-request latency (p50/p99 of submit-to-done, small
+  batches served through the async front) for ``mode="throughput"`` per
+  backend vs ``mode="latency"`` (the RT-LDA fast path, one fused
+  deterministic decode per tick). The fast path's job is to beat the
+  chain mode's p99 on small batches; these rows show by how much.
 
     PYTHONPATH=src python benchmarks/run.py --only infer
 """
@@ -18,6 +24,7 @@ BACKENDS = ("zen", "zen_cdf", "zen_pallas")
 NUM_DOCS = 96
 NUM_WORDS = 2000
 NUM_TOPICS = 64
+FRONTIER_DOCS = 24  # small-batch latency probe
 
 
 def _frozen_model():
@@ -35,22 +42,20 @@ def _frozen_model():
     )
 
 
-def _load(rng):
+def _load(rng, n=NUM_DOCS):
     """Mixed-length Zipf query docs (the serving traffic shape)."""
-    lengths = np.clip(rng.poisson(48, size=NUM_DOCS), 4, 240)
+    lengths = np.clip(rng.poisson(48, size=n), 4, 240)
     ranks = np.arange(1, NUM_WORDS + 1, dtype=np.float64) ** -1.2
     pmf = ranks / ranks.sum()
     return [
-        rng.choice(NUM_WORDS, size=n, p=pmf).astype(np.int32)
-        for n in lengths
+        rng.choice(NUM_WORDS, size=ln, p=pmf).astype(np.int32)
+        for ln in lengths
     ]
 
 
-def main() -> None:
+def _throughput_sweep(model, docs):
     from repro.serving import LDAEngine, LDAServeConfig
 
-    model = _frozen_model()
-    docs = _load(np.random.default_rng(1))
     layouts = [
         ("1bucket", (256,)),
         ("2buckets", (64, 256)),
@@ -77,6 +82,51 @@ def main() -> None:
                     dt * 1e6 / NUM_DOCS,
                     f"{NUM_DOCS / dt:.1f} docs/s",
                 )
+
+
+def _closed_loop_latencies(engine, docs):
+    """Serve one doc at a time through the async front; per-doc ms."""
+    lats = []
+    for d in docs:
+        t0 = time.perf_counter()
+        ticket = engine.submit_async(d)
+        engine.result(ticket)
+        lats.append((time.perf_counter() - t0) * 1e3)
+    return sorted(lats)
+
+
+def _frontier(model, docs):
+    """Small-batch latency: chain mode per backend vs the RT-LDA path."""
+    from repro.serving import LDAEngine, LDAServeConfig, latency_percentile
+
+    buckets = (64, 256)
+    probes = [("latency", LDAServeConfig(
+        buckets=buckets, max_batch=8, mode="latency", rtlda_sweeps=2,
+    ))]
+    probes += [
+        (f"throughput_{backend}", LDAServeConfig(
+            buckets=buckets, max_batch=8, num_sweeps=10, algorithm=backend,
+        ))
+        for backend in BACKENDS
+    ]
+    for name, cfg in probes:
+        engine = LDAEngine(model, cfg, seed=0)
+        engine.infer_batch([np.zeros(bl, np.int32) for bl in buckets])
+        lats = _closed_loop_latencies(engine, docs)
+        p50 = latency_percentile(lats, 0.50)
+        p99 = latency_percentile(lats, 0.99)
+        row(
+            f"frontier_{name}",
+            p50 * 1e3,  # us_per_call column = p50 in us
+            f"p99 {p99:.2f} ms",
+        )
+
+
+def main() -> None:
+    model = _frozen_model()
+    rng = np.random.default_rng(1)
+    _throughput_sweep(model, _load(rng))
+    _frontier(model, _load(rng, FRONTIER_DOCS))
 
 
 if __name__ == "__main__":

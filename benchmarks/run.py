@@ -9,7 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
   fig10    redundant-computation elimination (Alg. 5)    (bench_redundant)
   table1   per-algorithm work terms (complexity model)   (bench_table1)
   sec41    partitioner quality (DBH+ et al.)             (bench_partition)
-  infer    serving throughput, batch x buckets x backend (bench_infer)
+  infer    serving throughput + latency/throughput frontier (bench_infer)
 """
 import argparse
 

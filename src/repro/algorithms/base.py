@@ -23,8 +23,10 @@ counts/corpus substrate:
   only the per-slot doc-topic counts move. The base class provides a
   default derivation that every backend inherits (the dense frozen-phi
   sweep, sweep-equivalent math with the word side frozen), so all
-  registered backends serve for free; ``zen_cdf`` and ``zen_pallas``
-  override it with their native machinery and set ``native_infer``.
+  registered backends serve for free; ``zen_cdf`` (one-time frozen
+  per-word CDFs) and ``zen_pallas`` (a dedicated frozen-model kernel
+  variant with per-slot seeds) override it natively and set
+  ``native_infer``.
 
 Capability flags let drivers adapt instead of hard-coding per-name logic:
 
@@ -163,9 +165,12 @@ class SamplerBackend:
         ``repro.core.inference.cgs_infer`` (same conditional, same cdf
         inversion, same key schedule), which the serving tests verify
         bit-exactly. Overrides must keep slot chains *statistically*
-        independent but may weaken bit-stability (``zen_cdf`` keeps it;
-        ``zen_pallas`` cannot — its kernel hashes one scalar seed with
-        flat token coordinates; see its docstring).
+        independent AND layout-stable: ``zen_cdf`` inherits both from
+        per-slot threefry keys; ``zen_pallas`` gets layout-stability
+        from per-token counter-based seeds hashed out of the slot key +
+        in-doc position (so it is bit-stable across batch layouts, but
+        under its own hash noise — statistically, not bitwise,
+        comparable to the oracle; see its docstring).
         """
         return _dense_infer_sweep(
             keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,

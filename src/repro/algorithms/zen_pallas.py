@@ -10,11 +10,23 @@ backend is selectable everywhere: kernel on TPU, interpreted ref on CPU.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
 from repro.algorithms.base import CellBackend, SamplerKnobs, chunked_token_map
 from repro.algorithms.registry import register
+
+
+class FrozenPallasModel(NamedTuple):
+    """One-time ``prepare_infer`` precompute for the serving kernel: the
+    per-topic vectors the frozen-model variant streams as (1, bk) tiles.
+    Tiny, but hoisting them out of the sweep keeps every ``infer_sweep``
+    dispatch free of the alpha_k derivation and float casts."""
+
+    alpha_k: jax.Array  # (K,) f32
+    n_k_f: jax.Array  # (K,) f32 frozen topic totals
 
 
 @register("zen_pallas", "zen_dense_kernel")
@@ -23,57 +35,64 @@ class ZenPallas(CellBackend):
 
     native_infer = True
 
+    def prepare_infer(self, n_wk, n_k, hyper, knobs: SamplerKnobs):
+        """Freeze the per-topic serving vectors (see
+        :class:`FrozenPallasModel`). The count rows themselves stay in
+        the engine's ``FrozenLDAModel`` — the kernel gathers them
+        per-sweep, uncompensated (the frozen-model kernel variant needs
+        no word-side one-hot add)."""
+        return FrozenPallasModel(
+            alpha_k=hyper.alpha_k(n_k),
+            n_k_f=n_k.astype(jnp.float32),
+        )
+
     def infer_sweep(
         self, keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
         knobs: SamplerKnobs, aux=None,
     ):
-        """Frozen-model serving through the unchanged fused kernel.
+        """Frozen-model serving through the dedicated kernel variant
+        (``kernels.zen_sampler._zen_infer_kernel``).
 
-        The kernel applies exact ¬dw exclusion to all three counts
-        in-register; for frozen-phi inference only the *doc* side may be
-        excluded, so the gathered word rows are pre-compensated with the
-        token's own one-hot (the kernel's subtraction then restores the
-        frozen N_w|k exactly). N_k is shared across the batch and cannot
-        be compensated per token, so the denominator is off by one at the
-        token's current topic — a < 1/N_k relative approximation the
-        serving tests bound statistically.
+        Unlike the training kernel (which applies ¬dw exclusion to all
+        three counts in-register, and previously forced this path to
+        pre-compensate the gathered word rows with a (T, K) one-hot add
+        plus an N_k off-by-one approximation), the frozen variant
+        excludes on the **doc side only** — exactly the frozen-phi
+        conditional, no compensation rows, no denominator skew.
 
-        Randomness caveat: the kernel draws counter-based noise from ONE
-        scalar seed and the flat token coordinates, so this backend does
-        not honor the per-slot-key bit-stability contract of the default
-        derivation — results are statistically exchangeable but depend on
-        batch layout. The seed mixes *every* slot's key (not just
-        keys[0]) so it changes every sweep even when some slots are
-        vacant and holding the engine's constant dummy key (a fixed seed
-        would degenerate the Gibbs chain into an iterated deterministic
-        map). A frozen-model kernel variant with per-slot seeds is a
-        ROADMAP follow-up.
+        Randomness: per-token seeds are hashed from the token's *slot*
+        key and in-doc position (``kernels.zen_sampler.golden_seed``), so
+        a request's draws depend only on its own key and tokens — the
+        same padding-exactness / batch-composition-independence contract
+        as the default derivation, just under the kernel's counter-based
+        hash instead of threefry (so it is not draw-for-draw comparable
+        with ``cgs_infer``, but it IS bit-stable across batch layouts;
+        ``tests/test_latency_serving.py`` pins both properties).
         """
-        from repro.kernels.ops import zen_sample
+        from repro.kernels.ops import zen_infer_sample
 
+        if aux is None:
+            aux = self.prepare_infer(n_wk, n_k, hyper, knobs)
         b, l = words.shape
-        k = hyper.num_topics
         slot = jax.lax.broadcasted_iota(jnp.int32, (b, l), 0).reshape(-1)
         w = words.reshape(-1)
         z = z_old.reshape(-1)
-        live = mask.reshape(-1).astype(jnp.int32)
 
-        onehot = jax.nn.one_hot(z, k, dtype=jnp.int32) * live[:, None]
-        nwk_rows = n_wk[w].astype(jnp.int32) + onehot
-        nkd_rows = n_kd[slot].astype(jnp.int32)
-        alpha_k = hyper.alpha_k(n_k)
-        w_beta = n_wk.shape[0] * hyper.beta
-        # fold the slot index in before XOR-mixing so identical keys in two
-        # slots (or the engine's repeated dummy key) can never cancel out
-        mixed = jax.vmap(jax.random.fold_in)(keys, jnp.arange(b))
-        key_bits = jax.random.key_data(mixed).astype(jnp.uint32).reshape(-1)
-        folded = jax.lax.reduce(
-            key_bits, jnp.uint32(0), jax.lax.bitwise_xor, (0,)
-        )
-        seed = (folded & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
-        out = zen_sample(
-            nwk_rows, nkd_rows, z, alpha_k, n_k.astype(jnp.float32), seed,
-            beta=hyper.beta, w_beta=w_beta, bt=knobs.bt, bk=knobs.bk,
+        from repro.kernels.zen_sampler import golden_seed
+
+        bits = jax.random.key_data(keys).astype(jnp.uint32)  # (B, 2)
+        pos = jax.lax.broadcasted_iota(jnp.uint32, (1, l), 1)
+        seeds = golden_seed(
+            bits[:, :1], bits[:, 1:], pos
+        ).reshape(-1)  # (B*L,) int32, counter-based in (slot key, pos)
+
+        # w_beta stays a static python float (jit static arg), so it is
+        # derived from shapes/hyper here, never threaded through the aux
+        out = zen_infer_sample(
+            n_wk[w].astype(jnp.int32), n_kd[slot].astype(jnp.int32), z,
+            seeds, aux.alpha_k, aux.n_k_f,
+            beta=hyper.beta, w_beta=n_wk.shape[0] * hyper.beta,
+            bt=knobs.bt, bk=knobs.bk,
         )
         return out.reshape(b, l)
 

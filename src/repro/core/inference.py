@@ -5,6 +5,12 @@
 * ``rtlda_infer`` — RT-LDA (paper [27]): replace the sampling operation with
   ``argmax`` of the conditional — deterministic, one pass per sweep, built
   for millisecond-latency online serving.
+* ``rtlda_assign`` — the masked padded-row form of the RT-LDA decode that
+  the serving engine's latency mode vmaps over slot batches
+  (``repro.serving.lda_engine``, DESIGN.md §5.1): returns the final topic
+  assignments and doc-topic counts instead of theta, and ignores padding
+  positions exactly, so a padded decode is bit-identical to the unpadded
+  ``rtlda_infer`` on the live prefix.
 
 ``cgs_infer`` is the **single-document oracle** for the batched serving
 subsystem (``repro.serving.lda_engine``): the default backend
@@ -12,7 +18,8 @@ subsystem (``repro.serving.lda_engine``): the default backend
 its conditional, cdf inversion, and key schedule draw-for-draw, and
 ``tests/test_lda_engine.py`` asserts the served thetas are bit-equal to
 this function. Change the sampling math or RNG layout here only in
-lockstep with that default.
+lockstep with that default. ``rtlda_assign`` is the corresponding oracle
+for the engine's **latency mode** (``tests/test_latency_serving.py``).
 """
 from __future__ import annotations
 
@@ -79,6 +86,58 @@ def cgs_infer(
     return theta
 
 
+def rtlda_assign(
+    n_wk: jax.Array,
+    n_k: jax.Array,
+    words: jax.Array,
+    mask: jax.Array,
+    hyper: LDAHyperParams,
+    num_sweeps: int = 3,
+) -> tuple:
+    """RT-LDA decode on one (possibly padded) token row.
+
+    Args:
+        n_wk: ``(W, K)`` int32 frozen word-topic counts.
+        n_k: ``(K,)`` int32 frozen topic totals.
+        words: ``(L,)`` int32 token word ids; padding positions may hold
+            any in-vocabulary id (they are ignored via ``mask``).
+        mask: ``(L,)`` bool; True marks live tokens. Padding never enters
+            the doc-topic counts, so the result on the live prefix is
+            bit-identical for every pad width (the latency-mode
+            padding-exactness contract, DESIGN.md §5.1).
+        hyper: model hyper-parameters (``num_topics``, alpha, beta).
+        num_sweeps: full deterministic argmax passes after the greedy
+            initial assignment; 0 returns the initial assignment.
+
+    Returns:
+        ``(z, n_kd)``: ``z`` ``(L,)`` int32 final topic per position
+        (garbage at padding — mask it), ``n_kd`` ``(K,)`` int32 doc-topic
+        counts over live tokens only.
+
+    Every step is a deterministic argmax of the frozen-phi conditional
+    ``(N_w|k + beta)/(N_k + W*beta) * (N_k|d + alpha_k)`` — no RNG, no
+    burn-in, no thinning. One fused ``scan`` of ``num_sweeps`` passes, so
+    a jitted caller pays a single dispatch per decode.
+    """
+    k = hyper.num_topics
+    live = mask.astype(jnp.int32)
+
+    def count(z):
+        return jnp.zeros((k,), jnp.int32).at[z].add(live)
+
+    probs0 = _doc_conditional(
+        n_wk, n_k, jnp.zeros((k,), jnp.int32), words, hyper
+    )
+    z = jnp.argmax(probs0, axis=-1).astype(jnp.int32)
+
+    def sweep(z, _):
+        probs = _doc_conditional(n_wk, n_k, count(z), words, hyper)
+        return jnp.argmax(probs, axis=-1).astype(jnp.int32), None
+
+    z, _ = jax.lax.scan(sweep, z, None, length=num_sweeps)
+    return z, count(z)
+
+
 def rtlda_infer(
     n_wk: jax.Array,
     n_k: jax.Array,
@@ -86,20 +145,22 @@ def rtlda_infer(
     hyper: LDAHyperParams,
     num_sweeps: int = 3,
 ) -> jax.Array:
-    """RT-LDA: deterministic max-assignment sweeps (paper §4.3)."""
+    """RT-LDA: deterministic max-assignment sweeps (paper §4.3).
+
+    Args:
+        n_wk: ``(W, K)`` int32 frozen word-topic counts.
+        n_k: ``(K,)`` int32 frozen topic totals.
+        words: ``(L,)`` int32 token word ids of one document.
+        hyper: model hyper-parameters.
+        num_sweeps: deterministic passes (see :func:`rtlda_assign`).
+
+    Returns:
+        theta ``(K,)`` float32 — the smoothed doc-topic distribution
+        ``(N_k|d + alpha_k) / (L + sum(alpha))``.
+    """
     l = words.shape[0]
-    k = hyper.num_topics
-    probs0 = _doc_conditional(
-        n_wk, n_k, jnp.zeros((k,), jnp.int32), words, hyper
+    _, n_kd = rtlda_assign(
+        n_wk, n_k, words, jnp.ones((l,), bool), hyper, num_sweeps
     )
-    z = jnp.argmax(probs0, axis=-1).astype(jnp.int32)
-
-    def sweep(z, _):
-        n_kd = jnp.zeros((k,), jnp.int32).at[z].add(1)
-        probs = _doc_conditional(n_wk, n_k, n_kd, words, hyper)
-        return jnp.argmax(probs, axis=-1).astype(jnp.int32), None
-
-    z, _ = jax.lax.scan(sweep, z, None, length=num_sweeps)
-    n_kd = jnp.zeros((k,), jnp.int32).at[z].add(1)
     alpha_k = hyper.alpha_k(n_k)
     return (n_kd.astype(jnp.float32) + alpha_k) / (l + jnp.sum(alpha_k))

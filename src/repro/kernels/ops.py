@@ -11,7 +11,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.topic_histogram import topic_histogram_pallas
-from repro.kernels.zen_sampler import zen_sample_pallas
+from repro.kernels.zen_sampler import (
+    zen_infer_sample_pallas,
+    zen_sample_pallas,
+)
 
 
 def _on_cpu() -> bool:
@@ -63,6 +66,48 @@ def zen_sample(
     nk_p = _pad_to(n_k.astype(jnp.float32), 0, bk, value=1e9)
     out = zen_sample_pallas(
         nwk_p, nkd_p, z_p, a_p, nk_p, seed,
+        beta=beta, w_beta=w_beta, bt=bt_eff, bk=bk, interpret=interpret,
+    )
+    return out[:t]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beta", "w_beta", "bt", "bk", "interpret"),
+)
+def zen_infer_sample(
+    nwk_rows: jax.Array,
+    nkd_rows: jax.Array,
+    z_old: jax.Array,
+    seeds: jax.Array,
+    alpha_k: jax.Array,
+    n_k: jax.Array,
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Frozen-model serving sample (see ``_zen_infer_kernel``): doc-side
+    exclusion only, per-token counter-based seeds.
+
+    Pads T to bt (inert seed-0 tokens, sliced off) and K to bk; K padding
+    gets alpha_k = 0 and zero doc counts, so p == 0 there and a padded
+    topic can never win the argmax.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    t, k = nwk_rows.shape
+    bt_eff = min(bt, max(8, t))
+    nwk_p = _pad_to(_pad_to(nwk_rows, 0, bt_eff), 1, bk)
+    nkd_p = _pad_to(_pad_to(nkd_rows, 0, bt_eff), 1, bk)
+    z_p = _pad_to(z_old, 0, bt_eff)
+    s_p = _pad_to(seeds, 0, bt_eff)
+    a_p = _pad_to(alpha_k.astype(jnp.float32), 0, bk, value=0.0)
+    nk_p = _pad_to(n_k.astype(jnp.float32), 0, bk, value=1e9)
+    out = zen_infer_sample_pallas(
+        nwk_p, nkd_p, z_p, s_p, a_p, nk_p,
         beta=beta, w_beta=w_beta, bt=bt_eff, bk=bk, interpret=interpret,
     )
     return out[:t]

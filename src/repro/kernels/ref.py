@@ -49,6 +49,34 @@ def zen_probs_ref(
     return p / jnp.sum(p, axis=-1, keepdims=True)
 
 
+def zen_infer_sample_ref(
+    nwk_rows: jax.Array,
+    nkd_rows: jax.Array,
+    z_old: jax.Array,
+    seeds: jax.Array,
+    alpha_k: jax.Array,
+    n_k: jax.Array,
+    *,
+    beta: float,
+    w_beta: float,
+) -> jax.Array:
+    """Bit-exact oracle of ``zen_infer_sample_pallas`` (frozen-model
+    serving variant): doc-side-only exclusion, frozen word/topic totals,
+    per-token seeds with (seed, topic) noise coordinates."""
+    t, k = nwk_rows.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, k), 1)
+    self_hit = (cols == z_old[:, None]).astype(jnp.float32)
+    nw = nwk_rows.astype(jnp.float32)
+    nd = nkd_rows.astype(jnp.float32) - self_hit
+    a = alpha_k.astype(jnp.float32)[None, :]
+    p = (nd + a) * (nw + beta) / (n_k.astype(jnp.float32)[None, :] + w_beta)
+    g = gumbel_noise(
+        seeds.astype(jnp.int32)[:, None], jnp.zeros((t, 1), jnp.uint32), cols
+    )
+    score = jnp.log(jnp.maximum(p, 1e-30)) + g
+    return jnp.argmax(score, axis=-1).astype(jnp.int32)
+
+
 def topic_histogram_ref(
     rows: jax.Array,
     z_old: jax.Array,

@@ -72,6 +72,36 @@ def gumbel_noise(seed, row, col):
     return -jnp.log(-jnp.log(u))
 
 
+def mix32(x: jax.Array) -> jax.Array:
+    """The kernel's avalanche mixer on plain uint32 arrays (public form).
+
+    The serving path uses it *outside* the kernel to derive per-token
+    seeds from per-slot PRNG keys: the derivation is pure elementwise
+    hashing of (slot key bits, token position), so it is counter-based by
+    construction — prefix-stable in the bucket pad and independent of
+    batch composition, unlike shaped ``jax.random`` draws under
+    non-partitionable threefry.
+    """
+    return _mix(x.astype(jnp.uint32))
+
+
+def golden_seed(key_bits_hi: jax.Array, key_bits_lo: jax.Array,
+                pos: jax.Array) -> jax.Array:
+    """Per-token int32 seeds from split per-slot key words + positions.
+
+    ``seed[b, p] = mix(hi[b] ^ mix(lo[b]) ^ p * GOLDEN)`` with the high
+    bit cleared (the kernels take non-negative int32 seeds). Broadcasts:
+    pass ``hi``/``lo`` shaped ``(B, 1)`` and ``pos`` shaped ``(1, L)`` to
+    get the ``(B, L)`` serving seed grid.
+    """
+    h = mix32(
+        key_bits_hi.astype(jnp.uint32)
+        ^ mix32(key_bits_lo)
+        ^ (pos.astype(jnp.uint32) * jnp.asarray(_GOLD, jnp.uint32))
+    )
+    return (h & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)
+
+
 def _zen_sampler_kernel(
     # scalar prefetch
     seed_ref,
@@ -179,6 +209,127 @@ def zen_sample_pallas(
         nwk_rows,
         nkd_rows,
         z_old[:, None],
+        alpha_k[None, :].astype(jnp.float32),
+        n_k[None, :].astype(jnp.float32),
+    )
+    return out[:, 0]
+
+
+def _zen_infer_kernel(
+    # inputs
+    nwk_ref,  # (bt, bk) int32 — frozen word-topic rows, this K tile
+    nkd_ref,  # (bt, bk) int32 — gathered per-slot doc-topic rows
+    zold_ref,  # (bt, 1) int32 — previous assignment (doc-side ¬t)
+    seed_ref,  # (bt, 1) int32 — per-token counter-based seeds
+    alpha_ref,  # (1, bk) f32 — alpha_k
+    nk_ref,  # (1, bk) f32 — frozen N_k
+    # output
+    out_ref,  # (bt, 1) int32 — sampled topic
+    # scratch
+    m_ref,  # (bt, 1) f32 — running max of log p + g
+    a_ref,  # (bt, 1) i32 — running argmax
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int,
+    bk: int,
+):
+    """Frozen-model serving variant of ``_zen_sampler_kernel``.
+
+    Differences from the training kernel, both serving-exact:
+
+    * **No word-side exclusion** — phi is frozen, the query's tokens were
+      never counted in ``N_w|k``/``N_k``, so only the doc side excludes
+      the token's own assignment. This removes the training path's
+      pre-compensation of the gathered word rows (one (T, K) int32 add)
+      *and* its N_k off-by-one denominator approximation.
+    * **Per-token seeds** — noise coordinates are (seed[t], topic), with
+      seed[t] derived outside from the token's *slot* key and in-doc
+      position (``golden_seed``). A token's draw therefore never depends
+      on the flat batch coordinates, so serving is padding-exact and
+      batch-composition-independent here too (DESIGN.md §5.1/§5.2).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        a_ref[...] = jnp.zeros_like(a_ref)
+
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bt, bk), 1)
+
+    # doc-side-only exact ¬t exclusion; word side stays frozen
+    self_hit = (cols == zold_ref[...]).astype(jnp.float32)
+    nw = nwk_ref[...].astype(jnp.float32)
+    nd = nkd_ref[...].astype(jnp.float32) - self_hit
+    alpha_k = alpha_ref[...]
+
+    # frozen-phi conditional: (N_k|d^(¬t) + alpha_k)(N_w|k + beta)/(N_k + Wβ)
+    p = (nd + alpha_k) * (nw + beta) / (nk_ref[...] + w_beta)
+
+    g = gumbel_noise(seed_ref[...], jnp.zeros((bt, 1), jnp.uint32), cols)
+    score = jnp.log(jnp.maximum(p, 1e-30)) + g
+
+    tile_max = jnp.max(score, axis=1, keepdims=True)  # (bt, 1)
+    tile_arg = jnp.argmax(score, axis=1).astype(jnp.int32)[:, None] + j * bk
+
+    better = tile_max > m_ref[...]
+    a_ref[...] = jnp.where(better, tile_arg, a_ref[...])
+    m_ref[...] = jnp.where(better, tile_max, m_ref[...])
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        out_ref[...] = a_ref[...]
+
+
+def zen_infer_sample_pallas(
+    nwk_rows: jax.Array,  # (T, K) int32 frozen gathered word rows
+    nkd_rows: jax.Array,  # (T, K) int32 per-slot doc rows
+    z_old: jax.Array,  # (T,) int32
+    seeds: jax.Array,  # (T,) int32 per-token counter-based seeds
+    alpha_k: jax.Array,  # (K,) f32
+    n_k: jax.Array,  # (K,) f32/int32 frozen
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Frozen-model Gumbel-max sample, one topic per token. T % bt == 0
+    and K % bk == 0 required (``ops.zen_infer_sample`` pads)."""
+    t, k = nwk_rows.shape
+    assert t % bt == 0 and k % bk == 0, (t, k, bt, bk)
+    grid = (t // bt, k // bk)
+    kernel = functools.partial(
+        _zen_infer_kernel, beta=beta, w_beta=w_beta, bt=bt, bk=bk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.int32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((t, 1), jnp.int32),
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )(
+        nwk_rows,
+        nkd_rows,
+        z_old[:, None],
+        seeds[:, None],
         alpha_k[None, :].astype(jnp.float32),
         n_k[None, :].astype(jnp.float32),
     )

@@ -2,18 +2,24 @@
 
 Loads the model checkpoint written by ``launch/train.py --checkpoint-dir``
 (N_wk/N_k + hyper), builds the bucketed :class:`~repro.serving.LDAEngine`
-for any registered sampler backend, and pushes a libsvm stream or a
-synthetic load through it.
+in either execution mode, and pushes a libsvm stream or a synthetic load
+through the async ticket front.
 
     PYTHONPATH=src python -m repro.launch.serve_lda \
         --checkpoint-dir /tmp/lda_ckpt \
+        [--mode throughput|latency] \
         [--corpus path.libsvm | --synthetic-docs 64] \
         [--algorithm zen] [--buckets 32,64,128,256] [--max-batch 32] \
-        [--sweeps 10] [--burn-in -1] [--thin 1] [--eval] [--show 5]
+        [--sweeps 10] [--rtlda-sweeps 2] [--burn-in -1] [--thin 1] \
+        [--tick-period 0] [--max-slot-wait 0] [--eval] [--show 5]
 
-Prints per-request top topics for the first ``--show`` documents, the
-engine throughput (docs/sec, sweeps run), and — with ``--eval`` — the
-doc-completion held-out perplexity, the serving-quality number.
+Every document goes through ``submit_async`` -> ``result``, so the driver
+reports per-request latency percentiles (p50/p99 of submit-to-done) next
+to throughput (docs/sec, decode dispatches) in both modes — the numbers
+DESIGN.md §5.1 trades against each other. ``--tick-period > 0`` runs the
+background admission ticker instead of caller-driven ticks. With
+``--eval``, also prints the doc-completion held-out perplexity, the
+serving-quality number.
 """
 import argparse
 import time
@@ -23,23 +29,36 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--checkpoint-dir", required=True,
                     help="model checkpoint dir from train --checkpoint-dir")
+    ap.add_argument("--mode", default="throughput",
+                    choices=["throughput", "latency"],
+                    help="chain CGS sweeps vs the deterministic RT-LDA "
+                         "fast path (DESIGN.md §5.1)")
     ap.add_argument("--corpus", default=None,
                     help="libsvm documents to serve (docs are the queries)")
     ap.add_argument("--synthetic-docs", type=int, default=64,
                     help="synthetic query load (when --corpus is not given)")
     ap.add_argument("--synthetic-len", type=int, default=60)
     ap.add_argument("--algorithm", default="zen",
-                    help="any registered sampler backend")
+                    help="any registered sampler backend (throughput mode)")
     ap.add_argument("--buckets", default="32,64,128,256",
                     help="comma-separated bucket lengths")
     ap.add_argument("--max-batch", type=int, default=32,
                     help="slots per bucket")
-    ap.add_argument("--sweeps", type=int, default=10)
+    ap.add_argument("--sweeps", type=int, default=10,
+                    help="chain sweeps per request (throughput mode)")
+    ap.add_argument("--rtlda-sweeps", type=int, default=2,
+                    help="fused deterministic passes (latency mode)")
     ap.add_argument("--burn-in", type=int, default=-1,
                     help="-1 = final-sweep theta; >=0 = posterior mean")
     ap.add_argument("--thin", type=int, default=1)
     ap.add_argument("--sampling-method", default="cdf",
                     choices=["cdf", "gumbel"])
+    ap.add_argument("--tick-period", type=float, default=0.0,
+                    help="> 0: run the background admission ticker at this "
+                         "period (seconds); 0: drive ticks inline")
+    ap.add_argument("--max-slot-wait", type=int, default=0,
+                    help="ticks a request waits for its preferred bucket "
+                         "before spilling into a wider one (0 = never)")
     ap.add_argument("--eval", action="store_true",
                     help="doc-completion held-out perplexity")
     ap.add_argument("--show", type=int, default=5,
@@ -57,6 +76,7 @@ def main() -> None:
         LDAServeConfig,
         doc_completion_perplexity,
         docs_from_corpus,
+        latency_percentile,
     )
 
     model = FrozenLDAModel.from_checkpoint(args.checkpoint_dir)
@@ -81,22 +101,41 @@ def main() -> None:
         thin=args.thin,
         algorithm=args.algorithm,
         sampling_method=args.sampling_method,
+        mode=args.mode,
+        rtlda_sweeps=args.rtlda_sweeps,
+        tick_period=args.tick_period,
+        max_slot_wait=args.max_slot_wait,
     )
     engine = LDAEngine(model, cfg, seed=args.seed)
-    print(f"engine: algorithm={args.algorithm} buckets={cfg.buckets} "
-          f"max_batch={cfg.max_batch} sweeps={cfg.num_sweeps}")
+    plan = (f"rtlda_sweeps={cfg.rtlda_sweeps} (deterministic)"
+            if args.mode == "latency" else
+            f"algorithm={args.algorithm} sweeps={cfg.num_sweeps}")
+    print(f"engine: mode={args.mode} {plan} buckets={cfg.buckets} "
+          f"max_batch={cfg.max_batch}")
 
-    # warm every bucket's jit cache (one doc per width) so throughput
-    # reflects steady-state serving, not XLA compilation
+    # warm every bucket's jit cache (one doc per width) so the latency
+    # distribution reflects steady-state serving, not XLA compilation
     engine.infer_batch([np.zeros(bl, np.int32) for bl in cfg.buckets])
+
+    if args.tick_period > 0:
+        engine.start(args.tick_period)
 
     sweeps0 = engine.sweeps_run
     t0 = time.perf_counter()
-    thetas = engine.infer_batch(docs)
+    tickets = [engine.submit_async(d) for d in docs]
+    reqs = [engine.request(t) for t in tickets]  # refs survive the reap
+    thetas = [engine.result(t) for t in tickets]
     dt = time.perf_counter() - t0
+    if args.tick_period > 0:
+        engine.stop()
+
+    lats = sorted((r.t_done - r.t_submit) * 1e3 for r in reqs)
     print(f"served {len(docs)} docs in {dt:.3f}s "
           f"({len(docs) / dt:.1f} docs/sec, "
-          f"{engine.sweeps_run - sweeps0} bucket sweeps)")
+          f"{engine.sweeps_run - sweeps0} bucket dispatches)")
+    print(f"latency ms: p50={latency_percentile(lats, 0.50):.2f} "
+          f"p99={latency_percentile(lats, 0.99):.2f} "
+          f"max={lats[-1]:.2f}")
 
     for i in range(min(args.show, len(docs))):
         top = np.argsort(-thetas[i])[:3]

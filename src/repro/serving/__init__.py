@@ -6,4 +6,5 @@ from repro.serving.lda_engine import (  # noqa: F401
     LDAServeConfig,
     doc_completion_perplexity,
     docs_from_corpus,
+    latency_percentile,
 )

@@ -3,7 +3,7 @@
 This is the deployment half of the paper's system (§4.3 "Model
 inference"): training produces ``N_w|k``/``N_k``; downstream traffic is
 unseen documents whose topic mixture theta must be inferred at high
-throughput. The engine:
+throughput — or, for millisecond SLAs, at low latency. The engine:
 
 * freezes the trained counts into a :class:`FrozenLDAModel` (plus any
   backend-specific sampling tables via ``SamplerBackend.prepare_infer`` —
@@ -12,23 +12,48 @@ throughput. The engine:
 * packs incoming documents into **length-bucketed padded batches** — one
   slot array per bucket width, so every jitted sweep sees a fixed shape
   and XLA compiles each bucket exactly once;
-* runs continuously-admitting multi-document CGS sweeps through the
-  ``repro.algorithms`` registry's ``infer_sweep`` capability: finished
-  slots are refilled from the queue every step (the continuous-batching
-  idea of ``serving/engine.py``, applied to Gibbs sweeps instead of
-  decode steps).
+* decodes through one of two execution plans (DESIGN.md §5.1):
 
-Statistical contract: each request's chain consumes randomness only from
-its own key, with the same schedule as the single-doc oracle
-``repro.core.inference.cgs_infer`` (z0 from ``randint(key)``, sweep j
-from ``split(key)[j]``). For the default (dense) backend with cdf
-sampling this makes a served document's theta *bit-identical* to
-``cgs_infer(key, ...)`` regardless of bucket padding or batch
-composition — the property ``tests/test_lda_engine.py`` pins down.
+  - ``mode="throughput"`` (default) — continuously-admitting
+    multi-document CGS sweeps through the ``repro.algorithms`` registry's
+    ``infer_sweep`` capability: one sweep per step, finished slots are
+    refilled from the queue every step (continuous batching applied to
+    Gibbs chains);
+  - ``mode="latency"`` — the RT-LDA fast path: each admission tick runs a
+    **single fused** deterministic decode per non-empty bucket
+    (``repro.core.inference.rtlda_assign`` vmapped over slots — argmax
+    sweeps, no burn-in chains, no thinning, no RNG), so every admitted
+    request completes in that same tick. One dispatch per decode instead
+    of ``num_sweeps`` chained dispatches.
+
+* fronts both plans with an **async ticket API** — :meth:`LDAEngine.submit_async`
+  returns a ticket immediately, :meth:`LDAEngine.poll` reports the ticket
+  lifecycle (``queued -> admitted -> done``), and :meth:`LDAEngine.result`
+  blocks (with optional timeout) and reaps. Requests arriving between
+  ticks coalesce into the next tick's batch instead of blocking the
+  caller; an optional background ticker (:meth:`LDAEngine.start`) drives
+  admission at a fixed ``tick_period``.
+
+Statistical contract (throughput mode): each request's chain consumes
+randomness only from its own key, with the same schedule as the
+single-doc oracle ``repro.core.inference.cgs_infer`` (z0 from
+``randint(key)``, sweep j from ``split(key)[j]``). For the default
+(dense) backend with cdf sampling this makes a served document's theta
+*bit-identical* to ``cgs_infer(key, ...)`` regardless of bucket padding
+or batch composition — the property ``tests/test_lda_engine.py`` pins
+down. Latency mode is fully deterministic: the same document always
+yields bit-identical topic assignments for every bucketing, batch
+composition, submission order, and engine seed — engine-to-engine thetas
+are therefore bit-equal too, and they match the single-doc
+``rtlda_infer`` oracle to float tolerance (the engine's theta arithmetic
+is numpy, the oracle's is XLA; the count inputs are integer-identical)
+(``tests/test_latency_serving.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -37,12 +62,26 @@ import numpy as np
 
 from repro import algorithms
 from repro.algorithms import SamplerKnobs
+from repro.core.inference import rtlda_assign
 from repro.core.types import LDAHyperParams
 
 
 @dataclasses.dataclass(frozen=True)
 class FrozenLDAModel:
-    """A trained LDA model frozen for serving: counts + hyper-parameters."""
+    """A trained LDA model frozen for serving.
+
+    Attributes:
+        n_wk: ``(W, K)`` int32 word-topic counts from training.
+        n_k: ``(K,)`` int32 per-topic totals (``n_wk.sum(0)``).
+        hyper: the :class:`~repro.core.types.LDAHyperParams` the model was
+            trained with (``num_topics``, alpha, beta).
+
+    The counts never change while serving; backends may precompute
+    sampling tables from them once (``SamplerBackend.prepare_infer``).
+    Build one with :meth:`from_state` (from a live trainer state) or
+    :meth:`from_checkpoint` (from the artifact ``launch/train.py
+    --checkpoint-dir`` writes).
+    """
 
     n_wk: jax.Array  # (W, K) int32 word-topic counts
     n_k: jax.Array  # (K,) int32 topic totals
@@ -50,10 +89,12 @@ class FrozenLDAModel:
 
     @property
     def num_words(self) -> int:
+        """Vocabulary size W (token ids outside ``[0, W)`` are unknown)."""
         return int(self.n_wk.shape[0])
 
     @property
     def num_topics(self) -> int:
+        """Topic count K — the length of every served theta."""
         return int(self.n_wk.shape[1])
 
     def phi(self) -> jax.Array:
@@ -65,7 +106,13 @@ class FrozenLDAModel:
 
     @classmethod
     def from_state(cls, state, hyper: LDAHyperParams) -> "FrozenLDAModel":
-        """Freeze a trainer ``CGSState`` (single-box or gathered)."""
+        """Freeze a trainer ``CGSState`` (single-box or gathered).
+
+        Args:
+            state: any object with ``n_wk``/``n_k`` count arrays (a
+                ``CGSState`` or the session's gathered model arrays).
+            hyper: the hyper-parameters used in training.
+        """
         return cls(
             n_wk=jnp.asarray(state.n_wk, jnp.int32),
             n_k=jnp.asarray(state.n_k, jnp.int32),
@@ -90,11 +137,25 @@ class FrozenLDAModel:
 class LDAServeConfig:
     """Engine knobs.
 
-    ``burn_in < 0`` (default) reproduces the oracle estimator: theta from
-    the final sweep's doc-topic counts. ``burn_in >= 0`` switches to the
-    posterior-mean estimator: counts are sampled every ``thin`` sweeps
-    after the first ``burn_in`` and theta is their average — better
-    quality per sweep, no longer bit-comparable to ``cgs_infer``.
+    Execution plan: ``mode="throughput"`` (default) runs chain-based CGS
+    sweeps through the registry backend ``algorithm``; ``mode="latency"``
+    runs the deterministic RT-LDA fast path (``rtlda_sweeps`` fused argmax
+    passes, one dispatch per bucket per tick, no RNG — per-request
+    ``key``/``num_sweeps``/``burn_in``/``thin`` are ignored).
+
+    Chain estimator (throughput mode): ``burn_in < 0`` (default)
+    reproduces the oracle estimator — theta from the final sweep's
+    doc-topic counts. ``burn_in >= 0`` switches to the posterior-mean
+    estimator: counts are sampled every ``thin`` sweeps after the first
+    ``burn_in`` and theta is their average — better quality per sweep, no
+    longer bit-comparable to ``cgs_infer``.
+
+    SLA knobs (DESIGN.md §5.1): ``tick_period`` is the background
+    ticker's admission cadence in seconds (:meth:`LDAEngine.start`; 0
+    picks a 1 ms default); ``max_slot_wait`` bounds queueing at a
+    saturated bucket — a request that has waited that many ticks for its
+    preferred (smallest-fit) bucket may spill into any wider bucket with
+    a free slot (0 = strict smallest-fit forever).
     """
 
     buckets: Tuple[int, ...] = (32, 64, 128, 256)
@@ -105,6 +166,10 @@ class LDAServeConfig:
     algorithm: str = "zen"  # any algorithms.registered() name
     sampling_method: str = "cdf"  # cdf | gumbel (dense default path)
     max_kd: int = 0  # zen_cdf doc-row width (0 = backend default)
+    mode: str = "throughput"  # throughput | latency (RT-LDA fast path)
+    rtlda_sweeps: int = 2  # latency mode: fused deterministic passes
+    tick_period: float = 0.0  # background ticker cadence, s (0 = 1 ms)
+    max_slot_wait: int = 0  # ticks before bucket spill (0 = never spill)
 
     def knobs(self) -> SamplerKnobs:
         return SamplerKnobs(
@@ -114,9 +179,16 @@ class LDAServeConfig:
 
 @dataclasses.dataclass
 class InferRequest:
+    """One in-flight (or finished) serving request.
+
+    ``theta`` is the (K,) doc-topic distribution once ``done``; ``z`` is
+    the final per-token assignment (latency mode only). ``t_submit`` /
+    ``t_done`` are ``time.monotonic`` stamps for latency accounting.
+    """
+
     uid: int
     words: np.ndarray  # filtered (and possibly truncated) token ids
-    key: jax.Array  # the request's whole-chain PRNG key
+    key: Optional[jax.Array]  # whole-chain PRNG key (throughput mode)
     num_sweeps: int
     burn_in: int
     thin: int
@@ -125,10 +197,16 @@ class InferRequest:
     dropped_unknown: int = 0
     theta: Optional[np.ndarray] = None
     done: bool = False
+    # lifecycle / SLA bookkeeping
+    admitted: bool = False
+    ticks_waited: int = 0
+    t_submit: float = 0.0
+    t_done: float = 0.0
     # in-flight bookkeeping
     sweeps_done: int = 0
     theta_sum: Optional[np.ndarray] = None
     theta_samples: int = 0
+    z: Optional[np.ndarray] = None  # final assignments (latency mode)
 
 
 class _Bucket:
@@ -155,18 +233,38 @@ class _Bucket:
 
 
 class LDAEngine:
-    """Continuously-admitting batched frozen-model inference."""
+    """Continuously-admitting batched frozen-model inference.
+
+    Two call styles front the same bucketed packer:
+
+    * **Blocking batch** — :meth:`infer_batch` submits many documents,
+      drains the engine, and returns the (N, K) thetas in order.
+    * **Async tickets** — :meth:`submit_async` returns a ticket
+      immediately; :meth:`poll` reports ``queued``/``admitted``/``done``;
+      :meth:`result` blocks (with optional timeout), returns theta, and
+      reaps the ticket. Drive ticks either inline (``result`` steps the
+      engine itself when no ticker runs) or via the background ticker
+      (:meth:`start`/:meth:`stop`).
+
+    All public methods are thread-safe (one engine-wide lock).
+    """
 
     def __init__(self, model: FrozenLDAModel, cfg: LDAServeConfig,
                  seed: int = 0):
         if not cfg.buckets:
             raise ValueError("need at least one bucket length")
+        if cfg.mode not in ("throughput", "latency"):
+            raise ValueError(f"unknown serve mode {cfg.mode!r}")
         self.model = model
         self.cfg = cfg
         self.backend = algorithms.get(cfg.algorithm)
         self._knobs = cfg.knobs()
-        self._aux = self.backend.prepare_infer(
-            model.n_wk, model.n_k, model.hyper, self._knobs
+        # latency mode never runs backend sweeps — skip table builds
+        # (zen_cdf's prepare_infer materializes a (W, K) CDF)
+        self._aux = None if cfg.mode == "latency" else (
+            self.backend.prepare_infer(
+                model.n_wk, model.n_k, model.hyper, self._knobs
+            )
         )
         self._alpha_k = np.asarray(model.hyper.alpha_k(model.n_k), np.float32)
         self._buckets = {
@@ -174,13 +272,19 @@ class LDAEngine:
             for length in sorted(cfg.buckets)
         }
         self._sweep_fns: Dict[int, Any] = {}
+        self._rtlda_fns: Dict[int, Any] = {}
         self._base_key = jax.random.key(seed)
         self._dummy_key = jax.random.key(0)
         self.queue: List[InferRequest] = []
         self._instant: List[InferRequest] = []  # empty docs: done at submit
         self._uid = 0
         self.docs_done = 0
-        self.sweeps_run = 0  # jitted bucket sweeps executed
+        self.sweeps_run = 0  # jitted bucket sweeps/decodes executed
+        # async front
+        self._tickets: Dict[int, InferRequest] = {}
+        self._cv = threading.Condition(threading.RLock())
+        self._ticker: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
 
     # -- request intake ----------------------------------------------------
     def submit(
@@ -191,36 +295,96 @@ class LDAEngine:
         burn_in: Optional[int] = None,
         thin: Optional[int] = None,
     ) -> int:
-        """Queue one document; returns its uid.
+        """Queue one document for inference; returns its uid.
 
-        Unknown word ids (outside the model vocabulary) are dropped;
-        over-long documents are truncated to the widest bucket; a document
-        that ends up empty completes immediately with the prior theta.
+        Args:
+            words: 1-D array-like of int token ids (any shape is
+                flattened). Unknown ids (outside ``[0, W)``) are dropped;
+                documents longer than the widest bucket are truncated to
+                it; a document that ends up empty completes immediately
+                with the normalized prior theta.
+            key: whole-chain PRNG key for this request (throughput mode;
+                default derives one from the engine seed + uid). Ignored
+                in latency mode — RT-LDA decoding is deterministic.
+            num_sweeps: CGS sweeps for this request's chain (default
+                ``cfg.num_sweeps``; ``<= 0`` completes from the initial
+                assignment). Ignored in latency mode, which always runs
+                ``cfg.rtlda_sweeps`` fused argmax passes.
+            burn_in / thin: per-request estimator knobs (see
+                :class:`LDAServeConfig`). Ignored in latency mode.
+
+        Returns:
+            The request uid. The finished request (theta, diagnostics,
+            timestamps) comes back from :meth:`step` /
+            :meth:`run_until_done` — *to whoever called them*, so plain
+            ``submit`` is for caller-driven engines only: with the
+            background ticker running (:meth:`start`), the ticker's own
+            steps collect (and discard) finished non-ticketed requests.
+            Use :meth:`submit_async` + :meth:`result` whenever a ticker
+            may be driving.
         """
+        with self._cv:
+            return self._submit(words, key, num_sweeps, burn_in, thin).uid
+
+    def submit_async(
+        self,
+        words,
+        key: Optional[jax.Array] = None,
+        num_sweeps: Optional[int] = None,
+        burn_in: Optional[int] = None,
+        thin: Optional[int] = None,
+    ) -> int:
+        """Queue one document and return a pollable ticket immediately.
+
+        Same arguments and admission behavior as :meth:`submit`; the
+        request additionally registers in the ticket table, so its
+        lifecycle is observable with :meth:`poll` and its theta
+        retrievable (exactly once) with :meth:`result`. The caller never
+        blocks: the request coalesces into the next admission tick's
+        batch — whoever drives ticks (the background ticker started with
+        :meth:`start`, another thread calling :meth:`step`, or this
+        caller's own later :meth:`result`).
+
+        Returns:
+            The ticket (an int uid) to pass to :meth:`poll` /
+            :meth:`result`.
+        """
+        with self._cv:
+            req = self._submit(words, key, num_sweeps, burn_in, thin)
+            self._tickets[req.uid] = req
+            return req.uid
+
+    def _submit(self, words, key, num_sweeps, burn_in, thin) -> InferRequest:
         self._uid += 1
         raw = np.asarray(words, np.int32).ravel()
         known = raw[(raw >= 0) & (raw < self.model.num_words)]
         max_len = max(self._buckets)
+        latency = self.cfg.mode == "latency"
         req = InferRequest(
             uid=self._uid,
             words=known[:max_len],
-            key=key if key is not None
-            else jax.random.fold_in(self._base_key, self._uid),
-            num_sweeps=self.cfg.num_sweeps if num_sweeps is None
-            else num_sweeps,
-            burn_in=self.cfg.burn_in if burn_in is None else burn_in,
-            thin=max(1, self.cfg.thin if thin is None else thin),
+            # latency mode is deterministic — never pay the fold_in
+            key=None if latency else (
+                key if key is not None
+                else jax.random.fold_in(self._base_key, self._uid)
+            ),
+            num_sweeps=self.cfg.rtlda_sweeps if latency
+            else (self.cfg.num_sweeps if num_sweeps is None else num_sweeps),
+            burn_in=-1 if latency
+            else (self.cfg.burn_in if burn_in is None else burn_in),
+            thin=1 if latency
+            else max(1, self.cfg.thin if thin is None else thin),
             orig_len=int(raw.shape[0]),
             truncated=known.shape[0] > max_len,
             dropped_unknown=int(raw.shape[0] - known.shape[0]),
+            t_submit=time.monotonic(),
         )
         if req.words.shape[0] == 0:
             # nothing observed: theta is the normalized prior
             req.theta = self._alpha_k / self._alpha_k.sum()
-            req.done = True
-            self.docs_done += 1
+            self._complete(req)
             self._instant.append(req)
-        elif req.num_sweeps <= 0:
+        elif not latency and req.num_sweeps <= 0:
             # zero sweeps: theta straight from the z0 assignment, matching
             # the oracle's empty scan (never occupies a slot)
             z0 = np.asarray(jax.random.randint(
@@ -231,12 +395,162 @@ class LDAEngine:
                 z0, minlength=self.model.num_topics
             ).astype(np.int32)
             req.theta = self._theta(req, n_kd0)
-            req.done = True
-            self.docs_done += 1
+            self._complete(req)
             self._instant.append(req)
         else:
             self.queue.append(req)
-        return req.uid
+        return req
+
+    def _complete(self, req: InferRequest) -> None:
+        req.done = True
+        req.t_done = time.monotonic()
+        self.docs_done += 1
+
+    # -- the async ticket lifecycle ----------------------------------------
+    def poll(self, ticket: int) -> str:
+        """Report a ticket's lifecycle state without blocking.
+
+        Returns ``"queued"`` (waiting for a bucket slot), ``"admitted"``
+        (packed into a slot batch / decoding), or ``"done"`` (theta
+        ready — collect it with :meth:`result`). Raises ``KeyError`` for
+        a ticket that was never issued by :meth:`submit_async` or was
+        already reaped by :meth:`result`.
+        """
+        with self._cv:
+            req = self._tickets.get(ticket)
+            if req is None:
+                raise KeyError(f"unknown or reaped ticket {ticket}")
+            if req.done:
+                return "done"
+            return "admitted" if req.admitted else "queued"
+
+    def result(self, ticket: int, timeout: Optional[float] = None
+               ) -> np.ndarray:
+        """Block until a ticket's theta is ready; return it and reap.
+
+        If a background ticker is running (:meth:`start`), this waits on
+        it; otherwise the caller drives admission ticks itself, so
+        progress never depends on another thread. ``timeout`` is in
+        seconds (``None`` = wait forever; ``0`` = must already be done).
+
+        Returns:
+            theta — the (K,) float32 doc-topic distribution.
+
+        Raises:
+            KeyError: unknown or already-reaped ticket.
+            TimeoutError: theta not ready within ``timeout`` seconds.
+
+        The ticket is consumed: a second ``result`` (or ``poll``) for it
+        raises ``KeyError``. Keep the uid-indexed thetas yourself if you
+        need them twice. A ``TimeoutError`` does NOT consume the ticket —
+        retry ``result`` later, or :meth:`cancel` it if you are
+        abandoning the request (otherwise its entry stays claimable, and
+        accumulating abandoned tickets is a leak in a long-running
+        server).
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            req = self._tickets.get(ticket)
+            if req is None:
+                raise KeyError(f"unknown or reaped ticket {ticket}")
+            while not req.done:
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"ticket {ticket} not done within {timeout}s"
+                    )
+                if self._ticker is not None and self._ticker.is_alive():
+                    # bounded wait so a ticker stopped mid-flight hands
+                    # driving back to this caller instead of stranding it
+                    remaining = (None if deadline is None
+                                 else deadline - time.monotonic())
+                    self._cv.wait(0.05 if remaining is None
+                                  else min(remaining, 0.05))
+                else:
+                    self.step()
+            del self._tickets[ticket]
+            return req.theta
+
+    def cancel(self, ticket: int) -> bool:
+        """Abandon a ticket: drop it from the ticket table and, if it is
+        still queued, from the admission queue (it will never decode).
+
+        An admitted request cannot be pulled out of its slot batch — it
+        finishes normally, but its result is discarded with the ticket.
+        Call this for every ticket you stop waiting on (e.g. after a
+        :meth:`result` timeout you don't intend to retry), or abandoned
+        entries accumulate for the engine's lifetime.
+
+        Returns:
+            True if the ticket existed (now reaped), False if it was
+            unknown or already reaped — cancel never raises, so timeout
+            cleanup paths can call it unconditionally.
+        """
+        with self._cv:
+            req = self._tickets.pop(ticket, None)
+            if req is None:
+                return False
+            if not req.done and not req.admitted:
+                self.queue = [r for r in self.queue if r.uid != ticket]
+            return True
+
+    def request(self, ticket: int) -> InferRequest:
+        """The live :class:`InferRequest` behind an un-reaped ticket
+        (diagnostics: timestamps, truncation, sweep counts). Raises
+        ``KeyError`` after :meth:`result` reaped it."""
+        with self._cv:
+            req = self._tickets.get(ticket)
+            if req is None:
+                raise KeyError(f"unknown or reaped ticket {ticket}")
+            return req
+
+    # -- background ticker -------------------------------------------------
+    def start(self, tick_period: Optional[float] = None) -> None:
+        """Start the background admission ticker.
+
+        Every ``tick_period`` seconds (default ``cfg.tick_period``, or
+        1 ms when that is 0) the ticker runs one :meth:`step` if any work
+        is pending, so async submitters coalesce into batches without any
+        caller driving the engine. Idempotent while running. While a
+        ticker drives, retrieve results through tickets
+        (:meth:`submit_async` + :meth:`result`): finished requests from
+        plain :meth:`submit` are returned only to whichever caller's
+        ``step`` finished them — here, the ticker, which discards them.
+        """
+        with self._cv:
+            if self._ticker is not None and self._ticker.is_alive():
+                return
+            period = tick_period if tick_period is not None \
+                else (self.cfg.tick_period or 0.001)
+            self._stop_evt = threading.Event()
+
+            def loop():
+                while not self._stop_evt.is_set():
+                    with self._cv:
+                        if self._pending():
+                            self.step()
+                    self._stop_evt.wait(period)
+
+            self._ticker = threading.Thread(
+                target=loop, name="lda-engine-ticker", daemon=True
+            )
+            self._ticker.start()
+
+    def stop(self) -> None:
+        """Stop the background ticker (no-op if it is not running).
+        In-flight requests stay queued/admitted and finish under whoever
+        drives ticks next."""
+        ticker = self._ticker
+        if ticker is None:
+            return
+        self._stop_evt.set()
+        ticker.join()
+        self._ticker = None
+
+    def _pending(self) -> bool:
+        return bool(
+            self.queue or self._instant
+            or any(b.num_active for b in self._buckets.values())
+        )
 
     # -- admission ---------------------------------------------------------
     def _bucket_for(self, length: int) -> _Bucket:
@@ -250,7 +564,20 @@ class LDAEngine:
         for req in self.queue:
             bucket = self._bucket_for(req.words.shape[0])
             slot = bucket.free_slot()
+            if slot is None and self.cfg.max_slot_wait > 0 \
+                    and req.ticks_waited >= self.cfg.max_slot_wait:
+                # SLA spill: the preferred bucket has been saturated for
+                # max_slot_wait ticks — take any wider free slot instead
+                for bl in sorted(self._buckets):
+                    wider = self._buckets[bl]
+                    if bl <= bucket.length or bl < req.words.shape[0]:
+                        continue
+                    s = wider.free_slot()
+                    if s is not None:
+                        bucket, slot = wider, s
+                        break
             if slot is None:
+                req.ticks_waited += 1
                 still_queued.append(req)
                 continue
             self._place(req, bucket, slot)
@@ -263,24 +590,31 @@ class LDAEngine:
         words[:n] = req.words
         mask = np.zeros(l, bool)
         mask[:n] = True
+        bucket.words = bucket.words.at[slot].set(jnp.asarray(words))
+        bucket.mask = bucket.mask.at[slot].set(jnp.asarray(mask))
+        bucket.active[slot] = req
+        req.admitted = True
+        if self.cfg.mode == "latency":
+            # RT-LDA needs no chain state: z/n_kd are produced whole by
+            # the fused decode, nothing to initialize per slot
+            bucket.sweep_keys[slot] = None
+            return
         # same schedule as cgs_infer: z0 from the request key itself, sweep
         # j from split(key)[j]; randint/uniform draws are prefix-stable in
         # the padded length, so the bucket width never changes the chain
         z0 = jax.random.randint(req.key, (l,), 0, k, dtype=jnp.int32)
         z0_np = np.asarray(z0)
         n_kd = np.bincount(z0_np[:n], minlength=k).astype(np.int32)
-        bucket.words = bucket.words.at[slot].set(jnp.asarray(words))
-        bucket.mask = bucket.mask.at[slot].set(jnp.asarray(mask))
         bucket.z = bucket.z.at[slot].set(z0)
         bucket.n_kd = bucket.n_kd.at[slot].set(jnp.asarray(n_kd))
-        bucket.active[slot] = req
         bucket.sweep_keys[slot] = (
             jax.random.split(req.key, req.num_sweeps)
             if req.num_sweeps > 0 else None
         )
 
-    # -- the jitted per-bucket sweep ----------------------------------------
+    # -- the jitted per-bucket programs -------------------------------------
     def _sweep_fn(self, length: int):
+        """Throughput mode: one chain CGS sweep over a bucket's slots."""
         if length not in self._sweep_fns:
             backend, hyper, knobs = self.backend, self.model.hyper, self._knobs
 
@@ -298,9 +632,60 @@ class LDAEngine:
             self._sweep_fns[length] = jax.jit(fn)
         return self._sweep_fns[length]
 
+    def _rtlda_fn(self, length: int):
+        """Latency mode: the whole RT-LDA decode for one bucket, fused
+        into a single dispatch (init + ``rtlda_sweeps`` argmax passes)."""
+        if length not in self._rtlda_fns:
+            hyper = self.model.hyper
+            sweeps = self.cfg.rtlda_sweeps
+
+            def fn(words, mask, n_wk, n_k):
+                return jax.vmap(
+                    lambda w, m: rtlda_assign(n_wk, n_k, w, m, hyper, sweeps)
+                )(words, mask)
+
+            self._rtlda_fns[length] = jax.jit(fn)
+        return self._rtlda_fns[length]
+
     # -- stepping ----------------------------------------------------------
     def step(self) -> List[InferRequest]:
-        """Admit, run one sweep per non-empty bucket, finish ripe requests."""
+        """Run one admission tick; return the requests it finished.
+
+        Throughput mode: admit into free slots, run one chain sweep per
+        non-empty bucket, finish ripe chains. Latency mode: admit, run
+        one fused RT-LDA decode per non-empty bucket — every admitted
+        request finishes in the same tick.
+        """
+        with self._cv:
+            finished = (self._latency_step() if self.cfg.mode == "latency"
+                        else self._throughput_step())
+            if finished and self._tickets:
+                self._cv.notify_all()
+            return finished
+
+    def _latency_step(self) -> List[InferRequest]:
+        self._admit()
+        finished, self._instant = self._instant, []
+        for bucket in self._buckets.values():
+            if bucket.num_active == 0:
+                continue
+            z, n_kd = self._rtlda_fn(bucket.length)(
+                bucket.words, bucket.mask, self.model.n_wk, self.model.n_k
+            )
+            self.sweeps_run += 1
+            z_host, n_kd_host = np.asarray(z), np.asarray(n_kd)
+            for slot, req in enumerate(bucket.active):
+                if req is None:
+                    continue
+                req.sweeps_done = req.num_sweeps
+                req.z = z_host[slot, : req.words.shape[0]].copy()
+                self._finish(req, bucket, slot, n_kd_host[slot],
+                             clear_mask=False)
+                finished.append(req)
+            bucket.mask = jnp.zeros_like(bucket.mask)  # one bulk clear
+        return finished
+
+    def _throughput_step(self) -> List[InferRequest]:
         self._admit()
         finished, self._instant = self._instant, []
         for bucket in self._buckets.values():
@@ -355,39 +740,73 @@ class LDAEngine:
         )
 
     def _finish(self, req: InferRequest, bucket: _Bucket, slot: int,
-                n_kd_row: Optional[np.ndarray]) -> None:
+                n_kd_row: Optional[np.ndarray],
+                clear_mask: bool = True) -> None:
         if req.theta_samples:
             req.theta = req.theta_sum / req.theta_samples
         else:
             if n_kd_row is None:  # num_sweeps == 0: counts from z0
                 n_kd_row = np.asarray(bucket.n_kd[slot])
             req.theta = self._theta(req, n_kd_row)
-        req.done = True
         bucket.active[slot] = None
         bucket.sweep_keys[slot] = None
-        bucket.mask = bucket.mask.at[slot].set(False)
-        self.docs_done += 1
+        if clear_mask:
+            bucket.mask = bucket.mask.at[slot].set(False)
+        self._complete(req)
 
     def run_until_done(self, max_steps: int = 100_000) -> List[InferRequest]:
-        done: List[InferRequest] = list(self._instant)
-        self._instant = []
-        for _ in range(max_steps):
-            done.extend(self.step())
-            if not self.queue and all(
-                b.num_active == 0 for b in self._buckets.values()
-            ):
-                break
-        return done
+        """Drive ticks until the queue and every bucket drain; return all
+        requests finished along the way (instant completions included)."""
+        with self._cv:
+            done: List[InferRequest] = list(self._instant)
+            self._instant = []
+            for _ in range(max_steps):
+                done.extend(self.step())
+                if not self.queue and all(
+                    b.num_active == 0 for b in self._buckets.values()
+                ):
+                    break
+            return done
 
     def infer_batch(self, docs: Sequence, **submit_kw) -> np.ndarray:
-        """Submit many documents, drain the engine, return (N, K) thetas in
-        submission order."""
-        uids = [self.submit(d, **submit_kw) for d in docs]
-        by_uid = {r.uid: r for r in self.run_until_done()}
-        missing = [u for u in uids if u not in by_uid]
-        if missing:
-            raise RuntimeError(f"engine did not finish requests {missing}")
-        return np.stack([by_uid[u].theta for u in uids])
+        """Submit many documents, drain the engine, return their thetas.
+
+        Args:
+            docs: sequence of 1-D int token-id arrays (one per document).
+            **submit_kw: forwarded to :meth:`submit` for every document
+                (``key``/``num_sweeps``/``burn_in``/``thin``).
+
+        Returns:
+            ``(N, K)`` float32 thetas in submission order. Shape
+            convention: N = ``len(docs)``, K = ``model.num_topics``; row
+            n sums to 1 and is the inferred topic mixture of ``docs[n]``.
+
+        This is the blocking convenience front; it shares admission,
+        bucketing, and decoding with the async path, so the returned
+        thetas are identical to what :meth:`submit_async` +
+        :meth:`result` would produce for the same inputs.
+        """
+        with self._cv:
+            uids = [self.submit(d, **submit_kw) for d in docs]
+            by_uid = {r.uid: r for r in self.run_until_done()}
+            missing = [u for u in uids if u not in by_uid]
+            if missing:
+                raise RuntimeError(f"engine did not finish requests {missing}")
+            return np.stack([by_uid[u].theta for u in uids])
+
+
+def latency_percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of an ascending latency sample.
+
+    THE percentile definition for serving latency reporting —
+    ``launch/serve_lda.py`` and ``benchmarks/bench_infer.py`` both use
+    it, so their p50/p99 figures are comparable. Returns NaN on empty
+    input.
+    """
+    if not sorted_vals:
+        return float("nan")
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[i]
 
 
 # -- held-out evaluation ---------------------------------------------------

@@ -72,6 +72,34 @@ class RunConfig:
     post-step iterations (the first step is iteration 1); 0 disables.
     ``num_iterations`` is the *absolute* target iteration, so resuming a
     checkpointed run needs no arithmetic.
+
+    Field reference (grouped as below; see DESIGN.md §6.1 for rationale):
+
+    * ``algorithm`` — any ``algorithms.registered()`` backend name.
+    * ``sampling_method`` — dense-path inversion, ``"cdf"``/``"gumbel"``;
+      ``None`` = the plan default (cdf single-box, gumbel mesh).
+    * ``max_kw``/``max_kd`` — padded-sparse row widths (topics per
+      word/doc row); 0 = resolve from the counts (or static cell
+      defaults on the mesh).
+    * ``num_mh`` — LightLDA cycle-MH proposals per token.
+    * ``token_chunk`` — bound peak memory by sweeping tokens in chunks
+      of this size; 0 = whole sweep at once.
+    * ``bt``/``bk`` — zen_pallas token/topic kernel tiles.
+    * ``init``/``sparse_init_degree`` — topic init strategy (paper §5.1).
+    * ``mesh_shape``/``delta_dtype``/``kd_dtype`` — execution plan and
+      mesh payload widths.
+    * ``num_iterations`` — absolute target iteration for :meth:`TrainSession.run`.
+    * ``eval_every``/``target_perplexity`` — eval cadence and the
+      early-stop threshold checked on those evals.
+    * ``exclusion_start``/``exclusion_min_prob`` — "converged" token
+      exclusion (paper §5.1): enable iteration and resample floor.
+    * ``rebuild_every`` — exact count rebuild + row re-pad cadence.
+    * ``merge_every``/``merge_threshold`` — duplicate-topic merge
+      (paper §4.3) cadence and L1 closeness threshold.
+    * ``checkpoint_dir``/``checkpoint_every`` — serving model
+      checkpoints (``launch/serve_lda.py`` loads these); 0 = final only.
+    * ``train_checkpoint_dir``/``train_checkpoint_every`` — elastic
+      training checkpoints (assignments; ``run()`` auto-resumes).
     """
 
     # -- algorithm + sampler knobs (one SamplerKnobs derivation) ----------
@@ -568,18 +596,56 @@ class TrainSession:
 
     # -- the session surface -----------------------------------------------
     def init(self, rng: jax.Array, init_topics=None):
+        """Build the initial training state for this session's plan.
+
+        Args:
+            rng: a JAX PRNG key; seeds the topic-assignment init and the
+                per-iteration sampling streams.
+            init_topics: optional (E,) int32 initial topic per token
+                (corpus edge order) — e.g. from ``repro.core.init``'s
+                sparse initializers. Default: uniform random topics.
+
+        Returns:
+            The plan's state object — a ``CGSState`` (single-box: arrays
+            ``n_wk (W, K)``, ``n_kd (D, K)``, ``n_k (K,)``, ``topic
+            (E,)``) or the mesh plan's sharded equivalent. Treat it as
+            opaque: pass it to ``step``/``run``/``metrics``/``save_model``.
+        """
         return self.plan.init(rng, init_topics=init_topics)
 
     def step(self, state):
+        """Run exactly one CGS iteration (every token resampled once).
+
+        Args:
+            state: the state returned by :meth:`init` or a previous
+                ``step``.
+
+        Returns:
+            The post-iteration state, with ``state.iteration``
+            incremented. No schedule actions fire — that is :meth:`run`'s
+            job; ``step`` is the raw sampling move for callers that drive
+            their own loop (benchmarks, tests).
+        """
         return self.plan.step(state)
 
     def llh(self, state) -> float:
+        """Joint log-likelihood of the current counts (one full pass)."""
         return self.plan.llh(state)
 
     def perplexity(self, state) -> float:
+        """``exp(-llh / num_tokens)`` — one likelihood pass, lower is
+        better."""
         return math.exp(-self.plan.llh(state) / self.plan.num_tokens)
 
     def metrics(self, state) -> Dict[str, float]:
+        """Evaluate the state once; return the standard metric dict.
+
+        Returns:
+            ``{"llh", "perplexity", "change_rate"}`` — joint
+            log-likelihood (one pass, perplexity derived from it, never a
+            second pass) and the fraction of tokens whose topic changed
+            in the last iteration (the paper's convergence signal).
+        """
         llh = self.plan.llh(state)
         return {
             "llh": llh,

@@ -5,8 +5,13 @@ import numpy as np
 import pytest
 from helpers import given, settings, st  # hypothesis, or the fallback shim
 
-from repro.kernels.ops import topic_histogram, zen_sample
-from repro.kernels.ref import topic_histogram_ref, zen_probs_ref, zen_sample_ref
+from repro.kernels.ops import topic_histogram, zen_infer_sample, zen_sample
+from repro.kernels.ref import (
+    topic_histogram_ref,
+    zen_infer_sample_ref,
+    zen_probs_ref,
+    zen_sample_ref,
+)
 from repro.kernels.zen_sampler import hash_uniform
 
 
@@ -31,6 +36,31 @@ def test_zen_sampler_bit_exact(t, k, bt, bk, rng):
                      w_beta=5.0, bt=bt, bk=bk)
     ref = zen_sample_ref(nwk, nkd, z, ak, nk, jnp.int32(7), beta=0.01,
                          w_beta=5.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize(
+    "t,k,bt,bk",
+    [
+        (64, 128, 64, 128),
+        (9, 33, 8, 128),  # unaligned -> padding path
+        (300, 700, 64, 128),
+        (1, 5, 8, 128),
+    ],
+)
+def test_zen_infer_sampler_bit_exact(t, k, bt, bk, rng):
+    """Frozen-model serving variant == its pure-jnp oracle, bit for bit
+    (doc-side-only exclusion, per-token seeds)."""
+    nwk = jnp.asarray(rng.integers(0, 50, (t, k)), jnp.int32)
+    nkd = jnp.asarray(rng.integers(0, 20, (t, k)), jnp.int32)
+    z = jnp.asarray(rng.integers(0, k, (t,)), jnp.int32)
+    seeds = jnp.asarray(rng.integers(0, 2 ** 31 - 1, (t,)), jnp.int32)
+    nk = jnp.asarray(np.asarray(nwk).sum(0) + 1, jnp.float32)
+    ak = jnp.asarray(rng.random(k) + 0.01, jnp.float32)
+    out = zen_infer_sample(nwk, nkd, z, seeds, ak, nk, beta=0.01,
+                           w_beta=5.0, bt=bt, bk=bk)
+    ref = zen_infer_sample_ref(nwk, nkd, z, seeds, ak, nk, beta=0.01,
+                               w_beta=5.0)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 

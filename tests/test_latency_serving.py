@@ -1,0 +1,381 @@
+"""Latency-mode serving + the async ticket front (DESIGN.md §5.1).
+
+The latency-mode contract:
+
+* the engine's RT-LDA decode is **deterministic** — the same document
+  yields bit-identical topic assignments and theta for every bucket
+  layout and batch composition, and matches the single-doc
+  ``rtlda_infer`` oracle;
+* the async front's ticket lifecycle is observable
+  (``queued -> admitted -> done``), ``result`` blocks/timeouts/reaps
+  correctly, and out-of-order completion works;
+* the ``zen_pallas`` frozen-model kernel variant honors the default
+  derivation's stability contract: per-slot seeds make its draws
+  independent of padding and batch layout (bit-stable), with the kernel
+  bit-equal to its pure-jnp oracle (``tests/test_kernels.py``).
+"""
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.inference import rtlda_assign, rtlda_infer
+from repro.core.types import LDAHyperParams
+from repro.serving import FrozenLDAModel, LDAEngine, LDAServeConfig
+
+
+def _sharp_model(k=4, w=40, weight=100):
+    n_wk = np.zeros((w, k), np.int32)
+    block = w // k
+    for t in range(k):
+        n_wk[t * block : (t + 1) * block, t] = weight
+    hyper = LDAHyperParams(num_topics=k, alpha=0.1, beta=0.01)
+    return FrozenLDAModel(
+        n_wk=jnp.asarray(n_wk),
+        n_k=jnp.asarray(n_wk.sum(0).astype(np.int32)),
+        hyper=hyper,
+    )
+
+
+def _mixed_docs(rng, n, w=40, lo=1, hi=24):
+    return [
+        rng.integers(0, w, size=rng.integers(lo, hi)).astype(np.int32)
+        for _ in range(n)
+    ]
+
+
+def _latency_cfg(**kw):
+    kw.setdefault("buckets", (8, 16, 32))
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("mode", "latency")
+    kw.setdefault("rtlda_sweeps", 2)
+    return LDAServeConfig(**kw)
+
+
+# -- RT-LDA engine-path determinism -----------------------------------------
+
+def test_latency_mode_matches_rtlda_oracle():
+    """Every served theta equals the single-doc deterministic oracle."""
+    model = _sharp_model()
+    docs = _mixed_docs(np.random.default_rng(0), 24)
+    eng = LDAEngine(model, _latency_cfg(), seed=0)
+    thetas = eng.infer_batch(docs)
+    for theta, doc in zip(thetas, docs):
+        oracle = np.asarray(rtlda_infer(
+            model.n_wk, model.n_k, jnp.asarray(doc), model.hyper,
+            num_sweeps=2,
+        ))
+        np.testing.assert_allclose(theta, oracle, atol=1e-6)
+
+
+def test_latency_mode_deterministic_across_batch_and_padding():
+    """Same docs -> bit-identical assignments + thetas, regardless of
+    bucket widths, batch composition, submission order, or engine seed."""
+    model = _sharp_model()
+    docs = _mixed_docs(np.random.default_rng(1), 16)
+
+    def serve(cfg, seed, order):
+        eng = LDAEngine(model, cfg, seed=seed)
+        uids = [eng.submit(docs[i]) for i in order]
+        done = {r.uid: r for r in eng.run_until_done()}
+        by_doc = {}
+        for i, u in zip(order, uids):
+            by_doc[i] = (done[u].z, done[u].theta)
+        return by_doc
+
+    base = serve(_latency_cfg(), seed=0, order=list(range(16)))
+    variants = [
+        serve(_latency_cfg(buckets=(32,), max_batch=16), 7,
+              list(range(16))),
+        serve(_latency_cfg(buckets=(4, 8, 64), max_batch=2), 3,
+              list(reversed(range(16)))),
+    ]
+    for variant in variants:
+        for i in range(16):
+            np.testing.assert_array_equal(base[i][0], variant[i][0])
+            np.testing.assert_array_equal(base[i][1], variant[i][1])
+
+
+def test_rtlda_assign_padding_exact():
+    """The masked padded decode is bit-identical to the unpadded one."""
+    model = _sharp_model()
+    rng = np.random.default_rng(2)
+    doc = rng.integers(0, 40, size=11).astype(np.int32)
+    z0, n_kd0 = rtlda_assign(
+        model.n_wk, model.n_k, jnp.asarray(doc),
+        jnp.ones((11,), bool), model.hyper, num_sweeps=3,
+    )
+    padded = np.zeros(32, np.int32)
+    padded[:11] = doc
+    mask = np.zeros(32, bool)
+    mask[:11] = True
+    z1, n_kd1 = rtlda_assign(
+        model.n_wk, model.n_k, jnp.asarray(padded),
+        jnp.asarray(mask), model.hyper, num_sweeps=3,
+    )
+    np.testing.assert_array_equal(np.asarray(z0), np.asarray(z1)[:11])
+    np.testing.assert_array_equal(np.asarray(n_kd0), np.asarray(n_kd1))
+
+
+def test_latency_mode_ignores_chain_knobs_and_recovers_topics():
+    """Per-request chain knobs are inert in latency mode; sharp docs
+    still decode to their dominant topic."""
+    model = _sharp_model()
+    eng = LDAEngine(model, _latency_cfg(), seed=0)
+    docs = [np.arange(t * 10, t * 10 + 8, dtype=np.int32) for t in range(4)]
+    thetas = eng.infer_batch(
+        docs, key=jax.random.key(9), num_sweeps=50, burn_in=5, thin=2
+    )
+    assert [int(np.argmax(t)) for t in thetas] == [0, 1, 2, 3]
+    # one fused decode per non-empty bucket, not one per sweep
+    assert eng.sweeps_run == 1
+
+
+def test_latency_mode_edge_cases():
+    model = _sharp_model()
+    eng = LDAEngine(model, _latency_cfg(), seed=0)
+    thetas = eng.infer_batch([
+        np.array([], np.int32),  # empty -> prior
+        np.array([1000, -3], np.int32),  # all unknown -> prior
+        np.arange(100, dtype=np.int32) % 40,  # over-long -> truncated
+    ])
+    prior = thetas[0]
+    np.testing.assert_allclose(prior, prior[::-1], atol=1e-7)  # symmetric
+    np.testing.assert_array_equal(thetas[1], prior)
+    np.testing.assert_allclose(thetas[2].sum(), 1.0, atol=1e-3)
+
+
+# -- async ticket lifecycle --------------------------------------------------
+
+def test_ticket_lifecycle_poll_before_ready():
+    model = _sharp_model()
+    eng = LDAEngine(
+        model,
+        LDAServeConfig(buckets=(16,), max_batch=4, num_sweeps=3),
+        seed=0,
+    )
+    ticket = eng.submit_async(np.arange(8, dtype=np.int32))
+    assert eng.poll(ticket) == "queued"
+    eng.step()  # admits + first sweep (of 3)
+    assert eng.poll(ticket) == "admitted"
+    eng.step()
+    eng.step()
+    assert eng.poll(ticket) == "done"
+    theta = eng.result(ticket)
+    np.testing.assert_allclose(theta.sum(), 1.0, atol=1e-3)
+    with pytest.raises(KeyError):  # reaped
+        eng.poll(ticket)
+    with pytest.raises(KeyError):
+        eng.result(ticket)
+    with pytest.raises(KeyError):  # never issued
+        eng.poll(123456)
+
+
+def test_result_timeout_and_inline_driving():
+    model = _sharp_model()
+    eng = LDAEngine(
+        model,
+        LDAServeConfig(buckets=(16,), max_batch=4, num_sweeps=4),
+        seed=0,
+    )
+    ticket = eng.submit_async(np.arange(6, dtype=np.int32))
+    with pytest.raises(TimeoutError):  # not done, no time to drive
+        eng.result(ticket, timeout=0)
+    # without a ticker, result() drives the engine itself
+    theta = eng.result(ticket, timeout=60)
+    assert eng.request.__doc__  # api sanity: request() exists
+    np.testing.assert_allclose(theta.sum(), 1.0, atol=1e-3)
+
+
+def test_cancel_reaps_and_unqueues():
+    """cancel() drops abandoned tickets: queued ones never decode,
+    unknown/reaped ones are a harmless no-op."""
+    model = _sharp_model()
+    eng = LDAEngine(
+        model,
+        LDAServeConfig(buckets=(16,), max_batch=1, num_sweeps=3),
+        seed=0,
+    )
+    occupant = eng.submit_async(np.arange(6, dtype=np.int32))
+    starved = eng.submit_async(np.arange(6, 12, dtype=np.int32))
+    eng.step()  # occupant admitted; starved still queued
+    assert eng.poll(starved) == "queued"
+    assert eng.cancel(starved) is True
+    assert eng.cancel(starved) is False  # already reaped
+    assert eng.cancel(999) is False  # never issued
+    with pytest.raises(KeyError):
+        eng.poll(starved)
+    eng.result(occupant, timeout=60)
+    # the cancelled request never decoded
+    assert eng.docs_done == 1 and not eng.queue
+
+
+def test_out_of_order_completion():
+    """A later-submitted short chain finishes before an earlier long one;
+    results are retrievable in any order."""
+    model = _sharp_model()
+    eng = LDAEngine(
+        model,
+        LDAServeConfig(buckets=(16,), max_batch=4, num_sweeps=8),
+        seed=0,
+    )
+    slow = eng.submit_async(np.arange(8, dtype=np.int32), num_sweeps=8)
+    fast = eng.submit_async(np.arange(8, 14, dtype=np.int32), num_sweeps=2)
+    eng.step()
+    eng.step()
+    assert eng.poll(fast) == "done"
+    assert eng.poll(slow) == "admitted"
+    fast_req = eng.request(fast)
+    theta_fast = eng.result(fast)
+    theta_slow = eng.result(slow, timeout=60)  # drives remaining sweeps
+    slow_req_done = eng.docs_done == 2
+    assert slow_req_done
+    assert fast_req.t_done >= fast_req.t_submit
+    np.testing.assert_allclose(theta_fast.sum(), 1.0, atol=1e-3)
+    np.testing.assert_allclose(theta_slow.sum(), 1.0, atol=1e-3)
+
+
+def test_background_ticker_coalesces_requests():
+    """submit_async never blocks; the ticker batches whatever arrived
+    between ticks and result() just waits."""
+    model = _sharp_model()
+    eng = LDAEngine(model, _latency_cfg(buckets=(16,), max_batch=8), seed=0)
+    eng.start(0.001)
+    try:
+        tickets = [
+            eng.submit_async(doc)
+            for doc in _mixed_docs(np.random.default_rng(4), 6, lo=2, hi=15)
+        ]
+        thetas = [eng.result(t, timeout=120) for t in tickets]
+    finally:
+        eng.stop()
+    for theta in thetas:
+        np.testing.assert_allclose(theta.sum(), 1.0, atol=1e-3)
+    assert eng.docs_done == 6
+    # ticker results match the inline engine bit-for-bit (determinism)
+    eng2 = LDAEngine(model, _latency_cfg(buckets=(16,), max_batch=8), seed=9)
+    thetas2 = eng2.infer_batch(
+        _mixed_docs(np.random.default_rng(4), 6, lo=2, hi=15)
+    )
+    np.testing.assert_array_equal(np.stack(thetas), thetas2)
+
+
+def test_submit_async_from_other_threads():
+    """The engine lock makes cross-thread submit/result safe."""
+    model = _sharp_model()
+    eng = LDAEngine(model, _latency_cfg(buckets=(16,), max_batch=8), seed=0)
+    eng.start(0.001)
+    out = {}
+
+    def client(i):
+        doc = np.arange(i, i + 6, dtype=np.int32) % 40
+        t = eng.submit_async(doc)
+        out[i] = eng.result(t, timeout=120)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+    try:
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        eng.stop()
+    assert sorted(out) == [0, 1, 2, 3]
+    for theta in out.values():
+        np.testing.assert_allclose(theta.sum(), 1.0, atol=1e-3)
+
+
+def test_max_slot_wait_spills_to_wider_bucket():
+    """A request starved of its preferred bucket takes a wider free slot
+    after max_slot_wait ticks instead of queueing forever behind it."""
+    model = _sharp_model()
+    eng = LDAEngine(
+        model,
+        LDAServeConfig(buckets=(8, 32), max_batch=1, num_sweeps=50,
+                       max_slot_wait=2),
+        seed=0,
+    )
+    eng.submit(np.arange(6, dtype=np.int32))  # occupies the 8-bucket
+    starved = eng.submit_async(np.arange(6, dtype=np.int32))
+    eng.step()  # tick 1: starved waits (ticks_waited -> 1)
+    eng.step()  # tick 2: waits (ticks_waited -> 2)
+    assert eng.poll(starved) == "queued"
+    eng.step()  # tick 3: spill into the free 32-bucket
+    assert eng.poll(starved) == "admitted"
+
+
+# -- zen_pallas frozen-model variant ----------------------------------------
+
+def _serve_one(model, doc, key, *, buckets, batch_mates=(), seed=0):
+    eng = LDAEngine(
+        model,
+        LDAServeConfig(buckets=buckets, max_batch=8, num_sweeps=10,
+                       algorithm="zen_pallas"),
+        seed=seed,
+    )
+    uid = eng.submit(doc, key=key)
+    for mate in batch_mates:
+        eng.submit(mate)
+    return {r.uid: r for r in eng.run_until_done()}[uid].theta
+
+
+def test_zen_pallas_padding_and_batch_bit_stable():
+    """With per-slot seeds the kernel backend now honors the default
+    derivation's stability contract: bucket padding, batch mates, and
+    engine seed never change a request's draws (previously it hashed one
+    scalar seed with flat batch coordinates, so layout leaked in)."""
+    model = _sharp_model()
+    rng = np.random.default_rng(5)
+    doc = rng.integers(0, 40, size=10).astype(np.int32)
+    key = jax.random.key(11)
+    alone = _serve_one(model, doc, key, buckets=(16,))
+    for theta in (
+        _serve_one(model, doc, key, buckets=(32,), seed=2),
+        _serve_one(model, doc, key, buckets=(64, 128), seed=3),
+        _serve_one(model, doc, key, buckets=(16,), seed=4,
+                   batch_mates=_mixed_docs(rng, 5, lo=1, hi=14)),
+    ):
+        np.testing.assert_array_equal(alone, theta)
+
+
+def test_zen_pallas_frozen_variant_matches_default_derivation():
+    """The frozen kernel samples the same frozen-phi conditional as the
+    default dense derivation: on a sharply peaked model both backends
+    must decode identical dominant topics, and the kernel's theta stays
+    within posterior-mean tolerance of the default's."""
+    model = _sharp_model()
+    rng = np.random.default_rng(6)
+    docs, doms = [], []
+    for i in range(8):
+        t = i % 4
+        docs.append(
+            rng.integers(t * 10, (t + 1) * 10, size=15).astype(np.int32)
+        )
+        doms.append(t)
+    thetas = {}
+    for algorithm in ("zen", "zen_pallas"):
+        eng = LDAEngine(
+            model,
+            LDAServeConfig(buckets=(16, 32), max_batch=8, num_sweeps=15,
+                           algorithm=algorithm),
+            seed=3,
+        )
+        thetas[algorithm] = eng.infer_batch(docs)
+        assert [int(np.argmax(t)) for t in thetas[algorithm]] == doms
+    for a, b in zip(thetas["zen"], thetas["zen_pallas"]):
+        assert np.abs(a - b).sum() < 0.15
+
+
+def test_latency_request_diagnostics_and_timestamps():
+    model = _sharp_model()
+    eng = LDAEngine(model, _latency_cfg(buckets=(8,)), seed=0)
+    t0 = time.monotonic()
+    ticket = eng.submit_async(np.arange(5, dtype=np.int32))
+    req = eng.request(ticket)
+    theta = eng.result(ticket, timeout=60)
+    assert req.done and req.z is not None and req.z.shape == (5,)
+    assert t0 <= req.t_submit <= req.t_done
+    np.testing.assert_allclose(theta, req.theta)

@@ -1,0 +1,39 @@
+"""The README quickstart must execute verbatim (docs-rot guard).
+
+Extracts the first ``bash`` fenced block under "## Quickstart" from the
+repo-root README.md and runs it through a real shell from the repo root,
+exactly as a reader would. A plain local ``pytest`` run includes it; in
+CI it runs ONLY as its own dedicated workflow step — the tier-1 CI step
+passes ``--ignore=tests/test_readme.py`` so the train->serve subprocess
+pipeline is not paid twice per CI run.
+"""
+import pathlib
+import re
+import subprocess
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _quickstart_snippet() -> str:
+    readme = (ROOT / "README.md").read_text()
+    section = readme.split("## Quickstart", 1)
+    assert len(section) == 2, "README.md lost its Quickstart section"
+    m = re.search(r"```bash\n(.*?)```", section[1], re.S)
+    assert m, "Quickstart section lost its bash snippet"
+    return m.group(1)
+
+
+def test_readme_quickstart_runs_verbatim():
+    snippet = _quickstart_snippet()
+    proc = subprocess.run(
+        ["bash", "-euo", "pipefail", "-c", snippet],
+        cwd=ROOT,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, (
+        f"README quickstart failed\nstdout:\n{proc.stdout}\n"
+        f"stderr:\n{proc.stderr}"
+    )
+    assert "latency ms: p50=" in proc.stdout, proc.stdout
