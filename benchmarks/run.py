@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
   table1   per-algorithm work terms (complexity model)   (bench_table1)
   sec41    partitioner quality (DBH+ et al.)             (bench_partition)
   infer    serving throughput + latency/throughput frontier (bench_infer)
+  kernels  kernel suite v2 vs pre-fusion baselines; writes
+           BENCH_kernels.json                            (bench_kernels)
 """
 import argparse
 
@@ -36,6 +38,8 @@ def main() -> None:
                                     fromlist=["main"]).main(),
         "infer": lambda: __import__("benchmarks.bench_infer",
                                     fromlist=["main"]).main(),
+        "kernels": lambda: __import__("benchmarks.bench_kernels",
+                                      fromlist=["main"]).main(),
     }
     wanted = args.only.split(",") if args.only else list(sections)
     print("name,us_per_call,derived")

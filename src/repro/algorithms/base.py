@@ -57,10 +57,24 @@ single-box trainer with zero extra code.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+# Kernel dispatch policy values for SamplerKnobs.kernels (see
+# ``kernel_dispatch``): "auto" = Pallas kernels on TPU, legacy XLA
+# elsewhere; "on"/"off" force either path (interpret-mode kernels on CPU
+# are bit-exact but walk the grid step by step — fine for tests, far too
+# slow for CPU *training*, hence a policy knob instead of a backend flag).
+VALID_KERNEL_MODES = ("auto", "on", "off")
+
+# TPU f32 tiling floors: Pallas blocks need >= 8 sublanes and lane-dim
+# multiples of 128; violations surface as opaque Mosaic lowering errors
+# deep inside jit, so SamplerKnobs rejects them at construction instead.
+_MIN_BT = 8
+_LANE = 128
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +84,11 @@ class SamplerKnobs:
     This unifies what used to be divergent fields on ``TrainConfig``
     (``token_chunk: Optional[int]``) and ``DistConfig``
     (``token_chunk: int = 0``): 0 always means "disabled / auto".
+
+    Tile knobs are validated at construction (``__post_init__`` fires for
+    ``knobs_from``, direct construction, and ``dataclasses.replace`` alike)
+    so a bad ``bt``/``bk``/``bs`` fails with a clear ``ValueError`` at
+    config time, not as a Pallas lowering error mid-trace.
     """
 
     sampling_method: str = "cdf"  # dense paths: cdf | gumbel
@@ -77,11 +96,51 @@ class SamplerKnobs:
     max_kd: int = 0  # padded-sparse doc-row width (0 = auto)
     num_mh: int = 8  # LightLDA cycle-MH steps
     token_chunk: int = 0  # bound peak memory by chunking tokens (0 = off)
-    bt: int = 256  # Pallas token-tile (zen_pallas)
-    bk: int = 512  # Pallas topic-tile (zen_pallas)
+    bt: int = 256  # Pallas token-tile (zen_pallas + kernel suite v2)
+    bk: int = 512  # Pallas topic-tile (zen_pallas + kernel suite v2)
+    bs: int = 128  # sparse-row lane-alignment tile (kernel (c))
+    kernels: str = "auto"  # kernel dispatch policy: auto | on | off
+
+    def __post_init__(self):
+        if self.bt < _MIN_BT:
+            raise ValueError(
+                f"SamplerKnobs.bt={self.bt}: Pallas token tiles need at "
+                f"least {_MIN_BT} rows (TPU f32 sublane minimum)"
+            )
+        for name, v in (("bk", self.bk), ("bs", self.bs)):
+            if v < _LANE or v % _LANE:
+                raise ValueError(
+                    f"SamplerKnobs.{name}={v}: topic/lane tiles must be "
+                    f"positive multiples of the {_LANE}-wide TPU lane dim"
+                )
+        if self.kernels not in VALID_KERNEL_MODES:
+            raise ValueError(
+                f"SamplerKnobs.kernels={self.kernels!r}: expected one of "
+                f"{VALID_KERNEL_MODES}"
+            )
 
     def chunk_or_none(self) -> Optional[int]:
         return self.token_chunk or None
+
+
+def kernel_dispatch(mode: str) -> bool:
+    """Resolve a ``SamplerKnobs.kernels`` policy to "use Pallas kernels?".
+
+    ``auto`` dispatches kernels when the default backend is a TPU and the
+    legacy XLA paths elsewhere (interpret-mode grids are too slow for CPU
+    training); ``on``/``off`` force either path. The ``REPRO_KERNELS``
+    environment variable overrides the knob when set (read at call time,
+    not import time) — this is how the parity tests force kernel dispatch
+    through the unchanged mesh harness.
+    """
+    mode = os.environ.get("REPRO_KERNELS", mode)
+    if mode not in VALID_KERNEL_MODES:
+        raise ValueError(
+            f"kernel mode {mode!r}: expected one of {VALID_KERNEL_MODES}"
+        )
+    if mode == "auto":
+        return jax.default_backend() == "tpu"
+    return mode == "on"
 
 
 _KNOB_FIELDS = tuple(f.name for f in dataclasses.fields(SamplerKnobs))

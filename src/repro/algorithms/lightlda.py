@@ -12,7 +12,7 @@ The single-box sweep keeps the once-per-run prepared index.
 """
 from __future__ import annotations
 
-from repro.algorithms.base import CellBackend, SamplerKnobs
+from repro.algorithms.base import CellBackend, SamplerKnobs, kernel_dispatch
 from repro.algorithms.registry import register
 from repro.core.baselines import (
     build_cell_doc_index,
@@ -38,7 +38,9 @@ class LightLDA(CellBackend):
         # hands it only the cell's token arrays)
         assert aux is not None, "lightlda needs prepare()'s doc index"
         return lightlda_sweep(
-            state, corpus, hyper, aux, knobs.max_kw, num_mh=knobs.num_mh
+            state, corpus, hyper, aux, knobs.max_kw, num_mh=knobs.num_mh,
+            use_kernel=kernel_dispatch(knobs.kernels),
+            bt=knobs.bt, bs=knobs.bs,
         )
 
     def cell_sweep(
@@ -50,4 +52,6 @@ class LightLDA(CellBackend):
         return lightlda_cell(
             key, word, doc, z_old, mask, n_wk, n_kd, n_k, hyper,
             num_words_pad, doc_index, knobs.max_kw, num_mh=knobs.num_mh,
+            use_kernel=kernel_dispatch(knobs.kernels),
+            bt=knobs.bt, bs=knobs.bs,
         )

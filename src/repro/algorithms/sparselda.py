@@ -7,7 +7,7 @@ shard-local count blocks, so the same pass runs per mesh cell under
 """
 from __future__ import annotations
 
-from repro.algorithms.base import CellBackend, SamplerKnobs
+from repro.algorithms.base import CellBackend, SamplerKnobs, kernel_dispatch
 from repro.algorithms.registry import register
 from repro.core.baselines import sparselda_cell
 
@@ -26,4 +26,6 @@ class SparseLDA(CellBackend):
         return sparselda_cell(
             key, word, doc, z_old, n_wk, n_kd, n_k, hyper, num_words_pad,
             knobs.max_kw, knobs.max_kd,
+            use_kernel=kernel_dispatch(knobs.kernels),
+            bt=knobs.bt, bs=knobs.bs,
         )

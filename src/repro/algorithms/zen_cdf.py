@@ -15,7 +15,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.algorithms.base import CellBackend, SamplerKnobs
+from repro.algorithms.base import CellBackend, SamplerKnobs, kernel_dispatch
 from repro.algorithms.registry import register
 from repro.algorithms.zen_dense import _searchsorted_rows
 from repro.core.decompositions import precompute_zen_terms
@@ -56,11 +56,20 @@ def _bsearch_shared(cdf: jax.Array, targets: jax.Array) -> jax.Array:
 def zen_cdf_cell(
     key, word_l, doc_l, z_old, mask, n_wk_l, n_kd_l, n_k, hyper,
     num_words_pad: int, max_kd: int,
+    use_kernel: bool = False, bt: int = 256, bk: int = 512,
 ):
     """TPU-native faithful ZenLDA: precomputed CDFs + sparse doc rows.
 
     Work per token: O(log K) (terms 1-2) + O(max_kd) (term 3); per-iteration
     precompute: two passes over the local N_w|k block.
+
+    ``use_kernel`` routes the term-2 draw through the fused CDF-search
+    kernel (``kernels.cdf_search``): the ``(Ws, K)`` float ``w_cdf`` matrix
+    becomes a matvec for the branch masses and the per-token search fuses
+    gather + term-multiply + lower-bound inside the kernel. Same
+    lower-bound semantics, different float summation order than the
+    whole-row cumsum — distribution-equal, not bit-equal, to the XLA path
+    (zen_cdf's cross-path contract is statistical; see DESIGN.md §2.3).
     """
     k = hyper.num_topics
     terms = precompute_zen_terms(n_k, hyper, num_words_pad)
@@ -68,9 +77,15 @@ def zen_cdf_cell(
     # --- per-iteration precompute (the "build tables" stage, Alg. 2 l.5-13)
     g_cdf = jnp.cumsum(terms.g_dense)  # (K,)
     m1 = g_cdf[-1]
-    w_vals = n_wk_l.astype(jnp.float32) * terms.t4[None, :]  # (Ws, K)
-    w_cdf = jnp.cumsum(w_vals, axis=-1)
-    m2_all = w_cdf[:, -1]  # (Ws,)
+    if use_kernel:
+        # branch masses only — no (Ws, K) float CDF matrix in HBM
+        n_wk_i = n_wk_l.astype(jnp.int32)
+        m2_all = n_wk_l.astype(jnp.float32) @ terms.t4  # (Ws,)
+        w_cdf = None
+    else:
+        w_vals = n_wk_l.astype(jnp.float32) * terms.t4[None, :]  # (Ws, K)
+        w_cdf = jnp.cumsum(w_vals, axis=-1)
+        m2_all = w_cdf[:, -1]  # (Ws,)
     # sparse doc rows: top-max_kd topics by count. approx_max_k lowers to
     # the TPU PartialReduce unit (one pass over the block); exact top_k
     # lowers to a full row sort (§Perf iteration l2)
@@ -102,7 +117,14 @@ def zen_cdf_cell(
         # gathers per token; the dense form gathered (T, K) rows (31 GB at
         # webchunk scale — §Perf iteration l1)
         t2_target = jnp.maximum(u - m1, 0.0)
-        z_w = _bsearch_gather(w_cdf, word_l, t2_target)
+        if use_kernel:
+            from repro.kernels.ops import cdf_row_search
+
+            z_w = cdf_row_search(
+                n_wk_i, word_l, terms.t4, t2_target, bt=bt, bk=bk
+            )
+        else:
+            z_w = _bsearch_gather(w_cdf, word_l, t2_target)
         # term 3: doc sparse row CDF (paper's dSparse + BSearch) — rows are
         # only max_kd wide, dense compare is the cheaper form here
         t3_target = jnp.maximum(u - m1 - m2, 0.0)
@@ -220,6 +242,8 @@ class ZenCdf(CellBackend):
         return zen_cdf_cell(
             key, word, doc, z_old, mask, n_wk, n_kd, n_k, hyper,
             num_words_pad, knobs.max_kd or DEFAULT_MAX_KD,
+            use_kernel=kernel_dispatch(knobs.kernels),
+            bt=knobs.bt, bk=knobs.bk,
         )
 
     def prepare_infer(self, n_wk, n_k, hyper, knobs: SamplerKnobs):

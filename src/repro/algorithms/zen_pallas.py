@@ -15,7 +15,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.algorithms.base import CellBackend, SamplerKnobs, chunked_token_map
+from repro.algorithms.base import (
+    CellBackend,
+    SamplerKnobs,
+    chunked_token_map,
+    kernel_dispatch,
+)
 from repro.algorithms.registry import register
 
 
@@ -69,7 +74,7 @@ class ZenPallas(CellBackend):
         with ``cgs_infer``, but it IS bit-stable across batch layouts;
         ``tests/test_latency_serving.py`` pins both properties).
         """
-        from repro.kernels.ops import zen_infer_sample
+        from repro.kernels.ops import zen_fused_infer_sample, zen_infer_sample
 
         if aux is None:
             aux = self.prepare_infer(n_wk, n_k, hyper, knobs)
@@ -88,12 +93,23 @@ class ZenPallas(CellBackend):
 
         # w_beta stays a static python float (jit static arg), so it is
         # derived from shapes/hyper here, never threaded through the aux
-        out = zen_infer_sample(
-            n_wk[w].astype(jnp.int32), n_kd[slot].astype(jnp.int32), z,
-            seeds, aux.alpha_k, aux.n_k_f,
-            beta=hyper.beta, w_beta=n_wk.shape[0] * hyper.beta,
-            bt=knobs.bt, bk=knobs.bk,
-        )
+        if kernel_dispatch(knobs.kernels):
+            # fused gather+sample: scalar-prefetched word/slot ids, count
+            # rows tiled from the resident matrices — no (B*L, K) gathered
+            # intermediates. Bit-identical to the legacy path below.
+            out = zen_fused_infer_sample(
+                n_wk.astype(jnp.int32), n_kd.astype(jnp.int32), w, slot, z,
+                seeds, aux.alpha_k, aux.n_k_f,
+                beta=hyper.beta, w_beta=n_wk.shape[0] * hyper.beta,
+                bt=knobs.bt, bk=knobs.bk,
+            )
+        else:
+            out = zen_infer_sample(
+                n_wk[w].astype(jnp.int32), n_kd[slot].astype(jnp.int32), z,
+                seeds, aux.alpha_k, aux.n_k_f,
+                beta=hyper.beta, w_beta=n_wk.shape[0] * hyper.beta,
+                bt=knobs.bt, bk=knobs.bk,
+            )
         return out.reshape(b, l)
 
     def cell_sweep(
@@ -102,26 +118,41 @@ class ZenPallas(CellBackend):
     ):
         # lazy: keep pallas out of the import path of everything that
         # never selects this backend
-        from repro.kernels.ops import zen_sample
+        from repro.kernels.ops import zen_fused_sample, zen_sample
 
+        # scalar prep + count-matrix dtype casts hoisted out of the chunk
+        # fn (the FrozenPallasModel pattern for the training path): a
+        # token_chunk run re-enters chunk() per chunk, but alpha_k / n_k_f
+        # / the int32 casts depend only on sweep-start state. The kernel
+        # tiles assume 4-byte count rows (the distributed path may hold
+        # N_kd in int16), so the casts happen exactly once per sweep here.
         alpha_k = hyper.alpha_k(n_k)
         n_k_f = n_k.astype(jnp.float32)
         w_beta = num_words_pad * hyper.beta
+        n_wk_i = n_wk.astype(jnp.int32)
+        n_kd_i = n_kd.astype(jnp.int32)
+        use_kernel = kernel_dispatch(knobs.kernels)
 
         def chunk(args):
             w, d, z, subkey = args
             seed = jax.random.randint(
                 subkey, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
             )
-            # int32 casts: the kernel tiles assume 4-byte count rows (the
-            # distributed path may hold N_kd in int16)
+            if use_kernel:
+                # fused gather+sample: no (chunk, K) gathered rows in HBM;
+                # bit-identical to the legacy gather-then-sample path
+                return zen_fused_sample(
+                    n_wk_i, n_kd_i, w, d, z, alpha_k, n_k_f, seed,
+                    beta=hyper.beta, w_beta=w_beta,
+                    bt=knobs.bt, bk=knobs.bk,
+                )
             return zen_sample(
-                n_wk[w].astype(jnp.int32), n_kd[d].astype(jnp.int32), z,
-                alpha_k, n_k_f, seed,
+                n_wk_i[w], n_kd_i[d], z, alpha_k, n_k_f, seed,
                 beta=hyper.beta, w_beta=w_beta, bt=knobs.bt, bk=knobs.bk,
             )
 
-        # chunking bounds the gathered (chunk, K) row tiles in HBM
+        # chunking bounds the per-chunk workspace (and, on the legacy
+        # path, the gathered (chunk, K) row tiles in HBM)
         return chunked_token_map(
             chunk, key, (word, doc, z_old), knobs.token_chunk
         )

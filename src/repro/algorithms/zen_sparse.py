@@ -9,7 +9,7 @@ capacities, and the single-box sweep is the whole corpus as one cell.
 """
 from __future__ import annotations
 
-from repro.algorithms.base import CellBackend, SamplerKnobs
+from repro.algorithms.base import CellBackend, SamplerKnobs, kernel_dispatch
 from repro.algorithms.registry import register
 from repro.core.zen_sparse import zen_sparse_cell
 
@@ -28,4 +28,6 @@ class ZenSparse(CellBackend):
         return zen_sparse_cell(
             key, word, doc, z_old, n_wk, n_kd, n_k, hyper, num_words_pad,
             knobs.max_kw, knobs.max_kd,
+            use_kernel=kernel_dispatch(knobs.kernels),
+            bt=knobs.bt, bs=knobs.bs,
         )

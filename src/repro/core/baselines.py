@@ -43,10 +43,19 @@ def sparselda_cell(
     num_words: int,  # global (padded) vocabulary — the W in W*beta
     max_kw: int,
     max_kd: int,
+    use_kernel: bool = False,
+    bt: int = 256,
+    bs: int = 128,
 ) -> jax.Array:
     """One SparseLDA pass over a cell's tokens (stale counts, exact
     self-exclusion on the gathered values) -> (T,). Shard-relative: the
-    padded s/r/q rows are sparsified from the local count blocks only."""
+    padded s/r/q rows are sparsified from the local count blocks only.
+
+    ``use_kernel`` routes the r/q bucket inversions through the
+    padded-sparse Pallas kernel (``kernels.sparse_row``), whose op
+    sequence matches the XLA form below exactly — dispatch is
+    bit-identical. The shared dense s bucket stays on XLA (one (K,) CDF
+    for the whole sweep; nothing to fuse)."""
     terms = precompute_zen_terms(n_k, hyper, num_words)
     kd_rows = sparsify_rows(n_kd, max_kd)
     wk_rows = sparsify_rows(n_wk, max_kw)
@@ -92,18 +101,23 @@ def sparselda_cell(
     z_s = jnp.minimum(jnp.sum(s_cdf[None, :] < u[:, None], axis=-1), k - 1)
 
     r_target = jnp.maximum(u - s_mass, 0.0)
-    r_cdf = jnp.cumsum(r_vals, axis=-1)
-    r_pos = jnp.minimum(
-        jnp.sum(r_cdf < r_target[:, None], axis=-1), r_vals.shape[-1] - 1
-    )
-    z_r = jnp.take_along_axis(kd_idx, r_pos[:, None], axis=-1)[:, 0]
-
     q_target = jnp.maximum(u - s_mass - r_mass, 0.0)
-    q_cdf = jnp.cumsum(q_vals, axis=-1)
-    q_pos = jnp.minimum(
-        jnp.sum(q_cdf < q_target[:, None], axis=-1), q_vals.shape[-1] - 1
-    )
-    z_q = jnp.take_along_axis(wk_idx, q_pos[:, None], axis=-1)[:, 0]
+    if use_kernel:
+        from repro.kernels.ops import sparse_row_sample
+
+        z_r = sparse_row_sample(r_vals, kd_idx, r_target, bt=bt, bs=bs)
+        z_q = sparse_row_sample(q_vals, wk_idx, q_target, bt=bt, bs=bs)
+    else:
+        r_cdf = jnp.cumsum(r_vals, axis=-1)
+        r_pos = jnp.minimum(
+            jnp.sum(r_cdf < r_target[:, None], axis=-1), r_vals.shape[-1] - 1
+        )
+        z_r = jnp.take_along_axis(kd_idx, r_pos[:, None], axis=-1)[:, 0]
+        q_cdf = jnp.cumsum(q_vals, axis=-1)
+        q_pos = jnp.minimum(
+            jnp.sum(q_cdf < q_target[:, None], axis=-1), q_vals.shape[-1] - 1
+        )
+        z_q = jnp.take_along_axis(wk_idx, q_pos[:, None], axis=-1)[:, 0]
 
     z_new = jnp.where(
         u < s_mass, z_s, jnp.where(u < s_mass + r_mass, z_r, z_q)
@@ -117,13 +131,16 @@ def sparselda_sweep(
     hyper: LDAHyperParams,
     max_kw: int,
     max_kd: int,
+    use_kernel: bool = False,
+    bt: int = 256,
+    bs: int = 128,
 ) -> jax.Array:
     """One SparseLDA sweep (stale counts, exact self-exclusion). -> (E,)."""
     key = jax.random.fold_in(state.rng, state.iteration)
     return sparselda_cell(
         key, corpus.word, corpus.doc, state.topic,
         state.n_wk, state.n_kd, state.n_k, hyper, corpus.num_words,
-        max_kw, max_kd,
+        max_kw, max_kd, use_kernel=use_kernel, bt=bt, bs=bs,
     )
 
 
@@ -193,9 +210,21 @@ def lightlda_cell(
     doc_index: DocIndex,  # over THIS cell's tokens (shard-local doc ids)
     max_kw: int,
     num_mh: int = 8,
+    use_kernel: bool = False,
+    bt: int = 256,
+    bs: int = 128,
 ) -> jax.Array:
     """One LightLDA pass over a cell's tokens: ``num_mh`` cycle-MH steps
     per token -> (T,).
+
+    ``use_kernel`` replaces the word proposal's sparse-branch *alias*
+    draw with CDF inversion through the padded-sparse Pallas kernel
+    (``kernels.sparse_row``) over the same ``N_wk * t1`` density — and
+    skips building the per-word alias tables entirely. The proposal
+    distribution is unchanged (alias and CDF inversion sample the same
+    pmf), so ``word_q`` still describes what was proposed and the MH
+    chain stays valid; draws differ bitwise (different uniforms-to-topic
+    mapping), matching the backend's statistical cross-path contract.
 
     Shard-relative: the word-proposal alias rows come from the local
     ``n_wk`` block, and the O(1) doc proposal draws from the doc's tokens
@@ -225,7 +254,10 @@ def lightlda_cell(
     wk_rows = sparsify_rows(n_wk, max_kw)
     t1 = jnp.concatenate([terms.t1, jnp.zeros((1,), jnp.float32)])
     w_vals = wk_rows.cnt.astype(jnp.float32) * t1[wk_rows.idx]
-    w_alias = jax.vmap(build_alias)(w_vals)
+    # kernel path draws the sparse branch by CDF inversion instead — the
+    # per-word alias build (a vmapped O(max_kw) fixpoint per word) is the
+    # single biggest table-build cost and is skipped entirely
+    w_alias = None if use_kernel else jax.vmap(build_alias)(w_vals)
     w_sparse_mass = jnp.sum(w_vals, axis=-1)  # (W,)
     dense_tab = build_alias(terms.t5)
     dense_mass = jnp.sum(terms.t5)
@@ -239,11 +271,20 @@ def lightlda_cell(
         nbins = wk_rows.idx.shape[-1]
         u1 = jax.random.uniform(k2, w_ids.shape)
         u2 = jax.random.uniform(k3, w_ids.shape)
-        bins = jnp.minimum((u1 * nbins).astype(jnp.int32), nbins - 1)
-        probs = jnp.take_along_axis(w_alias.prob[w_ids], bins[:, None], -1)[:, 0]
-        aliases = jnp.take_along_axis(w_alias.alias[w_ids], bins[:, None], -1)[:, 0]
-        slot = jnp.where(u2 < probs, bins, aliases)
-        z_sparse = jnp.take_along_axis(wk_rows.idx[w_ids], slot[:, None], -1)[:, 0]
+        if use_kernel:
+            from repro.kernels.ops import sparse_row_sample
+
+            z_sparse = sparse_row_sample(
+                w_vals[w_ids], wk_rows.idx[w_ids], u1 * m_s, bt=bt, bs=bs
+            )
+        else:
+            bins = jnp.minimum((u1 * nbins).astype(jnp.int32), nbins - 1)
+            probs = jnp.take_along_axis(w_alias.prob[w_ids], bins[:, None], -1)[:, 0]
+            aliases = jnp.take_along_axis(w_alias.alias[w_ids], bins[:, None], -1)[:, 0]
+            slot = jnp.where(u2 < probs, bins, aliases)
+            z_sparse = jnp.take_along_axis(
+                wk_rows.idx[w_ids], slot[:, None], -1
+            )[:, 0]
         z_dense = sample_alias(
             dense_tab, jax.random.uniform(k4, w_ids.shape),
             jax.random.uniform(jax.random.fold_in(k4, 1), w_ids.shape),
@@ -306,6 +347,9 @@ def lightlda_sweep(
     doc_index: DocIndex,
     max_kw: int,
     num_mh: int = 8,
+    use_kernel: bool = False,
+    bt: int = 256,
+    bs: int = 128,
 ) -> jax.Array:
     """One LightLDA sweep: ``num_mh`` cycle-MH steps per token. -> (E,)."""
     key = jax.random.fold_in(state.rng, state.iteration)
@@ -314,4 +358,5 @@ def lightlda_sweep(
         key, corpus.word, corpus.doc, state.topic, mask,
         state.n_wk, state.n_kd, state.n_k, hyper, corpus.num_words,
         doc_index, max_kw, num_mh=num_mh,
+        use_kernel=use_kernel, bt=bt, bs=bs,
     )

@@ -70,6 +70,8 @@ class DistConfig:
     kd_dtype: str = "int32"  # int32 | int16
     bt: int = 256  # zen_pallas token tile
     bk: int = 512  # zen_pallas topic tile
+    bs: int = 128  # sparse-row lane tile (kernel suite v2, kernel (c))
+    kernels: str = "auto"  # Pallas kernel dispatch: auto | on | off
 
     def knobs(self) -> SamplerKnobs:
         """The shared backend knob dataclass (the single ``knobs_from``

@@ -45,8 +45,10 @@ class TrainConfig:
     max_kd: int = 0
     num_mh: int = 8  # LightLDA MH steps (paper uses 8)
     token_chunk: int = 0  # 0 = whole sweep at once (memory knob)
-    bt: int = 256  # zen_pallas token tile
-    bk: int = 512  # zen_pallas topic tile
+    bt: int = 256  # Pallas token tile
+    bk: int = 512  # Pallas topic tile
+    bs: int = 128  # sparse-row lane tile (kernel suite v2)
+    kernels: str = "auto"  # Pallas kernel dispatch: auto | on | off
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
 
@@ -72,6 +74,7 @@ class TrainConfig:
             sampling_method=self.sampling_method,
             max_kw=self.max_kw, max_kd=self.max_kd, num_mh=self.num_mh,
             token_chunk=self.token_chunk, bt=self.bt, bk=self.bk,
+            bs=self.bs, kernels=self.kernels,
             init=self.init, sparse_init_degree=self.sparse_init_degree,
             mesh_shape=None,
             num_iterations=num_iterations,

@@ -161,8 +161,16 @@ def zen_sample_tokens(
     doc: jax.Array,  # (T,)
     prev_topic: jax.Array,  # (T,) z from last iteration (for the remedy)
     hyper: LDAHyperParams,
+    use_kernel: bool = False,
+    bt: int = 256,
+    bs: int = 128,
 ) -> jax.Array:
-    """Sample new topics for T tokens — the faithful two-level ZenLDA draw."""
+    """Sample new topics for T tokens — the faithful two-level ZenLDA draw.
+
+    ``use_kernel`` routes the term-3 dSparse inversion through the
+    padded-sparse Pallas kernel (``kernels.sparse_row``). The kernel's op
+    sequence (cumsum, lower-bound count, clamp, topic select) is exactly
+    this function's XLA term-3 sequence, so dispatch is bit-identical."""
 
     def draw(key):
         k_u, k_g1, k_g2, k_w1, k_w2, k_d = jax.random.split(key, 6)
@@ -194,11 +202,16 @@ def zen_sample_tokens(
             tables.wk_rows.idx[word], slot[:, None], axis=-1
         )[:, 0]
         # term 3: CDF binary search over the doc's padded slots
-        cdf = jnp.cumsum(d_vals, axis=-1)
         target = jnp.maximum(u - (m1 + m2), 0.0)
-        pos = jnp.sum(cdf < target[:, None], axis=-1)
-        pos = jnp.minimum(pos, d_vals.shape[-1] - 1)
-        z_d = jnp.take_along_axis(d_topics, pos[:, None], axis=-1)[:, 0]
+        if use_kernel:
+            from repro.kernels.ops import sparse_row_sample
+
+            z_d = sparse_row_sample(d_vals, d_topics, target, bt=bt, bs=bs)
+        else:
+            cdf = jnp.cumsum(d_vals, axis=-1)
+            pos = jnp.sum(cdf < target[:, None], axis=-1)
+            pos = jnp.minimum(pos, d_vals.shape[-1] - 1)
+            z_d = jnp.take_along_axis(d_topics, pos[:, None], axis=-1)[:, 0]
 
         branch = jnp.where(u < m1, 0, jnp.where(u < m1 + m2, 1, 2))
         z = jnp.where(branch == 0, z_g, jnp.where(branch == 1, z_w, z_d))
@@ -237,6 +250,9 @@ def zen_sparse_cell(
     num_words: int,  # global (padded) vocabulary — the W in W*beta
     max_kw: int,
     max_kd: int,
+    use_kernel: bool = False,
+    bt: int = 256,
+    bs: int = 128,
 ) -> jax.Array:
     """One faithful ZenLDA pass over a cell's tokens (stale counts) -> (T,).
 
@@ -247,7 +263,10 @@ def zen_sparse_cell(
     sweep is this with the whole corpus as one cell.
     """
     tables = build_tables(n_wk, n_kd, n_k, hyper, num_words, max_kw, max_kd)
-    return zen_sample_tokens(key, tables, word, doc, z_old, hyper)
+    return zen_sample_tokens(
+        key, tables, word, doc, z_old, hyper,
+        use_kernel=use_kernel, bt=bt, bs=bs,
+    )
 
 
 def zen_sparse_sweep(
@@ -256,11 +275,14 @@ def zen_sparse_sweep(
     hyper: LDAHyperParams,
     max_kw: int,
     max_kd: int,
+    use_kernel: bool = False,
+    bt: int = 256,
+    bs: int = 128,
 ) -> jax.Array:
     """One faithful ZenLDA sweep over all tokens (stale counts). -> (E,)."""
     key = jax.random.fold_in(state.rng, state.iteration)
     return zen_sparse_cell(
         key, corpus.word, corpus.doc, state.topic,
         state.n_wk, state.n_kd, state.n_k, hyper, corpus.num_words,
-        max_kw, max_kd,
+        max_kw, max_kd, use_kernel=use_kernel, bt=bt, bs=bs,
     )

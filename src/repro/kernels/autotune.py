@@ -1,0 +1,166 @@
+"""Tile autotuner for the kernel suite (ISSUE 6 tentpole (d)).
+
+The Pallas kernels expose three tiling knobs — ``bt`` (token rows per
+tile), ``bk`` (topic lanes per tile), ``bs`` (sparse-row lane alignment)
+— whose best values depend on K, the row widths, and the part (VMEM size,
+DMA latency) far more than on the corpus. Rather than guess, the
+autotuner times the real kernels on a caller-supplied workload across a
+small tile grid and hands back a ``SamplerKnobs`` with the winners
+(``apply_best``), which flows through the normal ``knobs_from`` plumbing
+— the sweep result IS a config, not a side channel.
+
+Timings are wall-clock medians over jitted calls (``block_until_ready``);
+on CPU the kernels run in interpret mode, so absolute numbers are only
+meaningful on a real TPU — the benchmark harness records both regimes,
+labeled (``benchmarks/bench_kernels.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, List, Optional, Sequence
+
+import jax
+
+from repro.algorithms.base import SamplerKnobs
+
+
+@dataclasses.dataclass(frozen=True)
+class TileTiming:
+    """One timed (kernel, tile config) point. ``bk`` is 0 for the sparse
+    kernel (it has no topic tiling), ``bs`` is 0 for the K-tiled kernels."""
+
+    kernel: str  # fused_sample | fused_infer | cdf_search | sparse_row
+    bt: int
+    bk: int
+    bs: int
+    us_per_call: float
+    tokens_per_sec: float
+
+
+def _time_call(fn, iters: int, warmup: int) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def autotune_fused(
+    n_wk, n_kd, word, doc, z_old, alpha_k, n_k, seed,
+    *,
+    beta: float,
+    w_beta: float,
+    bts: Sequence[int] = (128, 256),
+    bks: Sequence[int] = (256, 512),
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: Optional[bool] = None,
+) -> List[TileTiming]:
+    """Sweep (bt, bk) over the fused gather+sample training kernel."""
+    from repro.kernels.ops import zen_fused_sample
+
+    t = word.shape[0]
+    out = []
+    for bt in bts:
+        for bk in bks:
+            us = _time_call(
+                lambda: zen_fused_sample(
+                    n_wk, n_kd, word, doc, z_old, alpha_k, n_k, seed,
+                    beta=beta, w_beta=w_beta, bt=bt, bk=bk,
+                    interpret=interpret,
+                ),
+                iters, warmup,
+            )
+            out.append(TileTiming("fused_sample", bt, bk, 0, us, t / us * 1e6))
+    return out
+
+
+def autotune_cdf(
+    counts, rows, term, targets,
+    *,
+    bts: Sequence[int] = (128, 256),
+    bks: Sequence[int] = (256, 512),
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: Optional[bool] = None,
+) -> List[TileTiming]:
+    """Sweep (bt, bk) over the CDF lower-bound search kernel."""
+    from repro.kernels.ops import cdf_row_search
+
+    t = rows.shape[0]
+    out = []
+    for bt in bts:
+        for bk in bks:
+            us = _time_call(
+                lambda: cdf_row_search(
+                    counts, rows, term, targets, bt=bt, bk=bk,
+                    interpret=interpret,
+                ),
+                iters, warmup,
+            )
+            out.append(TileTiming("cdf_search", bt, bk, 0, us, t / us * 1e6))
+    return out
+
+
+def autotune_sparse(
+    vals, topics, targets,
+    *,
+    bts: Sequence[int] = (128, 256),
+    bss: Sequence[int] = (128, 256),
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: Optional[bool] = None,
+) -> List[TileTiming]:
+    """Sweep (bt, bs) over the padded-sparse row kernel. ``bs`` widens the
+    lane pad of the compact rows, standing in for the ``max_kw``-style
+    row-width axis of the sweep (the padded width is what the kernel
+    actually streams)."""
+    from repro.kernels.ops import sparse_row_sample
+
+    t = vals.shape[0]
+    out = []
+    for bt in bts:
+        for bs in bss:
+            us = _time_call(
+                lambda: sparse_row_sample(
+                    vals, topics, targets, bt=bt, bs=bs, interpret=interpret,
+                ),
+                iters, warmup,
+            )
+            out.append(TileTiming("sparse_row", bt, 0, bs, us, t / us * 1e6))
+    return out
+
+
+def apply_best(
+    timings: Iterable[TileTiming], knobs: SamplerKnobs
+) -> SamplerKnobs:
+    """Fold a sweep's winners into a ``SamplerKnobs``.
+
+    Per-kernel argmin of ``us_per_call``; the K-tiled kernels set
+    ``bt``/``bk``, the sparse kernel sets ``bs``. When both families were
+    swept, the K-tiled winner owns ``bt`` (the fused sampler dominates
+    sweep cost; the sparse kernel's bt sensitivity is second-order).
+    Validation in ``SamplerKnobs.__post_init__`` re-checks the winners, so
+    a sweep can never smuggle in an illegal tile.
+    """
+    best = {}
+    for tt in timings:
+        cur = best.get(tt.kernel)
+        if cur is None or tt.us_per_call < cur.us_per_call:
+            best[tt.kernel] = tt
+    updates = {}
+    sparse = best.pop("sparse_row", None)
+    if sparse is not None:
+        updates["bs"] = sparse.bs
+        updates["bt"] = sparse.bt
+    if best:  # any K-tiled kernel: fused_sample / fused_infer / cdf_search
+        win = min(best.values(), key=lambda tt: tt.us_per_call)
+        updates["bt"] = win.bt
+        updates["bk"] = win.bk
+    return dataclasses.replace(knobs, **updates) if updates else knobs

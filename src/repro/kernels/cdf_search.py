@@ -1,0 +1,118 @@
+"""CDF inversion search — kernel suite v2, kernel (b).
+
+``zen_cdf``'s faithful-paper path draws the term-2 word topic by
+materializing a ``(W_shard, K)`` float CDF matrix (``cumsum`` of
+``N_w|k · t4``) and binary-searching gathered rows through plain XLA.
+This kernel fuses the whole chain — gather the token's *integer* count
+row in the DMA engine (scalar-prefetched word ids, same trick as
+``fused_gather``), multiply by the broadcast per-topic term inside the
+K-tile loop, and run the lower-bound search as a running-carry count —
+so neither the float CDF matrix nor the gathered ``(T, K)`` rows ever
+touch HBM.
+
+Search-as-count identity: the lower-bound index of ``target`` in
+``cumsum(vals)`` equals ``sum(cdf < target)``. Counting distributes over
+K tiles with two scalar carries per token: ``acc`` (mass of all previous
+tiles, added to this tile's local cumsum) and ``cnt`` (matches so far).
+The final ``min(cnt, k_real - 1)`` clamp covers the float edge where
+``target`` exceeds the total mass (u == 1 round-off) and simultaneously
+makes K-padding inert: padded columns have ``t4 == 0`` so they add no
+mass, and any counts they'd contribute past ``k_real - 1`` are clamped
+away. ``ref.cdf_row_search_ref`` replicates the tile-for-tile op order,
+so the kernel is bit-identical to its oracle at every tile shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils.compat import pallas_tpu_compiler_params
+
+
+def _cdf_search_kernel(
+    # scalar prefetch
+    wids_ref,  # (T,) int32 — per-token row into the count matrix
+    # inputs
+    row_ref,  # (1, bk) int32 — count-row tile, DMA'd via wids[token]
+    term_ref,  # (1, bk) f32 — per-topic multiplier tile (t4)
+    tgt_ref,  # (bt, 1) f32 — per-token inversion target
+    # output
+    out_ref,  # (bt, 1) int32 — lower-bound index into the row CDF
+    # scratch
+    acc_ref,  # (1, 1) f32 — mass of all previous K tiles
+    cnt_ref,  # (1, 1) i32 — lower-bound count so far
+    *,
+    k_real: int,
+    bt: int,
+    bk: int,
+):
+    t = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[0, 0] = 0.0
+        cnt_ref[0, 0] = 0
+
+    vals = row_ref[...].astype(jnp.float32) * term_ref[...]
+    cdf = acc_ref[0, 0] + jnp.cumsum(vals, axis=1)
+    target = tgt_ref[t, 0]
+    cnt_ref[0, 0] += jnp.sum((cdf < target).astype(jnp.int32))
+    acc_ref[0, 0] += jnp.sum(vals)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _done():
+        out_ref[t, 0] = jnp.minimum(cnt_ref[0, 0], k_real - 1)
+
+
+def cdf_row_search_pallas(
+    counts: jax.Array,  # (R, K) int32 — resident count matrix
+    rows: jax.Array,  # (T,) int32 row ids into counts
+    term: jax.Array,  # (K,) f32 — per-topic multiplier
+    targets: jax.Array,  # (T,) f32 — inversion targets
+    *,
+    k_real: int,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Lower-bound search of ``targets`` in ``cumsum(counts[rows] * term)``
+    per token, fused with the row gather. T % bt == 0 and K % bk == 0
+    required (``ops.cdf_row_search`` pads); ``k_real`` is the pre-padding
+    topic count used for the final clamp."""
+    t, k = rows.shape[0], counts.shape[1]
+    assert t % bt == 0 and k % bk == 0, (t, k, bt, bk)
+    grid = (t // bt, bt, k // bk)
+    kernel = functools.partial(_cdf_search_kernel, k_real=k_real, bt=bt, bk=bk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bk), lambda i, t, j, w: (w[i * bt + t], j)),
+                pl.BlockSpec((1, bk), lambda i, t, j, w: (0, j)),
+                pl.BlockSpec((bt, 1), lambda i, t, j, w: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((bt, 1), lambda i, t, j, w: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.int32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, 1), jnp.int32),
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+    )(
+        rows.astype(jnp.int32),
+        counts,
+        term[None, :].astype(jnp.float32),
+        targets[:, None].astype(jnp.float32),
+    )
+    return out[:, 0]

@@ -1,0 +1,284 @@
+"""Fused gather+sample — kernel suite v2, kernel (a).
+
+The first-generation sampler (``zen_sampler.py``) consumes *gathered*
+``(T, K)`` word/doc count rows: the backend materializes ``n_wk[word]`` and
+``n_kd[doc]`` in HBM before the kernel ever runs — at webchunk scale that is
+two full token-by-topic matrices of traffic per sweep that exist only to be
+streamed once. This kernel removes the materialization: the per-token
+word/doc *row indices* ride in as scalar-prefetch operands
+(``pltpu.PrefetchScalarGridSpec``), and each grid step's BlockSpec
+``index_map`` uses them to pull the token's ``(1, bk)`` count-row tile
+straight out of the resident ``N_w|k`` / ``N_k|d`` matrices — the gather
+happens in the DMA engine, tile by tile, never as an HBM intermediate
+(CuLDA_CGS's fused gather+sample+update, rendered for the TPU memory
+system; see DESIGN.md §2.3).
+
+Grid = (T/bt, bt, K/bk): the middle dimension walks tokens within a token
+tile (one token per step, so the index map can address a single matrix
+row), the innermost walks K tiles with the same running (max, argmax)
+carry as the v1 kernel — now held in a ``(1, 1)`` scalar scratch per
+token. Math, noise coordinates (global token id, topic id), and tie-break
+order are identical to ``_zen_sampler_kernel`` term for term, so the
+fused path is **bit-identical** to the v1 gather-then-sample path (and to
+``ref.zen_fused_sample_ref``) — dispatch choice can never change a run.
+
+Two variants, mirroring v1:
+
+* ``zen_fused_sample_pallas`` — training: exact ¬dw self-exclusion on all
+  three counts, one scalar seed, noise rows = global token index.
+* ``zen_fused_infer_sample_pallas`` — frozen-model serving: doc-side-only
+  exclusion, per-token counter-based seeds (``golden_seed``), noise rows
+  pinned to 0 (DESIGN.md §5.1 layout-stability contract).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.zen_sampler import gumbel_noise
+from repro.utils.compat import pallas_tpu_compiler_params
+
+
+def _fused_sample_kernel(
+    # scalar prefetch
+    seed_ref,  # (1,) int32
+    wids_ref,  # (T,) int32 — per-token word row in N_wk
+    dids_ref,  # (T,) int32 — per-token doc row in N_kd
+    # inputs
+    nwk_ref,  # (1, bk) int32 — word row tile, DMA'd via wids[token]
+    nkd_ref,  # (1, bk) int32 — doc row tile, DMA'd via dids[token]
+    zold_ref,  # (bt, 1) int32 — previous assignment (¬dw exclusion)
+    alpha_ref,  # (1, bk) f32 — alpha_k
+    nk_ref,  # (1, bk) f32 — N_k
+    # output
+    out_ref,  # (bt, 1) int32 — sampled topic
+    # scratch
+    m_ref,  # (1, 1) f32 — running max of log p + g for this token
+    a_ref,  # (1, 1) i32 — running argmax
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int,
+    bk: int,
+):
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[0, 0] = -jnp.inf
+        a_ref[0, 0] = 0
+
+    tok = i * bt + t  # global token index — v1's noise row coordinate
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+
+    # exact ¬dw: subtract the token's own previous assignment
+    self_hit = (cols == zold_ref[t, 0]).astype(jnp.float32)
+    nw = nwk_ref[...].astype(jnp.float32) - self_hit
+    nd = nkd_ref[...].astype(jnp.float32) - self_hit
+    nk = nk_ref[...] - self_hit
+    alpha_k = alpha_ref[...]
+
+    # three-term ZenLDA decomposition, fused (paper Alg. 5 FMAs)
+    p = (alpha_k * beta + nw * alpha_k + nd * (nw + beta)) / (nk + w_beta)
+
+    g = gumbel_noise(seed_ref[0], tok, cols)
+    score = jnp.log(jnp.maximum(p, 1e-30)) + g
+
+    tile_max = jnp.max(score)
+    tile_arg = jnp.argmax(score[0]).astype(jnp.int32) + j * bk
+
+    better = tile_max > m_ref[0, 0]
+    a_ref[0, 0] = jnp.where(better, tile_arg, a_ref[0, 0])
+    m_ref[0, 0] = jnp.where(better, tile_max, m_ref[0, 0])
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _done():
+        out_ref[t, 0] = a_ref[0, 0]
+
+
+def zen_fused_sample_pallas(
+    n_wk: jax.Array,  # (W, K) int32 — resident word-topic matrix
+    n_kd: jax.Array,  # (D, K) int32 — resident doc-topic matrix
+    word: jax.Array,  # (T,) int32 row ids into n_wk
+    doc: jax.Array,  # (T,) int32 row ids into n_kd
+    z_old: jax.Array,  # (T,) int32
+    alpha_k: jax.Array,  # (K,) f32
+    n_k: jax.Array,  # (K,) f32/int32
+    seed: jax.Array,  # () int32 — iteration/device-folded seed
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sample one topic per token, gathering count rows in-register.
+    T % bt == 0 and K % bk == 0 required (``ops.zen_fused_sample`` pads)."""
+    t, k = word.shape[0], n_wk.shape[1]
+    assert t % bt == 0 and k % bk == 0, (t, k, bt, bk)
+    assert n_kd.shape[1] == k, (n_wk.shape, n_kd.shape)
+    grid = (t // bt, bt, k // bk)
+    kernel = functools.partial(
+        _fused_sample_kernel, beta=beta, w_beta=w_beta, bt=bt, bk=bk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bk), lambda i, t, j, s, w, d: (w[i * bt + t], j)),
+                pl.BlockSpec((1, bk), lambda i, t, j, s, w, d: (d[i * bt + t], j)),
+                pl.BlockSpec((bt, 1), lambda i, t, j, s, w, d: (i, 0)),
+                pl.BlockSpec((1, bk), lambda i, t, j, s, w, d: (0, j)),
+                pl.BlockSpec((1, bk), lambda i, t, j, s, w, d: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bt, 1), lambda i, t, j, s, w, d: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.int32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, 1), jnp.int32),
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+    )(
+        jnp.asarray([seed], jnp.int32),
+        word.astype(jnp.int32),
+        doc.astype(jnp.int32),
+        n_wk,
+        n_kd,
+        z_old[:, None],
+        alpha_k[None, :].astype(jnp.float32),
+        n_k[None, :].astype(jnp.float32),
+    )
+    return out[:, 0]
+
+
+def _fused_infer_kernel(
+    # scalar prefetch
+    wids_ref,  # (T,) int32 — per-token word row in the frozen N_wk
+    dids_ref,  # (T,) int32 — per-token slot row in the slot-batch N_kd
+    # inputs
+    nwk_ref,  # (1, bk) int32 — frozen word row tile
+    nkd_ref,  # (1, bk) int32 — slot doc row tile
+    zold_ref,  # (bt, 1) int32 — previous assignment (doc-side ¬t)
+    seed_ref,  # (bt, 1) int32 — per-token counter-based seeds
+    alpha_ref,  # (1, bk) f32 — alpha_k
+    nk_ref,  # (1, bk) f32 — frozen N_k
+    # output
+    out_ref,  # (bt, 1) int32
+    # scratch
+    m_ref,  # (1, 1) f32
+    a_ref,  # (1, 1) i32
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int,
+    bk: int,
+):
+    """Frozen-model serving variant: doc-side-only exclusion, per-token
+    seeds with (seed, 0, topic) noise coordinates — the exact contract of
+    ``_zen_infer_kernel``, minus its gathered-row inputs."""
+    t = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[0, 0] = -jnp.inf
+        a_ref[0, 0] = 0
+
+    cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+
+    self_hit = (cols == zold_ref[t, 0]).astype(jnp.float32)
+    nw = nwk_ref[...].astype(jnp.float32)
+    nd = nkd_ref[...].astype(jnp.float32) - self_hit
+    alpha_k = alpha_ref[...]
+
+    # frozen-phi conditional: (N_k|d^(¬t) + alpha_k)(N_w|k + beta)/(N_k + Wβ)
+    p = (nd + alpha_k) * (nw + beta) / (nk_ref[...] + w_beta)
+
+    g = gumbel_noise(seed_ref[t, 0], jnp.uint32(0), cols)
+    score = jnp.log(jnp.maximum(p, 1e-30)) + g
+
+    tile_max = jnp.max(score)
+    tile_arg = jnp.argmax(score[0]).astype(jnp.int32) + j * bk
+
+    better = tile_max > m_ref[0, 0]
+    a_ref[0, 0] = jnp.where(better, tile_arg, a_ref[0, 0])
+    m_ref[0, 0] = jnp.where(better, tile_max, m_ref[0, 0])
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _done():
+        out_ref[t, 0] = a_ref[0, 0]
+
+
+def zen_fused_infer_sample_pallas(
+    n_wk: jax.Array,  # (W, K) int32 frozen word-topic matrix
+    n_kd: jax.Array,  # (B, K) int32 per-slot doc-topic counts
+    word: jax.Array,  # (T,) int32 row ids into n_wk
+    slot: jax.Array,  # (T,) int32 row ids into n_kd
+    z_old: jax.Array,  # (T,) int32
+    seeds: jax.Array,  # (T,) int32 per-token counter-based seeds
+    alpha_k: jax.Array,  # (K,) f32
+    n_k: jax.Array,  # (K,) f32/int32 frozen
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Frozen-model Gumbel-max sample with in-register row gather.
+    T % bt == 0 and K % bk == 0 required (``ops.zen_fused_infer_sample``
+    pads)."""
+    t, k = word.shape[0], n_wk.shape[1]
+    assert t % bt == 0 and k % bk == 0, (t, k, bt, bk)
+    assert n_kd.shape[1] == k, (n_wk.shape, n_kd.shape)
+    grid = (t // bt, bt, k // bk)
+    kernel = functools.partial(
+        _fused_infer_kernel, beta=beta, w_beta=w_beta, bt=bt, bk=bk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bk), lambda i, t, j, w, d: (w[i * bt + t], j)),
+                pl.BlockSpec((1, bk), lambda i, t, j, w, d: (d[i * bt + t], j)),
+                pl.BlockSpec((bt, 1), lambda i, t, j, w, d: (i, 0)),
+                pl.BlockSpec((bt, 1), lambda i, t, j, w, d: (i, 0)),
+                pl.BlockSpec((1, bk), lambda i, t, j, w, d: (0, j)),
+                pl.BlockSpec((1, bk), lambda i, t, j, w, d: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bt, 1), lambda i, t, j, w, d: (i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.int32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, 1), jnp.int32),
+        interpret=interpret,
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+    )(
+        word.astype(jnp.int32),
+        slot.astype(jnp.int32),
+        n_wk,
+        n_kd,
+        z_old[:, None],
+        seeds[:, None],
+        alpha_k[None, :].astype(jnp.float32),
+        n_k[None, :].astype(jnp.float32),
+    )
+    return out[:, 0]

@@ -10,11 +10,21 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.cdf_search import cdf_row_search_pallas
+from repro.kernels.fused_gather import (
+    zen_fused_infer_sample_pallas,
+    zen_fused_sample_pallas,
+)
+from repro.kernels.sparse_row import sparse_row_sample_pallas
 from repro.kernels.topic_histogram import topic_histogram_pallas
 from repro.kernels.zen_sampler import (
     zen_infer_sample_pallas,
     zen_sample_pallas,
 )
+
+# Whole-row sparse kernel VMEM budget: bt shrinks until a (bt, J) f32 tile
+# plus its int32 twin fit comfortably (2 * 4B * 2^18 = 2 MiB of VMEM).
+_SPARSE_ROW_BUDGET = 1 << 18
 
 
 def _on_cpu() -> bool:
@@ -109,6 +119,182 @@ def zen_infer_sample(
     out = zen_infer_sample_pallas(
         nwk_p, nkd_p, z_p, s_p, a_p, nk_p,
         beta=beta, w_beta=w_beta, bt=bt_eff, bk=bk, interpret=interpret,
+    )
+    return out[:t]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beta", "w_beta", "bt", "bk", "interpret"),
+)
+def zen_fused_sample(
+    n_wk: jax.Array,
+    n_kd: jax.Array,
+    word: jax.Array,
+    doc: jax.Array,
+    z_old: jax.Array,
+    alpha_k: jax.Array,
+    n_k: jax.Array,
+    seed: jax.Array,
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather+sample (see fused_gather.py): ``zen_sample`` without
+    the ``(T, K)`` gathered-row HBM intermediate — the per-token word/doc
+    ids are scalar-prefetched and the count rows are tiled straight out of
+    the resident matrices. Bit-identical to
+    ``zen_sample(n_wk[word], n_kd[doc], ...)`` for real tokens.
+
+    Pads T to bt (row-0 tokens, sliced off) and K to bk on the resident
+    matrices; K padding gets alpha_k = 0 / counts 0 / n_k = 1e9 so p == 0
+    there and a padded topic can never win the argmax.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    t = word.shape[0]
+    bt_eff = min(bt, max(8, t))
+    nwk_p = _pad_to(n_wk.astype(jnp.int32), 1, bk)
+    nkd_p = _pad_to(n_kd.astype(jnp.int32), 1, bk)
+    w_p = _pad_to(word, 0, bt_eff)
+    d_p = _pad_to(doc, 0, bt_eff)
+    z_p = _pad_to(z_old, 0, bt_eff)
+    a_p = _pad_to(alpha_k.astype(jnp.float32), 0, bk, value=0.0)
+    nk_p = _pad_to(n_k.astype(jnp.float32), 0, bk, value=1e9)
+    out = zen_fused_sample_pallas(
+        nwk_p, nkd_p, w_p, d_p, z_p, a_p, nk_p, seed,
+        beta=beta, w_beta=w_beta, bt=bt_eff, bk=bk, interpret=interpret,
+    )
+    return out[:t]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beta", "w_beta", "bt", "bk", "interpret"),
+)
+def zen_fused_infer_sample(
+    n_wk: jax.Array,
+    n_kd: jax.Array,
+    word: jax.Array,
+    slot: jax.Array,
+    z_old: jax.Array,
+    seeds: jax.Array,
+    alpha_k: jax.Array,
+    n_k: jax.Array,
+    *,
+    beta: float,
+    w_beta: float,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather + frozen-model serving sample: ``zen_infer_sample``
+    without the gathered-row intermediates. Bit-identical to
+    ``zen_infer_sample(n_wk[word], n_kd[slot], ...)`` for real tokens.
+
+    Padding contract matches ``zen_infer_sample``: T pads to bt with
+    row-0/seed-0 tokens (sliced off), K pads to bk with alpha_k = 0 /
+    counts 0 / n_k = 1e9.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    t = word.shape[0]
+    bt_eff = min(bt, max(8, t))
+    nwk_p = _pad_to(n_wk.astype(jnp.int32), 1, bk)
+    nkd_p = _pad_to(n_kd.astype(jnp.int32), 1, bk)
+    w_p = _pad_to(word, 0, bt_eff)
+    s_p = _pad_to(slot, 0, bt_eff)
+    z_p = _pad_to(z_old, 0, bt_eff)
+    seeds_p = _pad_to(seeds, 0, bt_eff)
+    a_p = _pad_to(alpha_k.astype(jnp.float32), 0, bk, value=0.0)
+    nk_p = _pad_to(n_k.astype(jnp.float32), 0, bk, value=1e9)
+    out = zen_fused_infer_sample_pallas(
+        nwk_p, nkd_p, w_p, s_p, z_p, seeds_p, a_p, nk_p,
+        beta=beta, w_beta=w_beta, bt=bt_eff, bk=bk, interpret=interpret,
+    )
+    return out[:t]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bt", "bk", "interpret"),
+)
+def cdf_row_search(
+    counts: jax.Array,
+    rows: jax.Array,
+    term: jax.Array,
+    targets: jax.Array,
+    *,
+    bt: int = 256,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather + CDF lower-bound search (see cdf_search.py): the
+    index of ``targets[t]`` in ``cumsum(counts[rows[t]] * term)``, clamped
+    to K-1, without materializing the float CDF matrix or the gathered
+    rows. Bit-identical to ``ref.cdf_row_search_ref`` at the same bk.
+
+    Pads T to bt (row-0 tokens, sliced off) and K to bk with term = 0, so
+    padded topics add no mass; the in-kernel clamp keeps any counts past
+    K-1 from escaping.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    t = rows.shape[0]
+    k = counts.shape[1]
+    bt_eff = min(bt, max(8, t))
+    counts_p = _pad_to(counts.astype(jnp.int32), 1, bk)
+    rows_p = _pad_to(rows, 0, bt_eff)
+    term_p = _pad_to(term.astype(jnp.float32), 0, bk, value=0.0)
+    tgt_p = _pad_to(targets.astype(jnp.float32), 0, bt_eff)
+    out = cdf_row_search_pallas(
+        counts_p, rows_p, term_p, tgt_p,
+        k_real=k, bt=bt_eff, bk=bk, interpret=interpret,
+    )
+    return out[:t]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bt", "bs", "interpret"),
+)
+def sparse_row_sample(
+    vals: jax.Array,
+    topics: jax.Array,
+    targets: jax.Array,
+    *,
+    bt: int = 256,
+    bs: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Whole-row sparse CDF inversion (see sparse_row.py): the topic id at
+    the lower-bound position of ``targets[t]`` in ``cumsum(vals[t])``,
+    clamped to the last real lane. Bit-identical to
+    ``ref.sparse_row_sample_ref``.
+
+    Pads the lane dim to a multiple of bs with weight-0 lanes (inert: they
+    add no mass and the clamp can never land on them) and T to the
+    effective bt; bt halves while a (bt, J) tile would overflow the VMEM
+    row budget.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    t, j = vals.shape
+    vals_p = _pad_to(vals.astype(jnp.float32), 1, bs)
+    topics_p = _pad_to(topics.astype(jnp.int32), 1, bs)
+    jp = vals_p.shape[1]
+    bt_eff = min(bt, max(8, t))
+    while bt_eff > 8 and bt_eff * jp > _SPARSE_ROW_BUDGET:
+        bt_eff = max(8, bt_eff // 2)
+    vals_p = _pad_to(vals_p, 0, bt_eff)
+    topics_p = _pad_to(topics_p, 0, bt_eff)
+    tgt_p = _pad_to(targets.astype(jnp.float32), 0, bt_eff)
+    out = sparse_row_sample_pallas(
+        vals_p, topics_p, tgt_p,
+        j_real=j, bt=bt_eff, interpret=interpret,
     )
     return out[:t]
 

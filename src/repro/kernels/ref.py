@@ -77,6 +77,99 @@ def zen_infer_sample_ref(
     return jnp.argmax(score, axis=-1).astype(jnp.int32)
 
 
+def zen_fused_sample_ref(
+    n_wk: jax.Array,
+    n_kd: jax.Array,
+    word: jax.Array,
+    doc: jax.Array,
+    z_old: jax.Array,
+    alpha_k: jax.Array,
+    n_k: jax.Array,
+    seed: jax.Array,
+    *,
+    beta: float,
+    w_beta: float,
+) -> jax.Array:
+    """Bit-exact oracle of ``ops.zen_fused_sample``: gather the rows, then
+    run the v1 oracle — the fused kernel's whole claim is that skipping the
+    materialized gather changes nothing."""
+    return zen_sample_ref(
+        n_wk[word], n_kd[doc], z_old, alpha_k, n_k, seed,
+        beta=beta, w_beta=w_beta,
+    )
+
+
+def zen_fused_infer_sample_ref(
+    n_wk: jax.Array,
+    n_kd: jax.Array,
+    word: jax.Array,
+    slot: jax.Array,
+    z_old: jax.Array,
+    seeds: jax.Array,
+    alpha_k: jax.Array,
+    n_k: jax.Array,
+    *,
+    beta: float,
+    w_beta: float,
+) -> jax.Array:
+    """Bit-exact oracle of ``ops.zen_fused_infer_sample`` (gather + v1
+    serving oracle)."""
+    return zen_infer_sample_ref(
+        n_wk[word], n_kd[slot], z_old, seeds, alpha_k, n_k,
+        beta=beta, w_beta=w_beta,
+    )
+
+
+def cdf_row_search_ref(
+    counts: jax.Array,
+    rows: jax.Array,
+    term: jax.Array,
+    targets: jax.Array,
+    *,
+    bk: int = 512,
+) -> jax.Array:
+    """Tile-accurate oracle of ``ops.cdf_row_search``: same K-tile walk,
+    same carry adds, same op order — so float round-off matches the kernel
+    bit for bit at the same ``bk``. (A whole-row ``searchsorted`` would be
+    the *mathematical* spec but could disagree on round-off at tile
+    boundaries; the tiled walk IS the kernel's contract.)"""
+    t = rows.shape[0]
+    k = counts.shape[1]
+    pad = (-k) % bk
+    vals = counts[rows].astype(jnp.float32) * term.astype(jnp.float32)[None, :]
+    if pad:
+        vals = jnp.pad(vals, ((0, 0), (0, pad)))
+    tgt = targets.astype(jnp.float32)[:, None]
+    acc = jnp.zeros((t,), jnp.float32)
+    cnt = jnp.zeros((t,), jnp.int32)
+    for j in range(0, k + pad, bk):
+        tile = vals[:, j:j + bk]
+        cdf = acc[:, None] + jnp.cumsum(tile, axis=1)
+        cnt = cnt + jnp.sum((cdf < tgt).astype(jnp.int32), axis=1)
+        acc = acc + jnp.sum(tile, axis=1)
+    return jnp.minimum(cnt, k - 1)
+
+
+def sparse_row_sample_ref(
+    vals: jax.Array,
+    topics: jax.Array,
+    targets: jax.Array,
+) -> jax.Array:
+    """Bit-exact oracle of ``ops.sparse_row_sample``. Lane padding in the
+    wrapper is provably inert (weight-0 lanes leave every real prefix sum
+    bitwise unchanged and the clamp stops at the last real lane), so the
+    oracle needs no padding replication."""
+    j = vals.shape[1]
+    vals_f = vals.astype(jnp.float32)
+    cdf = jnp.cumsum(vals_f, axis=1)
+    tgt = targets.astype(jnp.float32)[:, None]
+    cnt = jnp.sum((cdf < tgt).astype(jnp.int32), axis=1)
+    pos = jnp.minimum(cnt, j - 1)
+    return jnp.take_along_axis(
+        topics.astype(jnp.int32), pos[:, None], axis=1
+    )[:, 0]
+
+
 def topic_histogram_ref(
     rows: jax.Array,
     z_old: jax.Array,

@@ -170,10 +170,12 @@ class LDAServeConfig:
     rtlda_sweeps: int = 2  # latency mode: fused deterministic passes
     tick_period: float = 0.0  # background ticker cadence, s (0 = 1 ms)
     max_slot_wait: int = 0  # ticks before bucket spill (0 = never spill)
+    kernels: str = "auto"  # Pallas kernel dispatch: auto | on | off
 
     def knobs(self) -> SamplerKnobs:
         return SamplerKnobs(
-            sampling_method=self.sampling_method, max_kd=self.max_kd
+            sampling_method=self.sampling_method, max_kd=self.max_kd,
+            kernels=self.kernels,
         )
 
 

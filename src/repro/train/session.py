@@ -84,7 +84,10 @@ class RunConfig:
     * ``num_mh`` — LightLDA cycle-MH proposals per token.
     * ``token_chunk`` — bound peak memory by sweeping tokens in chunks
       of this size; 0 = whole sweep at once.
-    * ``bt``/``bk`` — zen_pallas token/topic kernel tiles.
+    * ``bt``/``bk``/``bs`` — Pallas kernel tiles: token rows, topic
+      lanes, and the sparse-row lane-alignment tile (kernel suite v2).
+    * ``kernels`` — Pallas kernel dispatch policy, ``"auto"`` (kernels
+      on TPU, legacy XLA elsewhere) / ``"on"`` / ``"off"``.
     * ``init``/``sparse_init_degree`` — topic init strategy (paper §5.1).
     * ``mesh_shape``/``delta_dtype``/``kd_dtype`` — execution plan and
       mesh payload widths.
@@ -113,8 +116,10 @@ class RunConfig:
     max_kd: int = 0  # padded-sparse doc-row width (0 = auto)
     num_mh: int = 8  # LightLDA cycle-MH steps (paper uses 8)
     token_chunk: int = 0  # 0 = whole sweep at once (memory knob)
-    bt: int = 256  # zen_pallas token tile
-    bk: int = 512  # zen_pallas topic tile
+    bt: int = 256  # Pallas token tile
+    bk: int = 512  # Pallas topic tile
+    bs: int = 128  # sparse-row lane tile (kernel suite v2)
+    kernels: str = "auto"  # Pallas kernel dispatch: auto | on | off
     # -- initialization ---------------------------------------------------
     init: str = "random"  # random | sparse_word | sparse_doc
     sparse_init_degree: float = 0.1
@@ -410,7 +415,7 @@ class MeshPlan(ExecutionPlan):
             rebuild_every=cfg.rebuild_every,
             exclusion_start=0,  # enabled by the schedule action
             token_chunk=cfg.token_chunk, kd_dtype=cfg.kd_dtype,
-            bt=cfg.bt, bk=cfg.bk,
+            bt=cfg.bt, bk=cfg.bk, bs=cfg.bs, kernels=cfg.kernels,
         )
         self._step_fn = None
         self._data = None

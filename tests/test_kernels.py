@@ -5,9 +5,22 @@ import numpy as np
 import pytest
 from helpers import given, settings, st  # hypothesis, or the fallback shim
 
-from repro.kernels.ops import topic_histogram, zen_infer_sample, zen_sample
+from repro.kernels.ops import (
+    _pad_to,
+    cdf_row_search,
+    sparse_row_sample,
+    topic_histogram,
+    zen_fused_infer_sample,
+    zen_fused_sample,
+    zen_infer_sample,
+    zen_sample,
+)
 from repro.kernels.ref import (
+    cdf_row_search_ref,
+    sparse_row_sample_ref,
     topic_histogram_ref,
+    zen_fused_infer_sample_ref,
+    zen_fused_sample_ref,
     zen_infer_sample_ref,
     zen_probs_ref,
     zen_sample_ref,
@@ -157,3 +170,230 @@ def test_topic_histogram_property_sweep(t, k, r, seed):
     # row sums are zero: a move is (-1, +1) within the same row
     np.testing.assert_array_equal(np.asarray(jnp.sum(out, 1)),
                                   np.zeros(r, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# kernel suite v2: fused gather+sample, CDF search, padded-sparse rows
+# ---------------------------------------------------------------------------
+
+def _fused_inputs(rng, t, k, w, d):
+    n_wk = jnp.asarray(rng.integers(0, 50, (w, k)), jnp.int32)
+    n_kd = jnp.asarray(rng.integers(0, 20, (d, k)), jnp.int32)
+    word = jnp.asarray(rng.integers(0, w, (t,)), jnp.int32)
+    doc = jnp.asarray(rng.integers(0, d, (t,)), jnp.int32)
+    z = jnp.asarray(rng.integers(0, k, (t,)), jnp.int32)
+    nk = jnp.asarray(np.asarray(n_wk).sum(0) + 1, jnp.float32)
+    ak = jnp.asarray(rng.random(k) + 0.01, jnp.float32)
+    return n_wk, n_kd, word, doc, z, nk, ak
+
+
+@pytest.mark.parametrize(
+    "t,k,w,d,bt,bk",
+    [
+        (64, 128, 40, 30, 64, 128),
+        (9, 33, 40, 30, 8, 128),  # unaligned -> padding path
+        (300, 700, 100, 50, 64, 128),
+        (1, 5, 7, 3, 8, 128),
+    ],
+)
+def test_zen_fused_sample_bit_exact(t, k, w, d, bt, bk, rng):
+    """Fused gather+sample == the gather-then-oracle ref AND the v1
+    gather-then-kernel wrapper, bit for bit: skipping the materialized
+    (T, K) gather changes nothing."""
+    n_wk, n_kd, word, doc, z, nk, ak = _fused_inputs(rng, t, k, w, d)
+    out = zen_fused_sample(n_wk, n_kd, word, doc, z, ak, nk, jnp.int32(7),
+                           beta=0.01, w_beta=5.0, bt=bt, bk=bk)
+    ref = zen_fused_sample_ref(n_wk, n_kd, word, doc, z, ak, nk, jnp.int32(7),
+                               beta=0.01, w_beta=5.0)
+    legacy = zen_sample(n_wk[word], n_kd[doc], z, ak, nk, jnp.int32(7),
+                        beta=0.01, w_beta=5.0, bt=bt, bk=bk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(legacy))
+
+
+@pytest.mark.parametrize(
+    "t,k,w,d,bt,bk",
+    [
+        (64, 128, 40, 30, 64, 128),
+        (9, 33, 40, 30, 8, 128),  # unaligned -> padding path
+        (300, 700, 100, 50, 64, 128),
+        (1, 5, 7, 3, 8, 128),
+    ],
+)
+def test_zen_fused_infer_sample_bit_exact(t, k, w, d, bt, bk, rng):
+    """Fused serving variant == gather-then-oracle AND the v1 gathered
+    wrapper (doc-side-only exclusion, per-token seeds)."""
+    n_wk, n_kd, word, slot, z, nk, ak = _fused_inputs(rng, t, k, w, d)
+    seeds = jnp.asarray(rng.integers(0, 2 ** 31 - 1, (t,)), jnp.int32)
+    out = zen_fused_infer_sample(n_wk, n_kd, word, slot, z, seeds, ak, nk,
+                                 beta=0.01, w_beta=5.0, bt=bt, bk=bk)
+    ref = zen_fused_infer_sample_ref(n_wk, n_kd, word, slot, z, seeds, ak, nk,
+                                     beta=0.01, w_beta=5.0)
+    legacy = zen_infer_sample(n_wk[word], n_kd[slot], z, seeds, ak, nk,
+                              beta=0.01, w_beta=5.0, bt=bt, bk=bk)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(legacy))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 60), st.integers(2, 150), st.integers(2, 40),
+       st.integers(1, 20), st.integers(0, 2 ** 20))
+def test_zen_fused_sample_property_sweep(t, k, w, d, seed):
+    rng = np.random.default_rng(seed)
+    n_wk, n_kd, word, doc, z, nk, ak = _fused_inputs(rng, t, k, w, d)
+    s = jnp.int32(seed % 89)
+    out = zen_fused_sample(n_wk, n_kd, word, doc, z, ak, nk, s,
+                           beta=0.05, w_beta=2.0, bt=8, bk=128)
+    ref = zen_fused_sample_ref(n_wk, n_kd, word, doc, z, ak, nk, s,
+                               beta=0.05, w_beta=2.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize(
+    "t,k,w,bt,bk",
+    [
+        (64, 128, 40, 64, 128),
+        (9, 33, 12, 8, 128),  # unaligned -> padding path
+        (300, 700, 80, 64, 128),
+        (128, 256, 64, 64, 256),
+        (1, 5, 3, 8, 128),
+    ],
+)
+def test_cdf_row_search_bit_exact(t, k, w, bt, bk, rng):
+    """Fused CDF lower-bound search == the tile-accurate ref at the same
+    bk, including targets past the total row mass (clamp to K-1)."""
+    counts = jnp.asarray(rng.integers(0, 50, (w, k)), jnp.int32)
+    rows = jnp.asarray(rng.integers(0, w, (t,)), jnp.int32)
+    term = jnp.asarray(rng.random(k) + 1e-3, jnp.float32)
+    mass = jnp.sum(counts[rows].astype(jnp.float32) * term[None, :], 1)
+    # * 1.1: ~10% of targets overshoot the total mass -> clamp path
+    targets = jnp.asarray(rng.random(t), jnp.float32) * mass * 1.1
+    out = cdf_row_search(counts, rows, term, targets, bt=bt, bk=bk)
+    ref = cdf_row_search_ref(counts, rows, term, targets, bk=bk)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert (np.asarray(out) >= 0).all() and (np.asarray(out) < k).all()
+
+
+@pytest.mark.parametrize(
+    "t,j,bt,bs",
+    [
+        (64, 32, 64, 128),
+        (9, 5, 8, 128),  # unaligned -> padding path
+        (300, 200, 64, 128),
+        (40, 300, 8, 256),
+        (1, 1, 8, 128),
+    ],
+)
+def test_sparse_row_sample_bit_exact(t, j, bt, bs, rng):
+    """Padded-sparse row inversion == its oracle, bit for bit, including
+    zero-weight lanes and targets past the row mass."""
+    vals = jnp.asarray(
+        rng.random((t, j)) * (rng.random((t, j)) < 0.6), jnp.float32
+    )
+    topics = jnp.asarray(rng.integers(0, 50, (t, j)), jnp.int32)
+    targets = jnp.asarray(rng.random(t), jnp.float32) * \
+        jnp.sum(vals, 1) * 1.05
+    out = sparse_row_sample(vals, topics, targets, bt=bt, bs=bs)
+    ref = sparse_row_sample_ref(vals, topics, targets)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 60), st.integers(0, 2 ** 20))
+def test_sparse_row_sample_property_sweep(t, j, seed):
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(
+        rng.random((t, j)) * (rng.random((t, j)) < 0.5), jnp.float32
+    )
+    topics = jnp.asarray(rng.integers(0, 30, (t, j)), jnp.int32)
+    targets = jnp.asarray(rng.random(t), jnp.float32) * jnp.sum(vals, 1)
+    out = sparse_row_sample(vals, topics, targets, bt=8, bs=128)
+    ref = sparse_row_sample_ref(vals, topics, targets)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# padding contracts: _pad_to invariants + tile-choice inertness
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1), st.integers(1, 40), st.integers(1, 40),
+       st.integers(1, 13), st.integers(-5, 5), st.integers(0, 2 ** 20))
+def test_pad_to_properties(axis, n, m, multiple, value, seed):
+    """ops._pad_to: minimal padding to the multiple, original values are an
+    untouched prefix, every padded entry equals the fill value."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-100, 100, (n, m)), jnp.int32)
+    y = _pad_to(x, axis, multiple, value)
+    assert y.shape[axis] % multiple == 0
+    assert 0 <= y.shape[axis] - x.shape[axis] < multiple
+    assert y.shape[1 - axis] == x.shape[1 - axis]
+    sl = [slice(None)] * 2
+    sl[axis] = slice(0, x.shape[axis])
+    np.testing.assert_array_equal(np.asarray(y[tuple(sl)]), np.asarray(x))
+    sl[axis] = slice(x.shape[axis], None)
+    pad = np.asarray(y[tuple(sl)])
+    assert pad.size == 0 or (pad == value).all()
+    if x.shape[axis] % multiple == 0:
+        assert y is x  # no-copy fast path
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 50), st.integers(2, 80), st.integers(0, 2 ** 20))
+def test_fused_sample_inert_across_tile_grid(t, k, seed):
+    """Tile choice only changes padding amounts, never the samples: the
+    fused training kernel is bit-stable across the legal (bt, bk) grid
+    (exact f32 compare in the running-max carry, padded topics p == 0)."""
+    rng = np.random.default_rng(seed)
+    n_wk, n_kd, word, doc, z, nk, ak = _fused_inputs(rng, t, k, 20, 10)
+    s = jnp.int32(seed % 101)
+    outs = [
+        np.asarray(zen_fused_sample(
+            n_wk, n_kd, word, doc, z, ak, nk, s,
+            beta=0.03, w_beta=3.0, bt=bt, bk=bk,
+        ))
+        for bt in (8, 64, 256) for bk in (128, 256)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 50), st.integers(2, 80), st.integers(0, 2 ** 20))
+def test_cdf_search_inert_across_bt(t, k, seed):
+    """Token tiling is inert for the CDF search (rows are independent);
+    only bk participates in the float carry, so bt sweeps at fixed bk must
+    agree bit for bit."""
+    rng = np.random.default_rng(seed)
+    counts = jnp.asarray(rng.integers(0, 40, (16, k)), jnp.int32)
+    rows = jnp.asarray(rng.integers(0, 16, (t,)), jnp.int32)
+    term = jnp.asarray(rng.random(k) + 1e-3, jnp.float32)
+    mass = jnp.sum(counts[rows].astype(jnp.float32) * term[None, :], 1)
+    targets = jnp.asarray(rng.random(t), jnp.float32) * mass * 1.1
+    outs = [
+        np.asarray(cdf_row_search(counts, rows, term, targets, bt=bt, bk=128))
+        for bt in (8, 16, 64, 256)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(1, 50), st.integers(1, 60), st.integers(0, 2 ** 20))
+def test_sparse_row_inert_across_tile_grid(t, j, seed):
+    """The sparse-row kernel is bit-stable across (bt, bs): lane padding
+    adds weight-0 lanes the clamp can never land on, token padding is
+    sliced off."""
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(
+        rng.random((t, j)) * (rng.random((t, j)) < 0.5), jnp.float32
+    )
+    topics = jnp.asarray(rng.integers(0, 30, (t, j)), jnp.int32)
+    targets = jnp.asarray(rng.random(t), jnp.float32) * jnp.sum(vals, 1)
+    outs = [
+        np.asarray(sparse_row_sample(vals, topics, targets, bt=bt, bs=bs))
+        for bt in (8, 64, 256) for bs in (128, 256)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
