@@ -1,0 +1,101 @@
+"""Streaming vs batch training: throughput and resident doc-side state.
+
+The streaming subsystem's pitch (DESIGN.md §7) is two numbers per
+window: docs/sec through the windowed plan vs the batch plan on the same
+corpus, and the resident doc-side count state — ``window_docs * K * 4``
+bytes for the stream vs ``D * K * 4`` for batch, the O(window) vs
+O(corpus) memory claim from *Towards Big Topic Modeling*. Emits CSV rows
+through the run.py contract plus ``BENCH_streaming.json`` for CI.
+
+    PYTHONPATH=src:. python benchmarks/run.py --only streaming
+
+Scale knobs (env, for CI-sized runs): BENCH_STREAM_D (docs),
+BENCH_STREAM_W (vocab), BENCH_STREAM_K (topics), BENCH_STREAM_WIN
+(window_docs), BENCH_STREAM_ITERS (epochs / batch iterations).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import row
+
+NUM_DOCS = int(os.environ.get("BENCH_STREAM_D", 512))
+NUM_WORDS = int(os.environ.get("BENCH_STREAM_W", 1000))
+NUM_TOPICS = int(os.environ.get("BENCH_STREAM_K", 32))
+WINDOW_DOCS = int(os.environ.get("BENCH_STREAM_WIN", 64))
+ITERS = int(os.environ.get("BENCH_STREAM_ITERS", 3))
+
+
+def main() -> None:
+    import jax
+
+    from repro.core.types import LDAHyperParams
+    from repro.data import synthetic_corpus
+    from repro.data.stream import ReplaySource
+    from repro.train.online import StreamingSession
+    from repro.train.session import RunConfig, TrainSession
+
+    corpus = synthetic_corpus(0, num_docs=NUM_DOCS, num_words=NUM_WORDS,
+                              avg_doc_len=60, zipf_a=1.2)
+    hyper = LDAHyperParams(num_topics=NUM_TOPICS)
+    records = []
+
+    # -- batch reference: one full-corpus sweep per iteration ------------
+    batch = TrainSession(corpus, hyper,
+                         RunConfig(algorithm="zen", num_iterations=ITERS))
+    state = batch.init(jax.random.key(0))
+    state = batch.step(state)  # compile
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        state = batch.step(state)
+    jax.block_until_ready(state.n_wk)
+    dt = time.perf_counter() - t0
+    batch_docs_sec = NUM_DOCS * ITERS / dt
+    batch_kd_bytes = NUM_DOCS * NUM_TOPICS * 4
+    row("stream/batch_ref", dt / ITERS * 1e6,
+        f"docs_per_sec={batch_docs_sec:.0f} "
+        f"resident_kd_bytes={batch_kd_bytes}")
+    records.append({
+        "name": "batch_ref", "docs_per_sec": batch_docs_sec,
+        "resident_kd_bytes": batch_kd_bytes,
+        "docs": NUM_DOCS, "topics": NUM_TOPICS, "iters": ITERS,
+    })
+
+    # -- streaming: same corpus through the windowed rotation ------------
+    src = ReplaySource(corpus, window_docs=WINDOW_DOCS, epochs=ITERS + 1)
+    cfg = RunConfig(algorithm="zen", num_iterations=0,
+                    window_docs=WINDOW_DOCS, window_sweeps=1)
+    sess = StreamingSession(src, hyper, cfg)
+    metrics = []
+    sess.run(jax.random.key(0), callback=lambda s, m: metrics.append(m))
+    # drop epoch 0: it pays compilation and cold model composition
+    warm = metrics[src.windows_per_epoch:]
+    docs = sum(m["docs"] for m in warm)
+    secs = sum(m["docs"] / m["docs_per_sec"] for m in warm)
+    stream_docs_sec = docs / secs
+    stream_kd_bytes = max(m["resident_kd_bytes"] for m in warm)
+    row("stream/windowed", secs / len(warm) * 1e6,
+        f"docs_per_sec={stream_docs_sec:.0f} "
+        f"resident_kd_bytes={stream_kd_bytes} "
+        f"window_docs={WINDOW_DOCS}")
+    records.append({
+        "name": "windowed", "docs_per_sec": stream_docs_sec,
+        "resident_kd_bytes": stream_kd_bytes,
+        "window_docs": WINDOW_DOCS, "windows": len(metrics),
+        "final_window_perplexity": warm[-1]["perplexity"],
+    })
+
+    shrink = batch_kd_bytes / max(1, stream_kd_bytes)
+    row("stream/kd_state_shrink", 0.0,
+        f"batch_over_window={shrink:.1f}x")
+    records.append({"name": "kd_state_shrink", "batch_over_window": shrink})
+
+    with open("BENCH_streaming.json", "w") as f:
+        json.dump(records, f, indent=2)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

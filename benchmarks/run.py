@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
   infer    serving throughput + latency/throughput frontier (bench_infer)
   kernels  kernel suite v2 vs pre-fusion baselines; writes
            BENCH_kernels.json                            (bench_kernels)
+  streaming windowed online vs batch: docs/sec + resident doc-side
+           state; writes BENCH_streaming.json            (bench_streaming)
 """
 import argparse
 
@@ -40,6 +42,8 @@ def main() -> None:
                                     fromlist=["main"]).main(),
         "kernels": lambda: __import__("benchmarks.bench_kernels",
                                       fromlist=["main"]).main(),
+        "streaming": lambda: __import__("benchmarks.bench_streaming",
+                                        fromlist=["main"]).main(),
     }
     wanted = args.only.split(",") if args.only else list(sections)
     print("name,us_per_call,derived")

@@ -1,6 +1,15 @@
 from repro.data.corpus import (  # noqa: F401
     load_libsvm,
     save_libsvm,
+    skip_libsvm_docs,
     synthetic_corpus,
     synthetic_lda_corpus,
+)
+from repro.data.stream import (  # noqa: F401
+    CorpusSource,
+    DriftSource,
+    LibsvmStreamSource,
+    ReplaySource,
+    Window,
+    make_source,
 )

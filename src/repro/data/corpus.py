@@ -95,8 +95,23 @@ def save_libsvm(corpus: Corpus, path: str) -> None:
             )
 
 
-def load_libsvm(path_or_buf, num_words: Optional[int] = None) -> Corpus:
-    """Read libsvm lines into a token-level corpus (counts expanded)."""
+def load_libsvm(
+    path_or_buf,
+    num_words: Optional[int] = None,
+    max_docs: Optional[int] = None,
+) -> Corpus:
+    """Read libsvm lines into a token-level corpus (counts expanded).
+
+    ``path_or_buf`` may be a path or an already-open file handle. With
+    ``max_docs`` set, reading stops after that many documents and — when a
+    handle was passed — leaves the handle positioned at the next unread
+    line, so a caller can chunk one file into document windows without
+    re-reading it per window (``repro.data.stream.LibsvmStreamSource``).
+    Doc ids in the returned corpus are always 0-based and local to the
+    read, i.e. each window is a self-contained ``Corpus``; an exhausted
+    handle yields an empty corpus (``num_docs == 0``). The whole-file path
+    (``max_docs=None``) is unchanged.
+    """
     if isinstance(path_or_buf, (str, bytes)):
         f = open(path_or_buf)
     else:
@@ -115,6 +130,8 @@ def load_libsvm(path_or_buf, num_words: Optional[int] = None) -> Corpus:
             words_list.extend([w] * c)
             docs_list.extend([d] * c)
         d += 1
+        if max_docs is not None and d >= max_docs:
+            break
     if isinstance(path_or_buf, (str, bytes)):
         f.close()
     return Corpus(
@@ -123,3 +140,18 @@ def load_libsvm(path_or_buf, num_words: Optional[int] = None) -> Corpus:
         num_words=num_words or (max_w + 1),
         num_docs=d,
     )
+
+
+def skip_libsvm_docs(f, n: int) -> int:
+    """Advance an open libsvm handle past ``n`` documents (blank lines
+    don't count, matching ``load_libsvm``). Returns how many documents
+    were actually skipped (fewer at EOF) — the window cursor fast-forward
+    used when a stream resumes from a checkpoint."""
+    skipped = 0
+    while skipped < n:
+        line = f.readline()
+        if not line:
+            break
+        if line.strip():
+            skipped += 1
+    return skipped

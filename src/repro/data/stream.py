@@ -1,0 +1,315 @@
+"""Streaming corpus sources: document windows over a stable vocabulary.
+
+The paper's §3.1 document-window partitioning frames training as a
+rotation over doc slices: the word-topic model stays resident while the
+doc window (and its ``N_k|d`` block) rolls. This module is the ingestion
+side of that contract — a :class:`CorpusSource` yields :class:`Window`\\ s,
+each a self-contained :class:`~repro.core.types.Corpus` whose doc ids are
+local to the window (``[0, window.corpus.num_docs)``) and whose
+``num_words`` equals the source's global vocabulary. The *vocabulary
+contract* is what makes windows composable into one model: every window
+indexes the same ``(W, K)`` word-topic count matrix.
+
+Three implementations:
+
+* :class:`ReplaySource` — in-memory rotation over a materialized
+  ``Corpus``: the corpus is sliced into ``ceil(D / window_docs)`` doc
+  windows, iterated ``epochs`` times. Windows keep a stable ``uid``
+  across epochs, so the online trainer can retain their assignments and
+  a ``decay=0`` replay run is the windowed equivalent of batch training
+  (``repro.train.online``).
+* :class:`LibsvmStreamSource` — chunked tailing of a libsvm file through
+  one open handle (``load_libsvm(f, max_docs=...)``): each window reads
+  the next ``window_docs`` documents, nothing is re-read, nothing but
+  the current window is ever resident.
+* :class:`DriftSource` — a synthetic non-stationary stream for tests and
+  benchmarks: every window is generated from LDA topics that random-walk
+  between windows (``drift`` mixes fresh Dirichlet noise into phi), so a
+  model that never forgets goes stale measurably. Fully deterministic in
+  ``(seed, window index)`` — ``windows(start=k)`` replays the drift
+  chain silently up to ``k``, which is what makes mid-stream checkpoint
+  resume exact.
+
+``windows(start=k)`` is the resume contract all sources honor: the
+iterator yields windows ``k, k+1, ...`` identical to the tail of a
+``start=0`` iteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Corpus
+from repro.data.corpus import load_libsvm, skip_libsvm_docs
+
+
+@dataclasses.dataclass(frozen=True)
+class Window:
+    """One streamed document window.
+
+    ``corpus`` is self-contained: doc ids are ``[0, corpus.num_docs)``
+    and ``corpus.num_words`` is the source's global vocabulary.
+    ``index`` is the 0-based position in the stream (the resume cursor).
+    ``uid`` is the window's *identity*: a replaying source reuses the
+    uid when the same doc slice comes around again (how the online
+    trainer knows to reuse retained assignments instead of folding the
+    window's counts in twice). ``token_index``, when present, maps the
+    window's tokens back to edge indices of the source's original corpus
+    (``ReplaySource`` only — used to reassemble a full-corpus state).
+    """
+
+    corpus: Corpus
+    index: int
+    uid: str
+    token_index: Optional[np.ndarray] = None
+
+
+class CorpusSource:
+    """Protocol: iterate document windows under a stable vocabulary.
+
+    ``replays`` declares whether a uid can come around more than once
+    (only then is retaining per-window assignments worthwhile).
+    """
+
+    num_words: int
+    window_docs: int
+    replays: bool = False
+
+    def windows(self, start: int = 0) -> Iterator[Window]:
+        raise NotImplementedError
+
+
+class ReplaySource(CorpusSource):
+    """Rotate over an in-memory ``Corpus`` in doc windows.
+
+    The corpus is split into ``ceil(num_docs / window_docs)`` slices;
+    one epoch yields each slice once, in order, and the stream is
+    ``epochs`` epochs long. Slice ``s`` keeps uid ``w<s>`` in every
+    epoch.
+    """
+
+    replays = True
+
+    def __init__(self, corpus: Corpus, window_docs: int, epochs: int = 1):
+        if window_docs <= 0:
+            raise ValueError(f"window_docs must be > 0, got {window_docs}")
+        if epochs <= 0:
+            raise ValueError(f"epochs must be > 0, got {epochs}")
+        self.corpus = corpus
+        self.window_docs = int(window_docs)
+        self.epochs = int(epochs)
+        self.num_words = corpus.num_words
+        # doc-major token order, computed once; per-window token slices
+        # are contiguous ranges of this permutation
+        docs = np.asarray(corpus.doc)
+        self._order = np.argsort(docs, kind="stable")
+        self._docs = docs[self._order]
+        self._words = np.asarray(corpus.word)[self._order]
+        self._bounds = np.searchsorted(
+            self._docs, np.arange(corpus.num_docs + 1)
+        )
+        self.windows_per_epoch = -(-corpus.num_docs // self.window_docs)
+
+    @property
+    def num_windows(self) -> int:
+        return self.windows_per_epoch * self.epochs
+
+    def window_slice(self, slice_index: int) -> Window:
+        """The windowed ``Corpus`` for doc slice ``slice_index`` (epoch-
+        independent; ``windows()`` stamps the per-epoch stream index)."""
+        d0 = slice_index * self.window_docs
+        d1 = min(d0 + self.window_docs, self.corpus.num_docs)
+        t0, t1 = self._bounds[d0], self._bounds[d1]
+        cw = Corpus(
+            word=jnp.asarray(self._words[t0:t1]),
+            doc=jnp.asarray((self._docs[t0:t1] - d0).astype(np.int32)),
+            num_words=self.num_words,
+            num_docs=d1 - d0,
+        )
+        return Window(
+            corpus=cw, index=slice_index, uid=f"w{slice_index}",
+            token_index=self._order[t0:t1],
+        )
+
+    def windows(self, start: int = 0) -> Iterator[Window]:
+        for i in range(start, self.num_windows):
+            w = self.window_slice(i % self.windows_per_epoch)
+            yield dataclasses.replace(w, index=i)
+
+
+class LibsvmStreamSource(CorpusSource):
+    """Tail a libsvm file in document windows through one open handle.
+
+    Each window is the next ``window_docs`` documents
+    (``load_libsvm(f, num_words, max_docs=window_docs)``); the handle is
+    never rewound, so a window is read exactly once and only the current
+    window is resident. ``num_words`` is required — a chunked read cannot
+    infer the global vocabulary from one window (the stability
+    contract). ``windows(start=k)`` fast-forwards by skipping
+    ``k * window_docs`` documents without materializing them.
+    """
+
+    def __init__(self, path: str, window_docs: int, num_words: int):
+        if window_docs <= 0:
+            raise ValueError(f"window_docs must be > 0, got {window_docs}")
+        if num_words <= 0:
+            raise ValueError(
+                "LibsvmStreamSource needs the global vocabulary size "
+                f"(num_words > 0), got {num_words}"
+            )
+        self.path = path
+        self.window_docs = int(window_docs)
+        self.num_words = int(num_words)
+
+    def windows(self, start: int = 0) -> Iterator[Window]:
+        with open(self.path) as f:
+            if start:
+                skip_libsvm_docs(f, start * self.window_docs)
+            index = start
+            while True:
+                cw = load_libsvm(
+                    f, num_words=self.num_words, max_docs=self.window_docs
+                )
+                if cw.num_docs == 0:
+                    return
+                yield Window(corpus=cw, index=index, uid=f"w{index}")
+                index += 1
+
+
+class DriftSource(CorpusSource):
+    """Synthetic non-stationary stream: LDA windows whose topics drift.
+
+    Window ``i`` is generated from topic-word distributions
+    ``phi_i = normalize((1 - drift) * phi_{i-1} + drift * noise_i)``
+    (fresh Dirichlet noise per window), documents drawn per-window from
+    fresh Dirichlet thetas. Everything is seeded from
+    ``(seed, window index)``, and ``windows(start=k)`` recomputes the
+    phi chain ``0..k-1`` without emitting windows — deterministic
+    resume.
+    """
+
+    def __init__(
+        self,
+        seed: int,
+        window_docs: int,
+        num_windows: int,
+        num_words: int,
+        num_topics: int = 8,
+        avg_doc_len: int = 40,
+        drift: float = 0.25,
+        alpha: float = 0.1,
+        beta: float = 0.05,
+    ):
+        if window_docs <= 0:
+            raise ValueError(f"window_docs must be > 0, got {window_docs}")
+        if not 0.0 <= drift <= 1.0:
+            raise ValueError(f"drift must be in [0, 1], got {drift}")
+        self.seed = int(seed)
+        self.window_docs = int(window_docs)
+        self.num_windows = int(num_windows)
+        self.num_words = int(num_words)
+        self.num_topics = int(num_topics)
+        self.avg_doc_len = int(avg_doc_len)
+        self.drift = float(drift)
+        self.alpha = float(alpha)
+        self.beta = float(beta)
+
+    def _rng(self, index: int, stream: int) -> np.random.Generator:
+        return np.random.default_rng([self.seed, stream, index])
+
+    def _phi(self, index: int) -> np.ndarray:
+        """The drift chain up to window ``index`` ((K, W), rows sum 1)."""
+        phi = self._rng(0, 0).dirichlet(
+            np.full(self.num_words, self.beta), size=self.num_topics
+        )
+        for i in range(1, index + 1):
+            noise = self._rng(i, 0).dirichlet(
+                np.full(self.num_words, self.beta), size=self.num_topics
+            )
+            phi = (1.0 - self.drift) * phi + self.drift * noise
+            phi /= phi.sum(axis=1, keepdims=True)
+        return phi
+
+    def _window(self, index: int, phi: np.ndarray) -> Window:
+        rng = self._rng(index, 1)
+        theta = rng.dirichlet(
+            np.full(self.num_topics, self.alpha), size=self.window_docs
+        )
+        lengths = np.maximum(1, rng.poisson(self.avg_doc_len,
+                                            size=self.window_docs))
+        words_list, docs_list = [], []
+        for d in range(self.window_docs):
+            zs = rng.choice(self.num_topics, size=lengths[d], p=theta[d])
+            for z in np.unique(zs):
+                n = int((zs == z).sum())
+                words_list.append(rng.choice(self.num_words, size=n,
+                                             p=phi[z]))
+                docs_list.append(np.full(n, d, dtype=np.int32))
+        cw = Corpus(
+            word=jnp.asarray(np.concatenate(words_list).astype(np.int32)),
+            doc=jnp.asarray(np.concatenate(docs_list).astype(np.int32)),
+            num_words=self.num_words,
+            num_docs=self.window_docs,
+        )
+        return Window(corpus=cw, index=index, uid=f"w{index}")
+
+    def windows(self, start: int = 0) -> Iterator[Window]:
+        if start >= self.num_windows:
+            return
+        phi = self._phi(start)
+        for i in range(start, self.num_windows):
+            if i > start:
+                noise = self._rng(i, 0).dirichlet(
+                    np.full(self.num_words, self.beta), size=self.num_topics
+                )
+                phi = (1.0 - self.drift) * phi + self.drift * noise
+                phi /= phi.sum(axis=1, keepdims=True)
+            yield self._window(i, phi)
+
+
+def make_source(
+    spec: str,
+    window_docs: int,
+    *,
+    corpus: Optional[Corpus] = None,
+    num_words: Optional[int] = None,
+    epochs: int = 1,
+    num_windows: int = 8,
+    seed: int = 0,
+) -> CorpusSource:
+    """Build a :class:`CorpusSource` from a ``RunConfig.stream_source``
+    spec string — the declarative form the CLI and run JSONs use.
+
+    * ``"replay"`` — :class:`ReplaySource` over ``corpus`` (required).
+    * ``"libsvm:<path>"`` — :class:`LibsvmStreamSource`; needs
+      ``num_words``.
+    * ``"drift"`` / ``"drift:<seed>"`` — :class:`DriftSource` with
+      ``num_windows`` windows; needs ``num_words``.
+    """
+    kind, _, arg = spec.partition(":")
+    if kind == "replay":
+        if corpus is None:
+            raise ValueError("stream_source 'replay' needs a corpus")
+        return ReplaySource(corpus, window_docs, epochs=epochs)
+    if kind == "libsvm":
+        if not arg:
+            raise ValueError("stream_source 'libsvm:<path>' needs a path")
+        if not num_words:
+            raise ValueError("stream_source 'libsvm' needs num_words")
+        return LibsvmStreamSource(arg, window_docs, num_words)
+    if kind == "drift":
+        if not num_words:
+            raise ValueError("stream_source 'drift' needs num_words")
+        return DriftSource(
+            seed=int(arg) if arg else seed,
+            window_docs=window_docs,
+            num_windows=num_windows,
+            num_words=num_words,
+        )
+    raise ValueError(
+        f"unknown stream_source {spec!r}: expected replay | "
+        f"libsvm:<path> | drift[:<seed>]"
+    )

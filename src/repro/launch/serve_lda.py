@@ -20,6 +20,13 @@ DESIGN.md §5.1 trades against each other. ``--tick-period > 0`` runs the
 background admission ticker instead of caller-driven ticks. With
 ``--eval``, also prints the doc-completion held-out perplexity, the
 serving-quality number.
+
+``--follow`` turns the driver into the consuming half of the live
+pipeline (DESIGN.md §7): a checkpoint watcher polls ``--checkpoint-dir``
+every ``--watch-period`` seconds and hot-reloads each new model the
+trainer commits (``launch/train.py --stream`` is the producing half); the
+query load replays for ``--rounds`` rounds, printing the model versions
+each round's requests decoded under.
 """
 import argparse
 import time
@@ -63,9 +70,18 @@ def main() -> None:
                     help="doc-completion held-out perplexity")
     ap.add_argument("--show", type=int, default=5,
                     help="print top topics for the first N docs")
+    ap.add_argument("--follow", action="store_true",
+                    help="watch --checkpoint-dir and hot-reload every new "
+                         "model checkpoint while serving (live pipeline)")
+    ap.add_argument("--watch-period", type=float, default=0.5,
+                    help="checkpoint poll cadence in seconds (--follow)")
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="serve the query load this many rounds (pair with "
+                         "--follow to observe reloads between rounds)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    import jax.numpy as jnp
     import numpy as np
 
     from repro.data import synthetic_corpus
@@ -78,11 +94,17 @@ def main() -> None:
         docs_from_corpus,
         latency_percentile,
     )
+    from repro.train.checkpoint import load_lda_model
 
-    model = FrozenLDAModel.from_checkpoint(args.checkpoint_dir)
+    n_wk, n_k, hyper, _meta, step0 = load_lda_model(args.checkpoint_dir)
+    model = FrozenLDAModel(
+        n_wk=jnp.asarray(n_wk, jnp.int32),
+        n_k=jnp.asarray(n_k, jnp.int32),
+        hyper=hyper,
+    )
     print(f"model: W={model.num_words} K={model.num_topics} "
           f"tokens={int(np.asarray(model.n_k).sum())} "
-          f"from {args.checkpoint_dir}")
+          f"step={step0} from {args.checkpoint_dir}")
 
     if args.corpus:
         corpus = load_libsvm(args.corpus)
@@ -119,23 +141,38 @@ def main() -> None:
 
     if args.tick_period > 0:
         engine.start(args.tick_period)
+    if args.follow:
+        engine.watch_checkpoint_dir(
+            args.checkpoint_dir, period=args.watch_period,
+            initial_step=step0,
+        )
 
-    sweeps0 = engine.sweeps_run
-    t0 = time.perf_counter()
-    tickets = [engine.submit_async(d) for d in docs]
-    reqs = [engine.request(t) for t in tickets]  # refs survive the reap
-    thetas = [engine.result(t) for t in tickets]
-    dt = time.perf_counter() - t0
+    thetas = []
+    for rnd in range(max(1, args.rounds)):
+        sweeps0 = engine.sweeps_run
+        t0 = time.perf_counter()
+        tickets = [engine.submit_async(d) for d in docs]
+        reqs = [engine.request(t) for t in tickets]  # refs survive the reap
+        thetas = [engine.result(t) for t in tickets]
+        dt = time.perf_counter() - t0
+
+        lats = sorted((r.t_done - r.t_submit) * 1e3 for r in reqs)
+        versions = sorted({r.model_version for r in reqs})
+        tag = f"round {rnd}  " if args.rounds > 1 else ""
+        print(f"{tag}served {len(docs)} docs in {dt:.3f}s "
+              f"({len(docs) / dt:.1f} docs/sec, "
+              f"{engine.sweeps_run - sweeps0} bucket dispatches)  "
+              f"model versions {versions}")
+        print(f"latency ms: p50={latency_percentile(lats, 0.50):.2f} "
+              f"p99={latency_percentile(lats, 0.99):.2f} "
+              f"max={lats[-1]:.2f}")
+        if args.follow and rnd < args.rounds - 1:
+            time.sleep(args.watch_period)
+
+    if args.follow:
+        engine.stop_watching()
     if args.tick_period > 0:
         engine.stop()
-
-    lats = sorted((r.t_done - r.t_submit) * 1e3 for r in reqs)
-    print(f"served {len(docs)} docs in {dt:.3f}s "
-          f"({len(docs) / dt:.1f} docs/sec, "
-          f"{engine.sweeps_run - sweeps0} bucket dispatches)")
-    print(f"latency ms: p50={latency_percentile(lats, 0.50):.2f} "
-          f"p99={latency_percentile(lats, 0.99):.2f} "
-          f"max={lats[-1]:.2f}")
 
     for i in range(min(args.show, len(docs))):
         top = np.argsort(-thetas[i])[:3]

@@ -29,6 +29,17 @@ invocation can be frozen into a reproducible run file.
 paths — the artifact ``launch/serve_lda.py`` serves from. ``--ckpt``
 remains the elastic *training* checkpoint (assignments only; resumes
 automatically).
+
+``--stream`` switches to windowed online training (DESIGN.md §7): a
+``CorpusSource`` (``--stream-source replay|libsvm:<path>|drift``) feeds a
+``StreamingSession`` window by window, model checkpoints land on a
+per-window cadence, and ``launch/serve_lda.py --follow`` hot-reloads them
+into a running engine — the two commands form the live pipeline:
+
+    PYTHONPATH=src python -m repro.launch.train --stream \
+        --window-docs 64 --decay 0.02 --checkpoint-dir /tmp/lda_live
+    PYTHONPATH=src python -m repro.launch.serve_lda \
+        --checkpoint-dir /tmp/lda_live --follow
 """
 import argparse
 import os
@@ -83,7 +94,74 @@ def build_parser() -> argparse.ArgumentParser:
                     help="synthetic corpus size (when --corpus is not given)")
     ap.add_argument("--synthetic-words", type=int, default=2000)
     ap.add_argument("--synthetic-len", type=int, default=80)
+    # -- streaming mode (DESIGN.md §7) -----------------------------------
+    ap.add_argument("--stream", action="store_true",
+                    help="windowed online training (StreamingSession); "
+                         "--iters becomes the absolute window budget "
+                         "(0 = run to source exhaustion)")
+    ap.add_argument("--stream-source", default=None,
+                    help="replay | libsvm:<path> | drift[:<seed>] "
+                         "(default: replay of --corpus, else drift)")
+    ap.add_argument("--window-docs", type=int, default=64,
+                    help="documents per stream window")
+    ap.add_argument("--window-sweeps", type=int, default=2,
+                    help="CGS sweeps per window visit")
+    ap.add_argument("--decay", type=float, default=0.0,
+                    help="forgetting factor: counts *= (1-decay) per "
+                         "window transition (0 = never forget)")
+    ap.add_argument("--epochs", type=int, default=1,
+                    help="replay source: passes over the corpus")
+    ap.add_argument("--num-windows", type=int, default=8,
+                    help="drift source: stream length in windows")
     return ap
+
+
+def run_stream(args, cfg) -> None:
+    """The ``--stream`` path: build a ``CorpusSource`` from the config's
+    spec string and drive a ``StreamingSession`` over it. Pairs with
+    ``launch/serve_lda.py --follow`` watching the same
+    ``--checkpoint-dir`` for the live train→serve pipeline."""
+    import jax
+
+    from repro.core.types import LDAHyperParams
+    from repro.data import load_libsvm, synthetic_corpus
+    from repro.data.stream import make_source
+    from repro.train.online import StreamingSession
+
+    spec = cfg.stream_source or ("replay" if args.corpus else "drift")
+    corpus = None
+    if spec == "replay":
+        corpus = (load_libsvm(args.corpus) if args.corpus
+                  else synthetic_corpus(0, num_docs=args.synthetic_docs,
+                                        num_words=args.synthetic_words,
+                                        avg_doc_len=args.synthetic_len,
+                                        zipf_a=1.2))
+    source = make_source(
+        spec, cfg.window_docs,
+        corpus=corpus,
+        # chunked sources cannot infer the global vocabulary — take it
+        # from --synthetic-words (the stable-vocabulary contract)
+        num_words=args.synthetic_words,
+        epochs=args.epochs,
+        num_windows=args.num_windows,
+    )
+    hyper = LDAHyperParams(num_topics=args.topics)
+    session = StreamingSession(source, hyper, cfg)
+    print(f"stream  source={spec}  window_docs={cfg.window_docs}  "
+          f"sweeps/window={cfg.window_sweeps}  decay={cfg.decay}  "
+          f"algorithm={cfg.algorithm}")
+
+    def cb(sess, m):
+        print(f"window {m['window']:4d} ({m['uid']})  docs {m['docs']:5d}  "
+              f"ppl {m['perplexity']:.1f}  {m['docs_per_sec']:.0f} docs/s  "
+              f"resident kd {m['resident_kd_bytes'] / 1024:.1f} KiB")
+
+    session.run(jax.random.key(0), callback=cb)
+    print(f"stream finished at window {session.windows_done}")
+    if cfg.checkpoint_dir:
+        print(f"model checkpoints: {cfg.checkpoint_dir} "
+              f"(follow with: python -m repro.launch.serve_lda "
+              f"--checkpoint-dir {cfg.checkpoint_dir} --follow)")
 
 
 def main() -> None:
@@ -119,6 +197,10 @@ def main() -> None:
         elif not backend.supports_shard_map and not args.single_box:
             print(f"note: backend {args.algorithm!r} has no shard_map cell "
                   f"sweep; running the single-box plan")
+        if args.stream and mesh_shape is not None:
+            print("note: --stream runs the single-box windowed plan; "
+                  "ignoring the mesh shape")
+            mesh_shape = None
         if mesh_shape is None and args.delta_dtype != "int32":
             print("note: single-box plan ignores --delta-dtype")
         cfg = RunConfig(
@@ -137,13 +219,27 @@ def main() -> None:
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every,
             train_checkpoint_dir=args.ckpt,
-            train_checkpoint_every=25 if args.ckpt else 0,
+            train_checkpoint_every=(
+                (1 if args.stream else 25) if args.ckpt else 0
+            ),
+            window_docs=args.window_docs if args.stream else 0,
+            window_sweeps=args.window_sweeps,
+            decay=args.decay if args.stream else 0.0,
+            stream_source=(
+                (args.stream_source
+                 or ("replay" if args.corpus else "drift"))
+                if args.stream else None
+            ),
         )
 
     if args.dump_config:
         with open(args.dump_config, "w") as f:
             f.write(cfg.to_json() + "\n")
         print(f"wrote {args.dump_config}")
+        return
+
+    if args.stream or cfg.stream_source:
+        run_stream(args, cfg)
         return
 
     from repro.core.types import LDAHyperParams

@@ -32,7 +32,18 @@ throughput — or, for millisecond SLAs, at low latency. The engine:
   blocks (with optional timeout) and reaps. Requests arriving between
   ticks coalesce into the next tick's batch instead of blocking the
   caller; an optional background ticker (:meth:`LDAEngine.start`) drives
-  admission at a fixed ``tick_period``.
+  admission at a fixed ``tick_period``;
+
+* supports **hot model reload** (DESIGN.md §7): :meth:`LDAEngine.reload`
+  atomically swaps in a new :class:`FrozenLDAModel` between admission
+  ticks. Versioned model slots make the swap safe under load — every
+  request is stamped with the version it decodes under
+  (``InferRequest.model_version``), a bucket's in-flight slots always
+  finish on the model they were admitted under (the bucket pins its
+  model slot until it drains), and a request admitted after the swap
+  decodes under the new model. :meth:`LDAEngine.watch_checkpoint_dir`
+  turns this into a live train→serve pipeline: poll a model checkpoint
+  directory and reload every new step the trainer commits.
 
 Statistical contract (throughput mode): each request's chain consumes
 randomness only from its own key, with the same schedule as the
@@ -186,6 +197,10 @@ class InferRequest:
     ``theta`` is the (K,) doc-topic distribution once ``done``; ``z`` is
     the final per-token assignment (latency mode only). ``t_submit`` /
     ``t_done`` are ``time.monotonic`` stamps for latency accounting.
+    ``model_version`` is the version tag of the model the request decoded
+    under (stamped at admission — or at submit for instantly-completed
+    requests; ``-1`` until then), the diagnostic that makes hot reloads
+    auditable per request.
     """
 
     uid: int
@@ -202,6 +217,7 @@ class InferRequest:
     # lifecycle / SLA bookkeeping
     admitted: bool = False
     ticks_waited: int = 0
+    model_version: int = -1
     t_submit: float = 0.0
     t_done: float = 0.0
     # in-flight bookkeeping
@@ -211,8 +227,34 @@ class InferRequest:
     z: Optional[np.ndarray] = None  # final assignments (latency mode)
 
 
+@dataclasses.dataclass
+class _ModelSlot:
+    """One servable model version: the frozen counts plus everything the
+    decode paths derive from them (backend tables, the asymmetric-prior
+    alpha_k, and the per-bucket jitted programs). ``reload`` builds a new
+    slot and swaps the engine's current pointer; buckets still decoding
+    pin the slot they were admitted under, so an old version stays alive
+    exactly as long as its in-flight requests."""
+
+    model: FrozenLDAModel
+    aux: Any
+    alpha_k: np.ndarray
+    version: int
+    # jit caches keyed by bucket length; shared between slots whose hyper
+    # is equal (the closures capture only hyper + engine knobs — the
+    # counts are traced arguments, so XLA handles shape changes itself)
+    sweep_fns: Dict[int, Any]
+    rtlda_fns: Dict[int, Any]
+
+
 class _Bucket:
-    """One fixed-shape slot batch: all device state for bucket width L."""
+    """One fixed-shape slot batch: all device state for bucket width L.
+
+    ``slot_model`` pins the model version the bucket's current occupants
+    decode under: it is (re)tagged to the engine's current slot whenever
+    a request is placed into an *empty* bucket, and never changes while
+    any slot is active — the invariant that lets ``reload`` swap the
+    engine's model without touching in-flight chains."""
 
     def __init__(self, length: int, slots: int, num_topics: int):
         self.length = length
@@ -222,6 +264,7 @@ class _Bucket:
         self.n_kd = jnp.zeros((slots, num_topics), jnp.int32)
         self.active: List[Optional[InferRequest]] = [None] * slots
         self.sweep_keys: List[Optional[jax.Array]] = [None] * slots
+        self.slot_model: Optional[_ModelSlot] = None
 
     def free_slot(self) -> Optional[int]:
         for s, r in enumerate(self.active):
@@ -257,24 +300,14 @@ class LDAEngine:
             raise ValueError("need at least one bucket length")
         if cfg.mode not in ("throughput", "latency"):
             raise ValueError(f"unknown serve mode {cfg.mode!r}")
-        self.model = model
         self.cfg = cfg
         self.backend = algorithms.get(cfg.algorithm)
         self._knobs = cfg.knobs()
-        # latency mode never runs backend sweeps — skip table builds
-        # (zen_cdf's prepare_infer materializes a (W, K) CDF)
-        self._aux = None if cfg.mode == "latency" else (
-            self.backend.prepare_infer(
-                model.n_wk, model.n_k, model.hyper, self._knobs
-            )
-        )
-        self._alpha_k = np.asarray(model.hyper.alpha_k(model.n_k), np.float32)
+        self._current = self._build_slot(model, version=0)
         self._buckets = {
             length: _Bucket(length, cfg.max_batch, model.num_topics)
             for length in sorted(cfg.buckets)
         }
-        self._sweep_fns: Dict[int, Any] = {}
-        self._rtlda_fns: Dict[int, Any] = {}
         self._base_key = jax.random.key(seed)
         self._dummy_key = jax.random.key(0)
         self.queue: List[InferRequest] = []
@@ -282,11 +315,154 @@ class LDAEngine:
         self._uid = 0
         self.docs_done = 0
         self.sweeps_run = 0  # jitted bucket sweeps/decodes executed
+        self.reloads = 0
         # async front
         self._tickets: Dict[int, InferRequest] = {}
         self._cv = threading.Condition(threading.RLock())
         self._ticker: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
+        # checkpoint watcher (watch_checkpoint_dir)
+        self._watcher: Optional[threading.Thread] = None
+        self._watch_stop = threading.Event()
+
+    # -- the current model slot --------------------------------------------
+    @property
+    def model(self) -> FrozenLDAModel:
+        """The model new admissions decode under (the *current* slot —
+        in-flight buckets may still be finishing an older version)."""
+        return self._current.model
+
+    @property
+    def model_version(self) -> int:
+        """Version tag of the current model slot (0 at construction,
+        bumped by every :meth:`reload`)."""
+        return self._current.version
+
+    @property
+    def _alpha_k(self) -> np.ndarray:
+        return self._current.alpha_k
+
+    def _build_slot(self, model: FrozenLDAModel, version: int,
+                    share_from: Optional[_ModelSlot] = None) -> _ModelSlot:
+        # latency mode never runs backend sweeps — skip table builds
+        # (zen_cdf's prepare_infer materializes a (W, K) CDF)
+        aux = None if self.cfg.mode == "latency" else (
+            self.backend.prepare_infer(
+                model.n_wk, model.n_k, model.hyper, self._knobs
+            )
+        )
+        # the jitted per-bucket programs close over hyper only (counts
+        # and tables are traced arguments) — same hyper, same programs
+        share = share_from is not None and share_from.model.hyper == model.hyper
+        return _ModelSlot(
+            model=model,
+            aux=aux,
+            alpha_k=np.asarray(model.hyper.alpha_k(model.n_k), np.float32),
+            version=version,
+            sweep_fns=share_from.sweep_fns if share else {},
+            rtlda_fns=share_from.rtlda_fns if share else {},
+        )
+
+    def reload(self, model: FrozenLDAModel,
+               version: Optional[int] = None) -> int:
+        """Atomically swap in a new model between admission ticks.
+
+        The swap only moves the engine's *current* slot pointer: requests
+        admitted from now on decode under ``model``; every in-flight
+        request keeps decoding under the slot its bucket pinned at
+        admission and completes on that model (its
+        ``InferRequest.model_version`` says which). Nothing is dropped,
+        nothing re-decodes, and a bucket starts serving the new version
+        as soon as it drains.
+
+        Args:
+            model: the new frozen model. Vocabulary/topic-count changes
+                are allowed (buckets re-shape their count state when they
+                re-tag); hyper changes rebuild the jit caches.
+            version: explicit version tag (must be greater than the
+                current one); default is ``current + 1``.
+
+        Returns:
+            The new version tag.
+        """
+        with self._cv:
+            new_version = (self._current.version + 1 if version is None
+                           else int(version))
+            if new_version <= self._current.version:
+                raise ValueError(
+                    f"model version must increase: {new_version} <= "
+                    f"{self._current.version}"
+                )
+            self._current = self._build_slot(
+                model, new_version, share_from=self._current
+            )
+            self.reloads += 1
+            return new_version
+
+    def watch_checkpoint_dir(
+        self,
+        directory: str,
+        period: float = 1.0,
+        initial_step: Optional[int] = None,
+    ) -> None:
+        """Poll a model-checkpoint directory and reload every new step.
+
+        The consuming half of the live pipeline (``launch/train.py
+        --stream`` writes steps, this follows them): a daemon thread
+        checks ``directory`` every ``period`` seconds for a committed
+        ``save_lda_model`` checkpoint with a step newer than the last one
+        seen and hot-:meth:`reload`\\ s it. A missing or torn directory
+        is quietly retried. Idempotent while a watcher runs; stop with
+        :meth:`stop_watching`.
+
+        Args:
+            directory: the ``checkpoint_dir`` a trainer writes model
+                checkpoints into.
+            period: poll cadence in seconds.
+            initial_step: treat this step as already served (pass the
+                step the engine's construction model came from to avoid
+                one redundant reload); default reloads the first
+                checkpoint the watcher sees.
+        """
+        from repro.train.checkpoint import load_lda_model
+
+        with self._cv:
+            if self._watcher is not None and self._watcher.is_alive():
+                return
+            self._watch_stop = threading.Event()
+            stop = self._watch_stop
+
+            def loop(last=initial_step):
+                while not stop.is_set():
+                    try:
+                        n_wk, n_k, hyper, _meta, step = load_lda_model(
+                            directory
+                        )
+                    except (OSError, ValueError, KeyError):
+                        step = None  # nothing committed yet / torn dir
+                    if step is not None and (last is None or step > last):
+                        self.reload(FrozenLDAModel(
+                            n_wk=jnp.asarray(n_wk, jnp.int32),
+                            n_k=jnp.asarray(n_k, jnp.int32),
+                            hyper=hyper,
+                        ))
+                        last = step
+                    stop.wait(period)
+
+            self._watcher = threading.Thread(
+                target=loop, name="lda-engine-watcher", daemon=True
+            )
+            self._watcher.start()
+
+    def stop_watching(self) -> None:
+        """Stop the checkpoint watcher (no-op if none is running). The
+        currently-loaded model keeps serving."""
+        watcher = self._watcher
+        if watcher is None:
+            return
+        self._watch_stop.set()
+        watcher.join()
+        self._watcher = None
 
     # -- request intake ----------------------------------------------------
     def submit(
@@ -383,12 +559,14 @@ class LDAEngine:
         )
         if req.words.shape[0] == 0:
             # nothing observed: theta is the normalized prior
+            req.model_version = self._current.version
             req.theta = self._alpha_k / self._alpha_k.sum()
             self._complete(req)
             self._instant.append(req)
         elif not latency and req.num_sweeps <= 0:
             # zero sweeps: theta straight from the z0 assignment, matching
             # the oracle's empty scan (never occupies a slot)
+            req.model_version = self._current.version
             z0 = np.asarray(jax.random.randint(
                 req.key, (req.words.shape[0],), 0, self.model.num_topics,
                 dtype=jnp.int32,
@@ -396,7 +574,7 @@ class LDAEngine:
             n_kd0 = np.bincount(
                 z0, minlength=self.model.num_topics
             ).astype(np.int32)
-            req.theta = self._theta(req, n_kd0)
+            req.theta = self._theta(req, n_kd0, self._alpha_k)
             self._complete(req)
             self._instant.append(req)
         else:
@@ -561,11 +739,25 @@ class LDAEngine:
                 return self._buckets[bl]
         return self._buckets[max(self._buckets)]
 
+    def _admittable(self, bucket: _Bucket) -> Optional[int]:
+        """A free slot in ``bucket`` a request may take *now*, or None.
+
+        A drained bucket is always admittable (it re-tags to the current
+        model slot at placement); an occupied bucket only admits
+        co-residents of the same model version — a request must never
+        join a batch that decodes under a model it wasn't admitted for.
+        After a reload, occupied buckets therefore finish their old-
+        version occupants first and flip to the new model when empty.
+        """
+        if bucket.num_active and bucket.slot_model is not self._current:
+            return None
+        return bucket.free_slot()
+
     def _admit(self) -> None:
         still_queued = []
         for req in self.queue:
             bucket = self._bucket_for(req.words.shape[0])
-            slot = bucket.free_slot()
+            slot = self._admittable(bucket)
             if slot is None and self.cfg.max_slot_wait > 0 \
                     and req.ticks_waited >= self.cfg.max_slot_wait:
                 # SLA spill: the preferred bucket has been saturated for
@@ -574,7 +766,7 @@ class LDAEngine:
                     wider = self._buckets[bl]
                     if bl <= bucket.length or bl < req.words.shape[0]:
                         continue
-                    s = wider.free_slot()
+                    s = self._admittable(wider)
                     if s is not None:
                         bucket, slot = wider, s
                         break
@@ -586,7 +778,16 @@ class LDAEngine:
         self.queue = still_queued
 
     def _place(self, req: InferRequest, bucket: _Bucket, slot: int) -> None:
-        l, k = bucket.length, self.model.num_topics
+        if bucket.num_active == 0:
+            # empty bucket: (re)pin to the current model version; if K
+            # changed across a reload, re-shape the doc-topic state
+            bucket.slot_model = self._current
+            k_now = self._current.model.num_topics
+            if bucket.n_kd.shape[1] != k_now:
+                bucket.n_kd = jnp.zeros(
+                    (bucket.n_kd.shape[0], k_now), jnp.int32
+                )
+        l, k = bucket.length, bucket.slot_model.model.num_topics
         n = req.words.shape[0]
         words = np.zeros(l, np.int32)
         words[:n] = req.words
@@ -596,6 +797,7 @@ class LDAEngine:
         bucket.mask = bucket.mask.at[slot].set(jnp.asarray(mask))
         bucket.active[slot] = req
         req.admitted = True
+        req.model_version = bucket.slot_model.version
         if self.cfg.mode == "latency":
             # RT-LDA needs no chain state: z/n_kd are produced whole by
             # the fused decode, nothing to initialize per slot
@@ -615,10 +817,13 @@ class LDAEngine:
         )
 
     # -- the jitted per-bucket programs -------------------------------------
-    def _sweep_fn(self, length: int):
-        """Throughput mode: one chain CGS sweep over a bucket's slots."""
-        if length not in self._sweep_fns:
-            backend, hyper, knobs = self.backend, self.model.hyper, self._knobs
+    def _sweep_fn(self, slot_model: _ModelSlot, length: int):
+        """Throughput mode: one chain CGS sweep over a bucket's slots.
+        Cached on the model slot (shared across reloads with equal
+        hyper — the counts are traced arguments)."""
+        if length not in slot_model.sweep_fns:
+            backend, knobs = self.backend, self._knobs
+            hyper = slot_model.model.hyper
 
             def fn(keys, words, mask, z, n_kd, n_wk, n_k, aux):
                 z_new = backend.infer_sweep(
@@ -631,14 +836,14 @@ class LDAEngine:
                 )
                 return z_new, jnp.sum(onehot, axis=1)
 
-            self._sweep_fns[length] = jax.jit(fn)
-        return self._sweep_fns[length]
+            slot_model.sweep_fns[length] = jax.jit(fn)
+        return slot_model.sweep_fns[length]
 
-    def _rtlda_fn(self, length: int):
+    def _rtlda_fn(self, slot_model: _ModelSlot, length: int):
         """Latency mode: the whole RT-LDA decode for one bucket, fused
         into a single dispatch (init + ``rtlda_sweeps`` argmax passes)."""
-        if length not in self._rtlda_fns:
-            hyper = self.model.hyper
+        if length not in slot_model.rtlda_fns:
+            hyper = slot_model.model.hyper
             sweeps = self.cfg.rtlda_sweeps
 
             def fn(words, mask, n_wk, n_k):
@@ -646,8 +851,8 @@ class LDAEngine:
                     lambda w, m: rtlda_assign(n_wk, n_k, w, m, hyper, sweeps)
                 )(words, mask)
 
-            self._rtlda_fns[length] = jax.jit(fn)
-        return self._rtlda_fns[length]
+            slot_model.rtlda_fns[length] = jax.jit(fn)
+        return slot_model.rtlda_fns[length]
 
     # -- stepping ----------------------------------------------------------
     def step(self) -> List[InferRequest]:
@@ -671,8 +876,9 @@ class LDAEngine:
         for bucket in self._buckets.values():
             if bucket.num_active == 0:
                 continue
-            z, n_kd = self._rtlda_fn(bucket.length)(
-                bucket.words, bucket.mask, self.model.n_wk, self.model.n_k
+            sm = bucket.slot_model  # pinned: in-flight = admitted model
+            z, n_kd = self._rtlda_fn(sm, bucket.length)(
+                bucket.words, bucket.mask, sm.model.n_wk, sm.model.n_k
             )
             self.sweeps_run += 1
             z_host, n_kd_host = np.asarray(z), np.asarray(n_kd)
@@ -702,9 +908,10 @@ class LDAEngine:
                 else self._dummy_key
                 for s in range(len(bucket.active))
             ])
-            bucket.z, bucket.n_kd = self._sweep_fn(bucket.length)(
+            sm = bucket.slot_model  # pinned: in-flight = admitted model
+            bucket.z, bucket.n_kd = self._sweep_fn(sm, bucket.length)(
                 keys, bucket.words, bucket.mask, bucket.z, bucket.n_kd,
-                self.model.n_wk, self.model.n_k, self._aux,
+                sm.model.n_wk, sm.model.n_k, sm.aux,
             )
             self.sweeps_run += 1
             n_kd_host = None
@@ -724,9 +931,10 @@ class LDAEngine:
                     if want_sample:
                         if req.theta_sum is None:
                             req.theta_sum = np.zeros(
-                                self.model.num_topics, np.float32
+                                sm.model.num_topics, np.float32
                             )
-                        req.theta_sum += self._theta(req, n_kd_host[slot])
+                        req.theta_sum += self._theta(req, n_kd_host[slot],
+                                                     sm.alpha_k)
                         req.theta_samples += 1
                 if ripe:
                     self._finish(req, bucket, slot,
@@ -735,10 +943,11 @@ class LDAEngine:
                     finished.append(req)
         return finished
 
-    def _theta(self, req: InferRequest, n_kd_row: np.ndarray) -> np.ndarray:
+    def _theta(self, req: InferRequest, n_kd_row: np.ndarray,
+               alpha_k: np.ndarray) -> np.ndarray:
         l = req.words.shape[0]
-        return (n_kd_row.astype(np.float32) + self._alpha_k) / (
-            l + self._alpha_k.sum()
+        return (n_kd_row.astype(np.float32) + alpha_k) / (
+            l + alpha_k.sum()
         )
 
     def _finish(self, req: InferRequest, bucket: _Bucket, slot: int,
@@ -749,7 +958,8 @@ class LDAEngine:
         else:
             if n_kd_row is None:  # num_sweeps == 0: counts from z0
                 n_kd_row = np.asarray(bucket.n_kd[slot])
-            req.theta = self._theta(req, n_kd_row)
+            # prior smoothing from the model the request decoded under
+            req.theta = self._theta(req, n_kd_row, bucket.slot_model.alpha_k)
         bucket.active[slot] = None
         bucket.sweep_keys[slot] = None
         if clear_mask:

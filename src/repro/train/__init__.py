@@ -8,6 +8,7 @@ model stack in.
 _EXPORTS = {
     "RunConfig": ("repro.train.session", "RunConfig"),
     "TrainSession": ("repro.train.session", "TrainSession"),
+    "StreamingSession": ("repro.train.online", "StreamingSession"),
     "Schedule": ("repro.train.schedule", "Schedule"),
     "ScheduledAction": ("repro.train.schedule", "ScheduledAction"),
     "adafactor_init": ("repro.train.optimizer", "adafactor_init"),

@@ -211,3 +211,25 @@ class CheckpointManager:
             except (IOError, ValueError, KeyError):
                 continue  # torn checkpoint: fall back to the previous one
         return None
+
+    def restore_latest_named(
+        self,
+    ) -> Optional[Tuple[Dict[str, np.ndarray], Dict, int]]:
+        """Newest committed checkpoint as a flat ``{name: array}`` dict.
+
+        ``restore_latest`` needs a structure-matching target, which a
+        reader whose tree shape varies per run (e.g. streaming
+        checkpoints carrying a retained-assignment entry per visited
+        window) cannot provide up front. This variant reads the manifest
+        leaf names instead — host arrays, no device placement."""
+        for step, path in reversed(self._steps()):
+            try:
+                leaves, manifest = _verify_and_load(path)
+            except (IOError, ValueError, KeyError):
+                continue  # torn checkpoint: fall back to the previous one
+            named = {
+                entry["name"]: leaf
+                for entry, leaf in zip(manifest["leaves"], leaves)
+            }
+            return named, manifest["metadata"], step
+        return None

@@ -1,0 +1,363 @@
+"""Windowed online training: a ``TrainSession``-shaped driver over a
+:class:`~repro.data.stream.CorpusSource` (DESIGN.md §7).
+
+Batch training materializes the whole corpus and sweeps it per
+iteration; this module trains *window by window* instead — the paper's
+§3.1 doc-window rotation turned into an ingestion loop. Per window:
+
+1. **compose** — the window's tokens get topic assignments (fresh random
+   draws keyed by the window's stream index, or the assignments retained
+   from the window's previous visit), and a transient ``CGSState`` is
+   built from the resident global ``N_wk``/``N_k`` plus the window-local
+   ``N_kd`` block;
+2. **sweep** — ``window_sweeps`` CGS iterations through the *unchanged*
+   ``SingleBoxPlan`` step (whatever backend the run configures), which
+   folds the window's deltas into the composed counts;
+3. **retire** — the updated ``N_wk``/``N_k`` become the new global
+   model, the window's ``N_kd`` block and token arrays are dropped, so
+   resident doc-side state is O(window), never O(corpus).
+
+The ``decay`` knob is the online-CGS forgetting factor: at every window
+transition the global counts are scaled by ``(1 - decay)`` (rounded,
+``N_k`` re-derived), so old windows' evidence washes out geometrically
+and the model tracks a drifting stream. Two regimes fall out:
+
+* ``decay == 0`` over a replaying source — the *rotation* regime: each
+  window's assignments are retained (host-side) and reused on its next
+  visit, so re-sampling updates counts by exact deltas; a full epoch
+  re-samples every token once, which is batch CGS processed
+  window-sequentially. The batch-equivalence regression test pins the
+  perplexity trend (``tests/test_streaming.py``).
+* ``decay > 0`` (or a non-replaying source) — the *streaming* regime:
+  every window arrives fresh, folds in once, and is forgotten at the
+  decayed rate; nothing per-window is retained anywhere.
+
+Checkpoint/resume: ``train_checkpoint_dir`` stores the global counts,
+the window cursor, and any retained assignments (atomic + checksummed via
+``CheckpointManager``); ``run()`` auto-resumes from the newest committed
+one, and because every window's randomness is keyed by
+``fold_in(rng, window.index)`` — never by wall-clock position — a
+resumed run is bit-identical to an uninterrupted one. ``checkpoint_dir``
+writes the *serving* model artifact on a window cadence, which is the
+producing half of the live pipeline: ``LDAEngine.watch_checkpoint_dir``
+hot-reloads those checkpoints into a running server.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counts as counts_lib
+from repro.core.likelihood import predictive_llh
+from repro.core.types import CGSState, Corpus, LDAHyperParams
+from repro.data.stream import CorpusSource, ReplaySource, Window
+from repro.train.session import RunConfig, SingleBoxPlan
+
+_STREAM_KIND = "lda_stream"
+
+
+class StreamingSession:
+    """Drive windowed online training from a :class:`CorpusSource`.
+
+    The session surface mirrors :class:`~repro.train.session.TrainSession`
+    where it can — ``run(rng, callback)``, ``save_model()``, a metrics
+    dict per unit of work — but the unit is a *window*, not a
+    full-corpus iteration, and ``cfg.num_iterations`` bounds the
+    **absolute window cursor** (0 = run until the source exhausts), so
+    resume needs no arithmetic, exactly like the batch session.
+
+    The resident model is ``n_wk (W, K)`` / ``n_k (K,)`` — the same
+    arrays a batch run would hold — while doc-side state exists only for
+    the window being swept.
+    """
+
+    def __init__(self, source: CorpusSource, hyper: LDAHyperParams,
+                 cfg: RunConfig):
+        if cfg.mesh_shape is not None:
+            raise ValueError(
+                "StreamingSession is single-box; windowed mesh execution "
+                "is a roadmap follow-up (shard the window, not the corpus)"
+            )
+        if not 0.0 <= cfg.decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {cfg.decay}")
+        if cfg.window_sweeps <= 0:
+            raise ValueError(
+                f"window_sweeps must be > 0, got {cfg.window_sweeps}"
+            )
+        self.source = source
+        self.hyper = hyper
+        # windows never run the batch-iteration exclusion warmup: the
+        # stale/same statistics are meaningless across O(1)-sweep visits
+        self.cfg = cfg
+        self._window_cfg = dataclasses.replace(
+            cfg,
+            exclusion_start=0,
+            mesh_shape=None,
+            # single-box plan default, mirroring TrainSession's resolution
+            sampling_method=cfg.sampling_method or "cdf",
+        )
+        k = hyper.num_topics
+        self.n_wk = jnp.zeros((source.num_words, k), jnp.int32)
+        self.n_k = jnp.zeros((k,), jnp.int32)
+        self.windows_done = 0
+        # rotation-regime assignment retention (host-side, uid-keyed)
+        self._retain = bool(source.replays) and cfg.decay == 0.0
+        self._retained: Dict[str, np.ndarray] = {}
+        self._plans: Dict[str, SingleBoxPlan] = {}
+        self._base_key: Optional[jax.Array] = None
+        self._last_model_save: Optional[int] = None
+        self._ckpt = None
+        if cfg.train_checkpoint_dir:
+            from repro.train.checkpoint import CheckpointManager
+
+            self._ckpt = CheckpointManager(cfg.train_checkpoint_dir)
+
+    # -- per-window machinery ----------------------------------------------
+    def _plan_for(self, window: Window) -> SingleBoxPlan:
+        """A ``SingleBoxPlan`` for the window's corpus — THE reuse point:
+        the plan's step is the bit-tested batch step (backend sweep +
+        exclusion mask + delta fold), just driven over a window-sized
+        corpus. Plans are cached per uid on replaying sources so
+        ``backend.prepare`` is paid once per distinct window."""
+        if self._retain and window.uid in self._plans:
+            return self._plans[window.uid]
+        plan = SingleBoxPlan(window.corpus, self.hyper, self._window_cfg)
+        if self._retain:
+            self._plans[window.uid] = plan
+        return plan
+
+    def _apply_decay(self) -> None:
+        """Forgetting at a window transition: scale the global counts by
+        ``(1 - decay)`` (host-side, rounded to nearest) and re-derive
+        ``n_k`` so the model invariant ``n_k == n_wk.sum(0)`` holds
+        exactly."""
+        if self.cfg.decay <= 0.0:
+            return
+        scaled = np.rint(
+            np.asarray(self.n_wk, np.float64) * (1.0 - self.cfg.decay)
+        ).astype(np.int32)
+        self.n_wk = jnp.asarray(scaled)
+        self.n_k = jnp.asarray(scaled.sum(axis=0).astype(np.int32))
+
+    def run_window(self, window: Window) -> Dict[str, Any]:
+        """Sweep one window against the resident model; fold and retire.
+
+        Returns the window's metrics dict: ``llh``/``perplexity`` over
+        the window's own tokens under the post-sweep composed counts,
+        ``docs_per_sec`` for the visit, and ``resident_kd_bytes`` — the
+        doc-side count state this window kept resident (the O(window)
+        claim, measured)."""
+        if self._base_key is None:
+            self._base_key = jax.random.key(0)
+        cw = window.corpus
+        k = self.hyper.num_topics
+        key = jax.random.fold_in(self._base_key, window.index)
+        if self.windows_done > 0:
+            self._apply_decay()
+        t0 = time.perf_counter()
+        retained = self._retained.get(window.uid) if self._retain else None
+        if retained is None:
+            z0 = jax.random.randint(key, (cw.num_tokens,), 0, k,
+                                    dtype=jnp.int32)
+        else:
+            z0 = jnp.asarray(retained, jnp.int32)
+        n_wk_w, n_kd_w, n_k_w = counts_lib.build_counts(
+            cw.word, cw.doc, z0, cw.num_words, cw.num_docs, k
+        )
+        if retained is None:
+            # first visit: the window's own tokens join the model counts
+            n_wk, n_k = self.n_wk + n_wk_w, self.n_k + n_k_w
+        else:
+            # revisit (rotation regime): the global counts already carry
+            # this window's last-visit contribution — re-adding it would
+            # double-count; the step's delta fold keeps it exact
+            n_wk, n_k = self.n_wk, self.n_k
+        zeros = jnp.zeros((cw.num_tokens,), jnp.int32)
+        state = CGSState(
+            topic=z0, prev_topic=z0, n_wk=n_wk, n_kd=n_kd_w, n_k=n_k,
+            rng=key, iteration=0, stale_iters=zeros, same_count=zeros,
+        )
+        plan = self._plan_for(window)
+        for _ in range(self.cfg.window_sweeps):
+            state = plan.step(state)
+        jax.block_until_ready(state.n_wk)
+        dt = time.perf_counter() - t0
+        llh = plan.llh(state)
+        # retire: the model keeps only N_wk/N_k; doc-side state rolls
+        self.n_wk, self.n_k = state.n_wk, state.n_k
+        if self._retain:
+            self._retained[window.uid] = np.asarray(state.topic)
+        self.windows_done = window.index + 1
+        return {
+            "window": window.index,
+            "uid": window.uid,
+            "docs": cw.num_docs,
+            "tokens": cw.num_tokens,
+            "llh": llh,
+            "perplexity": math.exp(-llh / max(1, cw.num_tokens)),
+            "change_rate": plan.change_rate(state),
+            "docs_per_sec": cw.num_docs / dt if dt > 0 else float("inf"),
+            "resident_kd_bytes": int(cw.num_docs) * int(k) * 4,
+        }
+
+    # -- the loop ------------------------------------------------------------
+    def run(
+        self,
+        rng: Optional[jax.Array] = None,
+        callback: Optional[Callable[["StreamingSession", Dict], None]] = None,
+    ) -> CGSState:
+        """Consume the source from the (possibly restored) cursor.
+
+        ``cfg.num_iterations`` bounds the absolute window cursor (0 =
+        until the source exhausts); ``callback(session, metrics)`` fires
+        after every window. Returns a host-side summary state carrying
+        the final global counts (``n_wk``/``n_k``)."""
+        cfg = self.cfg
+        if rng is not None:
+            self._base_key = rng
+        elif self._base_key is None:
+            self._base_key = jax.random.key(0)
+        self._maybe_restore()
+        limit = cfg.num_iterations
+        for window in self.source.windows(start=self.windows_done):
+            if limit and window.index >= limit:
+                break
+            metrics = self.run_window(window)
+            if callback is not None:
+                callback(self, metrics)
+            if self._ckpt is not None and cfg.train_checkpoint_every > 0 \
+                    and self.windows_done % cfg.train_checkpoint_every == 0:
+                self.save_stream_checkpoint()
+            if cfg.checkpoint_dir and cfg.checkpoint_every > 0 \
+                    and self.windows_done % cfg.checkpoint_every == 0:
+                self.save_model()
+        if cfg.checkpoint_dir and self._last_model_save != self.windows_done:
+            self.save_model()
+        if self._ckpt is not None:
+            self.save_stream_checkpoint()
+        return self.model_state()
+
+    # -- model surfaces ------------------------------------------------------
+    def model_state(self):
+        """The resident global model as a tiny namespace with
+        ``n_wk``/``n_k`` (what ``FrozenLDAModel.from_state`` wants)."""
+        return CGSState(
+            topic=jnp.zeros((0,), jnp.int32),
+            prev_topic=jnp.zeros((0,), jnp.int32),
+            n_wk=self.n_wk,
+            n_kd=jnp.zeros((0, self.hyper.num_topics), jnp.int32),
+            n_k=self.n_k,
+            rng=self._base_key if self._base_key is not None
+            else jax.random.key(0),
+            iteration=self.windows_done,
+        )
+
+    def save_model(self, directory: Optional[str] = None) -> str:
+        """Checkpoint the current global model for serving — the same
+        artifact ``TrainSession.save_model`` writes, stamped with the
+        window cursor as the step so ``LDAEngine.watch_checkpoint_dir``
+        sees a monotonically increasing stream of model versions."""
+        from repro.train.checkpoint import save_lda_model
+
+        directory = directory or self.cfg.checkpoint_dir
+        if not directory:
+            raise ValueError("no checkpoint directory configured")
+        path = save_lda_model(
+            directory,
+            np.asarray(jax.device_get(self.n_wk)),
+            np.asarray(jax.device_get(self.n_k)),
+            self.hyper,
+            step=self.windows_done,
+            extra_metadata={
+                "algorithm": self.cfg.algorithm,
+                "stream": True,
+                "windows_done": self.windows_done,
+                "decay": self.cfg.decay,
+            },
+        )
+        self._last_model_save = self.windows_done
+        return path
+
+    # -- stream checkpoints --------------------------------------------------
+    def save_stream_checkpoint(self) -> str:
+        """Atomic mid-stream checkpoint: global counts + window cursor +
+        (rotation regime) every retained assignment array."""
+        tree: Dict[str, Any] = {
+            "n_wk": np.asarray(jax.device_get(self.n_wk)),
+            "n_k": np.asarray(jax.device_get(self.n_k)),
+            "cursor": np.asarray(self.windows_done, np.int64),
+        }
+        for uid, z in self._retained.items():
+            tree[f"z:{uid}"] = z
+        return self._ckpt.save(
+            self.windows_done, tree,
+            {"kind": _STREAM_KIND, "cursor": self.windows_done,
+             "decay": self.cfg.decay},
+        )
+
+    def _maybe_restore(self) -> bool:
+        if self._ckpt is None:
+            return False
+        got = self._ckpt.restore_latest_named()
+        if got is None:
+            return False
+        named, meta, _step = got
+        if meta.get("kind") != _STREAM_KIND:
+            return False
+        self.n_wk = jnp.asarray(named["n_wk"], jnp.int32)
+        self.n_k = jnp.asarray(named["n_k"], jnp.int32)
+        self.windows_done = int(named["cursor"])
+        self._retained = {
+            name[2:]: np.asarray(arr, np.int32)
+            for name, arr in named.items() if name.startswith("z:")
+        }
+        return True
+
+    # -- rotation-regime evaluation -------------------------------------------
+    def assembled_state(self) -> CGSState:
+        """Reassemble a full-corpus ``CGSState`` from the retained
+        per-window assignments (rotation regime over a
+        :class:`ReplaySource` only) — the bridge back to batch-side
+        evaluation: the returned state is exactly what a batch run whose
+        assignments matched the retained windows would hold."""
+        if not isinstance(self.source, ReplaySource) or not self._retain:
+            raise ValueError(
+                "assembled_state() needs decay=0 over a ReplaySource "
+                "(the rotation regime retains assignments)"
+            )
+        corpus = self.source.corpus
+        z = np.zeros(corpus.num_tokens, np.int32)
+        for s in range(self.source.windows_per_epoch):
+            w = self.source.window_slice(s)
+            if w.uid not in self._retained:
+                raise ValueError(
+                    f"window {w.uid} has no retained assignments yet "
+                    f"(cursor {self.windows_done})"
+                )
+            z[w.token_index] = self._retained[w.uid]
+        zt = jnp.asarray(z)
+        n_wk, n_kd, n_k = counts_lib.build_counts(
+            corpus.word, corpus.doc, zt, corpus.num_words, corpus.num_docs,
+            self.hyper.num_topics,
+        )
+        zeros = jnp.zeros((corpus.num_tokens,), jnp.int32)
+        return CGSState(
+            topic=zt, prev_topic=zt, n_wk=n_wk, n_kd=n_kd, n_k=n_k,
+            rng=self._base_key, iteration=self.windows_done,
+            stale_iters=zeros, same_count=zeros,
+        )
+
+    def full_perplexity(self) -> float:
+        """Whole-corpus perplexity of the assembled state — the number
+        the batch-equivalence test compares against a
+        ``SingleBoxPlan`` run's perplexity on the same corpus."""
+        corpus = self.source.corpus
+        state = self.assembled_state()
+        llh = float(predictive_llh(state, corpus, self.hyper))
+        return math.exp(-llh / corpus.num_tokens)

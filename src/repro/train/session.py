@@ -103,6 +103,15 @@ class RunConfig:
       checkpoints (``launch/serve_lda.py`` loads these); 0 = final only.
     * ``train_checkpoint_dir``/``train_checkpoint_every`` — elastic
       training checkpoints (assignments; ``run()`` auto-resumes).
+    * ``window_docs``/``window_sweeps``/``decay``/``stream_source`` —
+      windowed online training (``repro.train.online.StreamingSession``,
+      DESIGN.md §7): docs per window, CGS sweeps per window visit, the
+      forgetting factor applied to the global counts at each window
+      transition, and the ``CorpusSource`` spec string
+      (``replay`` | ``libsvm:<path>`` | ``drift[:<seed>]``). In
+      streaming mode the cadences count *windows*, not iterations, and
+      ``num_iterations`` bounds the absolute window cursor (0 = run to
+      source exhaustion). Batch ``TrainSession`` ignores these fields.
     """
 
     # -- algorithm + sampler knobs (one SamplerKnobs derivation) ----------
@@ -140,6 +149,11 @@ class RunConfig:
     checkpoint_every: int = 0  # 0 = final only (when checkpoint_dir set)
     train_checkpoint_dir: Optional[str] = None  # elastic training ckpts
     train_checkpoint_every: int = 0
+    # -- streaming (repro.train.online.StreamingSession; DESIGN.md §7) ----
+    window_docs: int = 0  # docs per stream window (0 = batch training)
+    window_sweeps: int = 1  # CGS sweeps per window visit
+    decay: float = 0.0  # online forgetting: counts *= (1-decay) per window
+    stream_source: Optional[str] = None  # replay | libsvm:<path> | drift[:<seed>]
 
     def knobs(self) -> SamplerKnobs:
         return knobs_from(self)

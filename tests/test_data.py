@@ -5,7 +5,13 @@ import tempfile
 
 import numpy as np
 
-from repro.data import load_libsvm, save_libsvm, synthetic_corpus, synthetic_lda_corpus
+from repro.data import (
+    load_libsvm,
+    save_libsvm,
+    skip_libsvm_docs,
+    synthetic_corpus,
+    synthetic_lda_corpus,
+)
 
 
 def test_synthetic_power_law():
@@ -30,6 +36,58 @@ def test_libsvm_roundtrip():
         a = np.sort(np.asarray(c.word)[np.asarray(c.doc) == d])
         b = np.sort(np.asarray(c2.word)[np.asarray(c2.doc) == d])
         np.testing.assert_array_equal(a, b)
+
+
+def test_libsvm_windowed_read_matches_whole_file():
+    """Chunking one handle with max_docs reassembles the whole-file read
+    exactly (satellite contract for LibsvmStreamSource)."""
+    c = synthetic_corpus(2, num_docs=23, num_words=30, avg_doc_len=8)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "c.libsvm")
+        save_libsvm(c, path)
+        whole = load_libsvm(path, num_words=30)
+        words, docs, base = [], [], 0
+        with open(path) as f:
+            while True:
+                w = load_libsvm(f, num_words=30, max_docs=7)
+                if w.num_docs == 0:
+                    break
+                assert w.num_docs <= 7
+                assert int(w.doc.min()) == 0  # window-local doc ids
+                words.append(np.asarray(w.word))
+                docs.append(np.asarray(w.doc) + base)
+                base += w.num_docs
+    assert base == whole.num_docs == 23
+    np.testing.assert_array_equal(np.concatenate(words),
+                                  np.asarray(whole.word))
+    np.testing.assert_array_equal(np.concatenate(docs),
+                                  np.asarray(whole.doc))
+
+
+def test_libsvm_max_docs_on_path_and_skip():
+    c = synthetic_corpus(3, num_docs=10, num_words=20, avg_doc_len=6)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "c.libsvm")
+        save_libsvm(c, path)
+        head = load_libsvm(path, num_words=20, max_docs=4)
+        assert head.num_docs == 4
+        whole = load_libsvm(path, num_words=20)
+        np.testing.assert_array_equal(
+            np.asarray(head.word),
+            np.asarray(whole.word)[np.asarray(whole.doc) < 4],
+        )
+        # skip_libsvm_docs fast-forwards to the same boundary
+        with open(path) as f:
+            assert skip_libsvm_docs(f, 4) == 4
+            tail = load_libsvm(f, num_words=20)
+        assert tail.num_docs == 6
+        np.testing.assert_array_equal(
+            np.asarray(tail.word),
+            np.asarray(whole.word)[np.asarray(whole.doc) >= 4],
+        )
+        # skipping past EOF reports the shortfall
+        with open(path) as f:
+            assert skip_libsvm_docs(f, 99) == 10
 
 
 def test_generative_corpus_shapes():

@@ -194,6 +194,8 @@ def test_runconfig_json_roundtrip():
         rebuild_every=10, merge_every=20, merge_threshold=0.1,
         checkpoint_dir="/tmp/m", checkpoint_every=25,
         train_checkpoint_dir="/tmp/t", train_checkpoint_every=50,
+        window_docs=128, window_sweeps=3, decay=0.05,
+        stream_source="libsvm:/tmp/c.libsvm",
     )
     assert RunConfig.from_json(cfg.to_json()) == cfg
     # mesh_shape survives as a tuple, default None survives as None

@@ -1,0 +1,446 @@
+"""Streaming subsystem: corpus sources, windowed online training,
+checkpoint resume, and hot model reload in serving (DESIGN.md §7)."""
+import dataclasses
+import os
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import LDAHyperParams
+from repro.data import save_libsvm, synthetic_corpus, synthetic_lda_corpus
+from repro.data.stream import (
+    DriftSource,
+    LibsvmStreamSource,
+    ReplaySource,
+    make_source,
+)
+from repro.serving import FrozenLDAModel, LDAEngine, LDAServeConfig
+from repro.train.checkpoint import save_lda_model
+from repro.train.online import StreamingSession
+from repro.train.session import RunConfig, TrainSession
+
+
+def _stream_cfg(**kw):
+    kw.setdefault("num_iterations", 0)
+    kw.setdefault("window_docs", 10)
+    kw.setdefault("window_sweeps", 1)
+    return RunConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# corpus sources
+# ---------------------------------------------------------------------------
+
+def test_replay_source_partitions_corpus(tiny_corpus):
+    src = ReplaySource(tiny_corpus, window_docs=12, epochs=1)
+    wins = list(src.windows())
+    assert len(wins) == src.windows_per_epoch == 4  # ceil(40 / 12)
+    assert [w.index for w in wins] == [0, 1, 2, 3]
+    # windows cover the corpus exactly once, doc ids are window-local
+    assert sum(w.corpus.num_docs for w in wins) == tiny_corpus.num_docs
+    assert sum(w.corpus.num_tokens for w in wins) == tiny_corpus.num_tokens
+    seen = np.zeros(tiny_corpus.num_tokens, np.int32)
+    for w in wins:
+        assert w.corpus.num_words == tiny_corpus.num_words
+        assert int(w.corpus.doc.min()) == 0
+        assert int(w.corpus.doc.max()) < w.corpus.num_docs
+        seen[w.token_index] += 1
+        # token_index maps window tokens back to source edges exactly
+        np.testing.assert_array_equal(
+            np.asarray(w.corpus.word),
+            np.asarray(tiny_corpus.word)[w.token_index],
+        )
+    np.testing.assert_array_equal(seen, 1)
+
+
+def test_replay_source_epochs_reuse_uids(tiny_corpus):
+    src = ReplaySource(tiny_corpus, window_docs=15, epochs=2)
+    wins = list(src.windows())
+    assert len(wins) == src.num_windows == 6
+    assert [w.uid for w in wins] == ["w0", "w1", "w2"] * 2
+    assert [w.index for w in wins] == list(range(6))  # stream index advances
+    # resume contract: start=k yields the identical tail
+    tail = list(src.windows(start=4))
+    assert [w.index for w in tail] == [4, 5]
+    np.testing.assert_array_equal(
+        np.asarray(tail[0].corpus.word), np.asarray(wins[4].corpus.word)
+    )
+
+
+def test_libsvm_stream_source_windows_and_resume():
+    c = synthetic_corpus(5, num_docs=17, num_words=25, avg_doc_len=6)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "c.libsvm")
+        save_libsvm(c, path)
+        src = LibsvmStreamSource(path, window_docs=5, num_words=25)
+        wins = list(src.windows())
+        assert [w.corpus.num_docs for w in wins] == [5, 5, 5, 2]
+        assert all(w.corpus.num_words == 25 for w in wins)
+        assert sum(w.corpus.num_tokens for w in wins) == c.num_tokens
+        # resume fast-forwards without re-reading earlier windows
+        tail = list(src.windows(start=2))
+        assert [w.index for w in tail] == [2, 3]
+        np.testing.assert_array_equal(
+            np.asarray(tail[0].corpus.word), np.asarray(wins[2].corpus.word)
+        )
+    with pytest.raises(ValueError, match="num_words"):
+        LibsvmStreamSource("x", window_docs=5, num_words=0)
+
+
+def test_drift_source_deterministic_resume():
+    src = DriftSource(seed=7, window_docs=6, num_windows=5, num_words=30)
+    a = list(src.windows())
+    assert len(a) == 5
+    b = list(src.windows(start=3))  # replays the phi chain silently
+    assert [w.index for w in b] == [3, 4]
+    for wa, wb in zip(a[3:], b):
+        np.testing.assert_array_equal(
+            np.asarray(wa.corpus.word), np.asarray(wb.corpus.word)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(wa.corpus.doc), np.asarray(wb.corpus.doc)
+        )
+    # the stream actually drifts: consecutive windows differ
+    assert not np.array_equal(
+        np.asarray(a[0].corpus.word), np.asarray(a[1].corpus.word)
+    )
+
+
+def test_make_source_specs(tiny_corpus):
+    s = make_source("replay", 10, corpus=tiny_corpus, epochs=2)
+    assert isinstance(s, ReplaySource) and s.epochs == 2
+    s = make_source("drift:11", 8, num_words=50, num_windows=3)
+    assert isinstance(s, DriftSource) and s.seed == 11
+    s = make_source("libsvm:/tmp/x.libsvm", 8, num_words=50)
+    assert isinstance(s, LibsvmStreamSource) and s.path == "/tmp/x.libsvm"
+    with pytest.raises(ValueError, match="unknown stream_source"):
+        make_source("kafka:topic", 8)
+    with pytest.raises(ValueError, match="needs a corpus"):
+        make_source("replay", 8)
+
+
+# ---------------------------------------------------------------------------
+# windowed online training
+# ---------------------------------------------------------------------------
+
+def test_windowed_replay_matches_batch_trend(tiny_corpus, tiny_hyper):
+    """Acceptance: decay=0 replay rotation reproduces the batch
+    SingleBoxPlan perplexity trend — same corpus, same total sweep
+    budget, full-corpus perplexity within a trend-level band."""
+    iters = 10
+    batch = TrainSession(
+        tiny_corpus, tiny_hyper,
+        RunConfig(algorithm="zen", num_iterations=iters),
+    )
+    state = batch.init(jax.random.key(0))
+    ppl0 = batch.perplexity(state)
+    state = batch.run(state=state)
+    ppl_batch = batch.perplexity(state)
+    assert ppl_batch < ppl0  # batch run converges on this corpus
+
+    src = ReplaySource(tiny_corpus, window_docs=10, epochs=iters)
+    sess = StreamingSession(src, tiny_hyper, _stream_cfg(algorithm="zen"))
+    metrics = []
+    sess.run(jax.random.key(0), callback=lambda s, m: metrics.append(m))
+    assert sess.windows_done == src.num_windows
+    ppl_stream = sess.full_perplexity()
+    # same trend: converged well below the random-init level, and within
+    # a band of the batch endpoint (different sweep order => not equal)
+    assert ppl_stream < 0.6 * ppl0
+    assert abs(ppl_stream - ppl_batch) / ppl_batch < 0.15
+    # per-window perplexity improves epoch over epoch
+    first_epoch = np.mean([m["perplexity"] for m in metrics[:4]])
+    last_epoch = np.mean([m["perplexity"] for m in metrics[-4:]])
+    assert last_epoch < first_epoch
+
+
+def test_stream_counts_stay_consistent(tiny_corpus, tiny_hyper):
+    """decay=0 replay: after any number of windows the global counts hold
+    exactly the corpus tokens seen so far, and n_k == n_wk.sum(0)."""
+    src = ReplaySource(tiny_corpus, window_docs=10, epochs=2)
+    sess = StreamingSession(src, tiny_hyper, _stream_cfg())
+    tokens_seen = 0
+    for w in src.windows():
+        sess.run_window(w)
+        if w.index < src.windows_per_epoch:
+            tokens_seen += w.corpus.num_tokens
+        nwk = np.asarray(sess.n_wk)
+        np.testing.assert_array_equal(np.asarray(sess.n_k), nwk.sum(0))
+        assert nwk.sum() == tokens_seen
+
+
+def test_decay_mode_forgets(tiny_hyper):
+    src = DriftSource(seed=1, window_docs=8, num_windows=4, num_words=40,
+                      num_topics=6)
+    cfg = _stream_cfg(window_docs=8, decay=0.5, window_sweeps=2)
+    sess = StreamingSession(src, tiny_hyper, cfg)
+    sess.run(jax.random.key(2))
+    assert not sess._retain and not sess._retained  # nothing retained
+    nwk = np.asarray(sess.n_wk)
+    np.testing.assert_array_equal(np.asarray(sess.n_k), nwk.sum(0))
+    # heavy decay: resident mass is far below the 4-window token total,
+    # bounded by window + geometric tail of earlier windows
+    per_window = src.window_docs * src.avg_doc_len
+    assert nwk.sum() < 2.5 * per_window
+
+
+def test_streaming_session_validation(tiny_corpus, tiny_hyper):
+    src = ReplaySource(tiny_corpus, window_docs=10)
+    with pytest.raises(ValueError, match="single-box"):
+        StreamingSession(src, tiny_hyper, _stream_cfg(mesh_shape=(1, 2)))
+    with pytest.raises(ValueError, match="decay"):
+        StreamingSession(src, tiny_hyper, _stream_cfg(decay=1.0))
+    with pytest.raises(ValueError, match="window_sweeps"):
+        StreamingSession(src, tiny_hyper, _stream_cfg(window_sweeps=0))
+
+
+# ---------------------------------------------------------------------------
+# mid-stream checkpoint resume
+# ---------------------------------------------------------------------------
+
+def _drift_run(cfg, tiny_hyper):
+    src = DriftSource(seed=9, window_docs=8, num_windows=6, num_words=40,
+                      num_topics=6)
+    sess = StreamingSession(src, tiny_hyper, cfg)
+    sess.run(jax.random.key(5))
+    return sess
+
+
+def test_checkpoint_resume_matches_uninterrupted_drift(tiny_hyper):
+    """Kill a windowed drift run after window 3, resume from the elastic
+    checkpoint, and land bit-identical to an uninterrupted run."""
+    full = _drift_run(_stream_cfg(window_docs=8, decay=0.1), tiny_hyper)
+    assert full.windows_done == 6
+    with tempfile.TemporaryDirectory() as td:
+        cfg = _stream_cfg(window_docs=8, decay=0.1,
+                          train_checkpoint_dir=td, train_checkpoint_every=1)
+        killed = _drift_run(
+            dataclasses.replace(cfg, num_iterations=3), tiny_hyper
+        )
+        assert killed.windows_done == 3
+        resumed = _drift_run(cfg, tiny_hyper)
+    assert resumed.windows_done == 6
+    np.testing.assert_array_equal(
+        np.asarray(resumed.n_wk), np.asarray(full.n_wk)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(resumed.n_k), np.asarray(full.n_k)
+    )
+
+
+def test_checkpoint_resume_restores_retained_assignments(
+    tiny_corpus, tiny_hyper
+):
+    """Rotation regime: the retained per-window z survives the
+    checkpoint, so a resumed replay run is bit-identical too."""
+    def run(cfg, limit=None):
+        src = ReplaySource(tiny_corpus, window_docs=10, epochs=2)
+        c = cfg if limit is None else dataclasses.replace(
+            cfg, num_iterations=limit
+        )
+        sess = StreamingSession(src, tiny_hyper, c)
+        sess.run(jax.random.key(3))
+        return sess
+
+    full = run(_stream_cfg())
+    assert full.windows_done == 8
+    with tempfile.TemporaryDirectory() as td:
+        cfg = _stream_cfg(train_checkpoint_dir=td, train_checkpoint_every=1)
+        killed = run(cfg, limit=5)  # mid-epoch-2: w0 already revisited
+        assert killed.windows_done == 5
+        resumed = run(cfg)
+    assert resumed.windows_done == 8
+    np.testing.assert_array_equal(
+        np.asarray(resumed.n_wk), np.asarray(full.n_wk)
+    )
+    assert sorted(resumed._retained) == sorted(full._retained)
+    for uid in full._retained:
+        np.testing.assert_array_equal(resumed._retained[uid],
+                                      full._retained[uid])
+    # and the reassembled full-corpus state matches bit-for-bit
+    assert resumed.full_perplexity() == pytest.approx(full.full_perplexity())
+
+
+# ---------------------------------------------------------------------------
+# hot model reload in serving
+# ---------------------------------------------------------------------------
+
+def _two_models(seed=0, num_words=50, k=5):
+    corpus, _ = synthetic_lda_corpus(seed, 30, num_words, k, 25)
+    hyper = LDAHyperParams(num_topics=k)
+    from repro.core import counts as counts_lib
+
+    z = jax.random.randint(jax.random.key(seed), (corpus.num_tokens,), 0, k,
+                           dtype=jnp.int32)
+    n_wk, _n_kd, n_k = counts_lib.build_counts(
+        corpus.word, corpus.doc, z, corpus.num_words, corpus.num_docs, k
+    )
+    m0 = FrozenLDAModel(n_wk=n_wk, n_k=n_k, hyper=hyper)
+    m1 = FrozenLDAModel(n_wk=n_wk * 3, n_k=n_k * 3, hyper=hyper)
+    return m0, m1, corpus
+
+
+def test_reload_version_tags_and_monotonicity():
+    m0, m1, corpus = _two_models()
+    eng = LDAEngine(m0, LDAServeConfig(buckets=(32,), max_batch=4,
+                                       num_sweeps=2))
+    assert eng.model_version == 0
+    assert eng.reload(m1) == 1
+    assert eng.model_version == 1 and eng.model is m1
+    with pytest.raises(ValueError, match="must increase"):
+        eng.reload(m0, version=1)
+    assert eng.reload(m0, version=7) == 7
+
+
+def test_inflight_finishes_on_admitted_model():
+    """A request in flight across reload() completes bit-identically to
+    an engine that never reloaded — it decodes under the model (and
+    version) it was admitted for."""
+    m0, m1, corpus = _two_models()
+    from repro.serving import docs_from_corpus
+
+    doc = docs_from_corpus(corpus)[0]
+    cfg = LDAServeConfig(buckets=(64,), max_batch=2, num_sweeps=6)
+    ref = LDAEngine(m0, cfg, seed=3)  # never reloads
+    t_ref = ref.submit_async(doc)
+    theta_ref = ref.result(t_ref)
+
+    eng = LDAEngine(m0, cfg, seed=3)
+    t0 = eng.submit_async(doc)
+    eng.step()  # admit + first sweep: now in flight
+    assert eng.poll(t0) == "admitted"
+    eng.reload(m1)
+    t1 = eng.submit_async(doc)  # queued behind the pinned old bucket
+    r0, r1 = eng.request(t0), eng.request(t1)
+    theta0 = eng.result(t0)
+    theta1 = eng.result(t1)
+    assert r0.model_version == 0 and r1.model_version == 1
+    np.testing.assert_array_equal(theta0, theta_ref)  # old model, bit-equal
+    assert not np.allclose(theta1, theta0)  # new model actually serves
+
+
+@pytest.mark.parametrize("mode", ["throughput", "latency"])
+def test_reload_atomic_under_background_ticker(mode):
+    """Acceptance: a live engine under a background ticker completes
+    every in-flight ticket across an atomic reload, with monotonically
+    non-decreasing version tags in submission order and both versions
+    observed."""
+    m0, m1, corpus = _two_models(seed=2)
+    from repro.serving import docs_from_corpus
+
+    docs = docs_from_corpus(corpus)
+    # one bucket => FIFO admission, so version tags must be monotonic in
+    # submission order (across buckets only per-bucket order is FIFO)
+    cfg = LDAServeConfig(buckets=(64,), max_batch=4, num_sweeps=4,
+                         mode=mode, rtlda_sweeps=2)
+    eng = LDAEngine(m0, cfg, seed=1)
+    eng.start(0.001)
+    try:
+        tickets = []
+        for i, d in enumerate(docs):
+            tickets.append(eng.submit_async(d))
+            if i == len(docs) // 2:
+                eng.reload(m1)
+            time.sleep(0.0005)
+        reqs = [eng.request(t) for t in tickets]
+        thetas = [eng.result(t, timeout=60) for t in tickets]
+    finally:
+        eng.stop()
+    # zero dropped / errored tickets
+    assert len(thetas) == len(docs)
+    assert all(th is not None and np.isfinite(th).all() for th in thetas)
+    versions = [r.model_version for r in reqs]
+    assert all(v in (0, 1) for v in versions)
+    assert versions == sorted(versions)  # monotonic in submission order
+    assert versions[0] == 0 and versions[-1] == 1  # both models served
+    assert eng.reloads == 1
+
+
+def test_watch_checkpoint_dir_hot_reloads():
+    m0, m1, _corpus = _two_models(seed=4)
+    with tempfile.TemporaryDirectory() as td:
+        save_lda_model(td, np.asarray(m0.n_wk), np.asarray(m0.n_k),
+                       m0.hyper, step=1)
+        eng = LDAEngine(m0, LDAServeConfig(buckets=(32,), max_batch=2))
+        eng.watch_checkpoint_dir(td, period=0.02, initial_step=1)
+        try:
+            time.sleep(0.08)
+            assert eng.model_version == 0  # step 1 already served
+            save_lda_model(td, np.asarray(m1.n_wk), np.asarray(m1.n_k),
+                           m1.hyper, step=2)
+            deadline = time.monotonic() + 10.0
+            while eng.model_version == 0 and time.monotonic() < deadline:
+                time.sleep(0.02)
+        finally:
+            eng.stop_watching()
+        assert eng.model_version == 1
+        np.testing.assert_array_equal(np.asarray(eng.model.n_wk),
+                                      np.asarray(m1.n_wk))
+        # idempotent stop
+        eng.stop_watching()
+
+
+# ---------------------------------------------------------------------------
+# the live pipeline, in-process: stream trainer writing, engine following
+# ---------------------------------------------------------------------------
+
+def test_live_pipeline_stream_to_follow(tiny_hyper):
+    """Streaming smoke (CI gate): drift source → 3 windows with model
+    checkpoints → a serving engine under a background ticker follows the
+    checkpoint dir across the swaps with zero dropped tickets."""
+    src = DriftSource(seed=12, window_docs=10, num_windows=3, num_words=40,
+                      num_topics=6)
+    with tempfile.TemporaryDirectory() as td:
+        cfg = _stream_cfg(window_docs=10, decay=0.05,
+                          checkpoint_dir=td, checkpoint_every=1)
+        sess = StreamingSession(src, tiny_hyper, cfg)
+        # commit window 0's model first so the engine has one to start on
+        sess.run_window(next(src.windows()))
+        sess.save_model()
+        eng = LDAEngine(
+            FrozenLDAModel.from_checkpoint(td),
+            LDAServeConfig(buckets=(32, 64), max_batch=4, num_sweeps=3),
+        )
+        eng.start(0.001)
+        eng.watch_checkpoint_dir(td, period=0.02, initial_step=1)
+        stop = threading.Event()
+        tickets, t_lock = [], threading.Lock()
+        rng = np.random.default_rng(0)
+
+        def client():
+            while not stop.is_set():
+                doc = rng.integers(0, 40, size=12).astype(np.int32)
+                with t_lock:
+                    tickets.append(eng.submit_async(doc))
+                time.sleep(0.002)
+
+        t = threading.Thread(target=client)
+        t.start()
+        try:
+            for w in src.windows(start=1):  # windows 1, 2
+                sess.run_window(w)
+                sess.save_model()
+            deadline = time.monotonic() + 20.0
+            while eng.model_version < 2 and time.monotonic() < deadline:
+                time.sleep(0.02)
+        finally:
+            stop.set()
+            t.join()
+            with t_lock:
+                reqs = [eng.request(tk) for tk in tickets]
+                thetas = [eng.result(tk, timeout=60) for tk in tickets]
+            eng.stop_watching()
+            eng.stop()
+    assert sess.windows_done == 3
+    assert eng.model_version == 2  # followed both new checkpoints
+    # zero dropped / errored tickets across both swaps
+    assert len(thetas) == len(tickets) and len(tickets) > 0
+    assert all(np.isfinite(th).all() for th in thetas)
+    versions = [r.model_version for r in reqs]
+    assert versions == sorted(versions)
+    assert versions[-1] >= 1  # requests decoded under a reloaded model
