@@ -122,11 +122,53 @@ def _frontier(model, docs):
         )
 
 
+def _sharded_and_replicas(model, docs):
+    """Scaling rows (DESIGN.md §5.4): sharded decode over the model axis
+    (skipped with a note on single-device hosts) and router replica
+    scaling — same load, 1 vs 2 replicas, docs/sec."""
+    import jax
+
+    from repro.serving import LDAEngine, LDARouter, LDAServeConfig
+
+    base = dict(buckets=(64, 256), max_batch=16, num_sweeps=10,
+                algorithm="zen_cdf")
+
+    n_dev = len(jax.devices())
+    if n_dev >= 2:
+        cfg = LDAServeConfig(mesh_shape=(1, 2), **base)
+        engine = LDAEngine(model, cfg, seed=0)
+        engine.warm()
+        t0 = time.perf_counter()
+        engine.infer_batch(docs)
+        dt = time.perf_counter() - t0
+        row("infer_sharded_zen_cdf_m2", dt * 1e6 / len(docs),
+            f"{len(docs) / dt:.1f} docs/s (2 word shards)")
+    else:
+        row("infer_sharded_zen_cdf_m2", float("nan"),
+            "skipped: 1 device (set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+
+    for replicas in (1, 2):
+        router = LDARouter(model, LDAServeConfig(**base),
+                           replicas=replicas, seed=0)
+        router.warm()
+        router.start(0.0005)
+        tickets = [router.submit_async(d) for d in docs]
+        t0 = time.perf_counter()
+        for t in tickets:
+            router.result(t)
+        dt = time.perf_counter() - t0
+        router.stop()
+        row(f"infer_router_r{replicas}", dt * 1e6 / len(docs),
+            f"{len(docs) / dt:.1f} docs/s ({replicas} replicas)")
+
+
 def main() -> None:
     model = _frozen_model()
     rng = np.random.default_rng(1)
     _throughput_sweep(model, _load(rng))
     _frontier(model, _load(rng, FRONTIER_DOCS))
+    _sharded_and_replicas(model, _load(rng))
 
 
 if __name__ == "__main__":

@@ -196,17 +196,34 @@ class SamplerBackend:
 
     # -- frozen-model serving (repro.serving.lda_engine) -------------------
     native_infer: bool = False
+    # names of ``prepare_infer`` aux leaves indexed by word rows along dim
+    # 0 (NamedTuple field names). The sharded serving path
+    # (``repro.serving.sharded``) uses this declaration to lay the frozen
+    # tables out over the mesh's model axis — word-indexed tables shard
+    # with the count rows, everything else replicates. Backends whose aux
+    # is None or purely topic-indexed leave it empty.
+    infer_aux_word_fields: tuple = ()
 
-    def prepare_infer(self, n_wk, n_k, hyper, knobs: SamplerKnobs) -> Any:
+    def prepare_infer(
+        self, n_wk, n_k, hyper, knobs: SamplerKnobs,
+        num_words_total: Optional[int] = None,
+    ) -> Any:
         """Freeze the trained model into a sampling-ready aux object.
 
         Called once when a serving engine is built; the result is passed
-        back into every ``infer_sweep``. The default needs no tables."""
+        back into every ``infer_sweep``. The default needs no tables.
+
+        ``num_words_total`` is the true (unsharded) vocabulary size W for
+        any table whose math involves ``W * beta`` — the mesh-capable
+        path mirroring ``cell_sweep``'s ``num_words_pad``: under sharded
+        serving ``n_wk`` is one shard's padded row block, so its leading
+        dim is *not* W. None (single-host) means ``n_wk.shape[0]``."""
         return None
 
     def infer_sweep(
         self, keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
         knobs: SamplerKnobs, aux: Any = None,
+        num_words_total: Optional[int] = None,
     ) -> jax.Array:
         """One frozen-model CGS sweep over a padded slot batch.
 
@@ -214,6 +231,17 @@ class SamplerBackend:
         (B, L) padded token rows; ``n_kd`` (B, K) per-slot doc-topic
         counts; ``n_wk``/``n_k`` the frozen trained model. Returns new
         topics (B, L) (padded positions produce garbage the engine masks).
+
+        ``num_words_total`` mirrors ``cell_sweep``'s ``num_words_pad``:
+        inside a sharded dispatch ``n_wk`` is the device's word-row block
+        and ``words`` are shard-local row ids with ``mask`` true only on
+        tokens the shard owns, so the ``W * beta`` denominator must come
+        from this argument, never from ``n_wk.shape[0]``. Single-host
+        callers omit it. Because per-slot keys are consumed at the full
+        (B, L) layout and draws are per-token, a shard that computes the
+        whole batch but keeps only its owned tokens draws bit-identically
+        to the single-host sweep — the property the sharded serve parity
+        test pins (``tests/test_sharded_serving.py``).
 
         Contract of the *default derivation* (the engine's tests rely on
         it): slot b consumes randomness only from ``keys[b]``, so results
@@ -233,7 +261,7 @@ class SamplerBackend:
         """
         return _dense_infer_sweep(
             keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
-            knobs.sampling_method,
+            knobs.sampling_method, num_words_total=num_words_total,
         )
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
@@ -246,7 +274,8 @@ class SamplerBackend:
 
 
 def _dense_infer_sweep(
-    keys, words, mask, z_old, n_kd, n_wk, n_k, hyper, method: str
+    keys, words, mask, z_old, n_kd, n_wk, n_k, hyper, method: str,
+    num_words_total: Optional[int] = None,
 ) -> jax.Array:
     """Default frozen-model sweep: dense phi rows, doc-side-only exclusion.
 
@@ -256,7 +285,8 @@ def _dense_infer_sweep(
     ``repro.core.inference.cgs_infer`` — tests enforce bit-equality.
     """
     k = hyper.num_topics
-    w_total = n_wk.shape[0]
+    w_total = (n_wk.shape[0] if num_words_total is None
+               else num_words_total)
     alpha_k = hyper.alpha_k(n_k)
     denom = n_k.astype(jnp.float32) + w_total * hyper.beta
 

@@ -228,6 +228,9 @@ class ZenCdf(CellBackend):
     """Precomputed-CDF ZenLDA; works single-box (one cell) and sharded."""
 
     native_infer = True
+    # the frozen tables' word-indexed leaves: under sharded serving the
+    # per-word CDF rows live with the word shard; t1/alpha_k replicate
+    infer_aux_word_fields = ("a_cdf", "a_mass")
 
     def resolve_cell_knobs(self, knobs: SamplerKnobs, hyper):
         return dataclasses.replace(
@@ -246,8 +249,12 @@ class ZenCdf(CellBackend):
             bt=knobs.bt, bk=knobs.bk,
         )
 
-    def prepare_infer(self, n_wk, n_k, hyper, knobs: SamplerKnobs):
-        w_total = n_wk.shape[0]
+    def prepare_infer(self, n_wk, n_k, hyper, knobs: SamplerKnobs,
+                      num_words_total=None):
+        # sharded builds pass the true W: n_wk is then one shard's row
+        # block, and the t1 denominator must still be N_k + W*beta
+        w_total = (n_wk.shape[0] if num_words_total is None
+                   else num_words_total)
         alpha_k = hyper.alpha_k(n_k)
         t1 = 1.0 / (n_k.astype(jnp.float32) + w_total * hyper.beta)
         a_vals = (n_wk.astype(jnp.float32) + hyper.beta) * (alpha_k * t1)
@@ -258,10 +265,11 @@ class ZenCdf(CellBackend):
 
     def infer_sweep(
         self, keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
-        knobs: SamplerKnobs, aux=None,
+        knobs: SamplerKnobs, aux=None, num_words_total=None,
     ):
         if aux is None:
-            aux = self.prepare_infer(n_wk, n_k, hyper, knobs)
+            aux = self.prepare_infer(n_wk, n_k, hyper, knobs,
+                                     num_words_total=num_words_total)
         return zen_cdf_infer_sweep(
             keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
             knobs.max_kd or DEFAULT_MAX_KD, aux,

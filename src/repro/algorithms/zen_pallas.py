@@ -40,7 +40,8 @@ class ZenPallas(CellBackend):
 
     native_infer = True
 
-    def prepare_infer(self, n_wk, n_k, hyper, knobs: SamplerKnobs):
+    def prepare_infer(self, n_wk, n_k, hyper, knobs: SamplerKnobs,
+                      num_words_total=None):
         """Freeze the per-topic serving vectors (see
         :class:`FrozenPallasModel`). The count rows themselves stay in
         the engine's ``FrozenLDAModel`` — the kernel gathers them
@@ -53,7 +54,7 @@ class ZenPallas(CellBackend):
 
     def infer_sweep(
         self, keys, words, mask, z_old, n_kd, n_wk, n_k, hyper,
-        knobs: SamplerKnobs, aux=None,
+        knobs: SamplerKnobs, aux=None, num_words_total=None,
     ):
         """Frozen-model serving through the dedicated kernel variant
         (``kernels.zen_sampler._zen_infer_kernel``).
@@ -92,7 +93,10 @@ class ZenPallas(CellBackend):
         ).reshape(-1)  # (B*L,) int32, counter-based in (slot key, pos)
 
         # w_beta stays a static python float (jit static arg), so it is
-        # derived from shapes/hyper here, never threaded through the aux
+        # derived from shapes/hyper here, never threaded through the aux;
+        # sharded dispatch passes the true W (n_wk is then a row block)
+        w_total = (n_wk.shape[0] if num_words_total is None
+                   else num_words_total)
         if kernel_dispatch(knobs.kernels):
             # fused gather+sample: scalar-prefetched word/slot ids, count
             # rows tiled from the resident matrices — no (B*L, K) gathered
@@ -100,14 +104,14 @@ class ZenPallas(CellBackend):
             out = zen_fused_infer_sample(
                 n_wk.astype(jnp.int32), n_kd.astype(jnp.int32), w, slot, z,
                 seeds, aux.alpha_k, aux.n_k_f,
-                beta=hyper.beta, w_beta=n_wk.shape[0] * hyper.beta,
+                beta=hyper.beta, w_beta=w_total * hyper.beta,
                 bt=knobs.bt, bk=knobs.bk,
             )
         else:
             out = zen_infer_sample(
                 n_wk[w].astype(jnp.int32), n_kd[slot].astype(jnp.int32), z,
                 seeds, aux.alpha_k, aux.n_k_f,
-                beta=hyper.beta, w_beta=n_wk.shape[0] * hyper.beta,
+                beta=hyper.beta, w_beta=w_total * hyper.beta,
                 bt=knobs.bt, bk=knobs.bk,
             )
         return out.reshape(b, l)

@@ -72,11 +72,19 @@ class CorpusSource:
 
     ``replays`` declares whether a uid can come around more than once
     (only then is retaining per-window assignments worthwhile).
+    ``supports_doc_resume`` declares that ``windows`` accepts a
+    ``start_docs`` cursor — the exact number of documents already
+    consumed — and resumes there instead of assuming every prior window
+    was full. Sources that derive windows deterministically from the
+    index alone (replay/drift) don't need it; a tailing file source does:
+    its final window may be truncated at EOF, so ``start * window_docs``
+    over-skips once the file grows (see :class:`LibsvmStreamSource`).
     """
 
     num_words: int
     window_docs: int
     replays: bool = False
+    supports_doc_resume: bool = False
 
     def windows(self, start: int = 0) -> Iterator[Window]:
         raise NotImplementedError
@@ -149,8 +157,17 @@ class LibsvmStreamSource(CorpusSource):
     window is resident. ``num_words`` is required — a chunked read cannot
     infer the global vocabulary from one window (the stability
     contract). ``windows(start=k)`` fast-forwards by skipping
-    ``k * window_docs`` documents without materializing them.
+    ``k * window_docs`` documents without materializing them — unless
+    the caller passes ``start_docs``, the exact document cursor, which
+    is the correct resume point when the file ended mid-window on the
+    previous run: a truncated final window consumed fewer than
+    ``window_docs`` documents, so the window-count arithmetic would
+    over-skip (dropping documents appended since) while a checkpoint
+    that predates the partial window would re-read it. The streaming
+    session checkpoints this cursor (``supports_doc_resume``).
     """
+
+    supports_doc_resume = True
 
     def __init__(self, path: str, window_docs: int, num_words: int):
         if window_docs <= 0:
@@ -164,10 +181,14 @@ class LibsvmStreamSource(CorpusSource):
         self.window_docs = int(window_docs)
         self.num_words = int(num_words)
 
-    def windows(self, start: int = 0) -> Iterator[Window]:
+    def windows(
+        self, start: int = 0, start_docs: Optional[int] = None
+    ) -> Iterator[Window]:
         with open(self.path) as f:
-            if start:
-                skip_libsvm_docs(f, start * self.window_docs)
+            skip = (start * self.window_docs if start_docs is None
+                    else int(start_docs))
+            if skip:
+                skip_libsvm_docs(f, skip)
             index = start
             while True:
                 cw = load_libsvm(

@@ -11,7 +11,8 @@ through the async ticket front.
         [--corpus path.libsvm | --synthetic-docs 64] \
         [--algorithm zen] [--buckets 32,64,128,256] [--max-batch 32] \
         [--sweeps 10] [--rtlda-sweeps 2] [--burn-in -1] [--thin 1] \
-        [--tick-period 0] [--max-slot-wait 0] [--eval] [--show 5]
+        [--tick-period 0] [--max-slot-wait 0] [--eval] [--show 5] \
+        [--mesh-shape 1,2] [--replicas 1]
 
 Every document goes through ``submit_async`` -> ``result``, so the driver
 reports per-request latency percentiles (p50/p99 of submit-to-done) next
@@ -27,6 +28,13 @@ every ``--watch-period`` seconds and hot-reloads each new model the
 trainer commits (``launch/train.py --stream`` is the producing half); the
 query load replays for ``--rounds`` rounds, printing the model versions
 each round's requests decoded under.
+
+Scaling flags (DESIGN.md §5.4): ``--mesh-shape 1,m`` serves the model
+*sharded* — word rows laid over an m-way device mesh, every bucket sweep
+a ``shard_map`` dispatch; ``--replicas n`` fronts n engine replicas with
+the load-balancing :class:`~repro.serving.LDARouter` (one ticket
+namespace, broadcast reloads). The two compose: each replica decodes
+against the sharded model.
 """
 import argparse
 import time
@@ -78,6 +86,11 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=1,
                     help="serve the query load this many rounds (pair with "
                          "--follow to observe reloads between rounds)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="serve the model sharded over a device mesh, "
+                         "e.g. 1,2 (data dim must be 1; throughput mode)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the serving router")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -89,6 +102,7 @@ def main() -> None:
     from repro.serving import (
         FrozenLDAModel,
         LDAEngine,
+        LDARouter,
         LDAServeConfig,
         doc_completion_perplexity,
         docs_from_corpus,
@@ -127,17 +141,25 @@ def main() -> None:
         rtlda_sweeps=args.rtlda_sweeps,
         tick_period=args.tick_period,
         max_slot_wait=args.max_slot_wait,
+        mesh_shape=(tuple(int(d) for d in args.mesh_shape.split(","))
+                    if args.mesh_shape else None),
     )
-    engine = LDAEngine(model, cfg, seed=args.seed)
+    engine = LDARouter(model, cfg, replicas=args.replicas, seed=args.seed)
     plan = (f"rtlda_sweeps={cfg.rtlda_sweeps} (deterministic)"
             if args.mode == "latency" else
             f"algorithm={args.algorithm} sweeps={cfg.num_sweeps}")
     print(f"engine: mode={args.mode} {plan} buckets={cfg.buckets} "
-          f"max_batch={cfg.max_batch}")
+          f"max_batch={cfg.max_batch} replicas={args.replicas}")
+    if cfg.mesh_shape is not None:
+        sharded = engine.model  # ShardedFrozenLDAModel after wrap
+        print(f"sharded: {sharded.num_shards} word shards x "
+              f"{sharded.words_per_shard} rows "
+              f"(W={sharded.num_words} padded to "
+              f"{sharded.num_shards * sharded.words_per_shard})")
 
     # warm every bucket's jit cache (one doc per width) so the latency
     # distribution reflects steady-state serving, not XLA compilation
-    engine.infer_batch([np.zeros(bl, np.int32) for bl in cfg.buckets])
+    engine.warm()
 
     if args.tick_period > 0:
         engine.start(args.tick_period)

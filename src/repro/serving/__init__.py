@@ -1,5 +1,6 @@
 from repro.serving.engine import ServeConfig, ServingEngine  # noqa: F401
 from repro.serving.lda_engine import (  # noqa: F401
+    CheckpointWatcher,
     FrozenLDAModel,
     InferRequest,
     LDAEngine,
@@ -8,3 +9,5 @@ from repro.serving.lda_engine import (  # noqa: F401
     docs_from_corpus,
     latency_percentile,
 )
+from repro.serving.router import LDARouter  # noqa: F401
+from repro.serving.sharded import ShardedFrozenLDAModel  # noqa: F401

@@ -63,9 +63,10 @@ is numpy, the oracle's is XLA; the count inputs are integer-identical)
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +76,14 @@ from repro import algorithms
 from repro.algorithms import SamplerKnobs
 from repro.core.inference import rtlda_assign
 from repro.core.types import LDAHyperParams
+from repro.serving.sharded import (
+    ShardedFrozenLDAModel,
+    layout_key,
+    make_sharded_sweep_fn,
+    sharded_prepare_infer,
+)
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,6 +176,14 @@ class LDAServeConfig:
     saturated bucket — a request that has waited that many ticks for its
     preferred (smallest-fit) bucket may spill into any wider bucket with
     a free slot (0 = strict smallest-fit forever).
+
+    Sharded serving (DESIGN.md §5.4): ``mesh_shape`` = ``(1, m)`` lays
+    the frozen model's word rows over an ``m``-way ``model`` axis
+    (:class:`~repro.serving.sharded.ShardedFrozenLDAModel`) and runs
+    every bucket sweep as a ``shard_map`` dispatch. The data dim must be
+    1 — replica parallelism comes from ``serving.router.LDARouter``, not
+    a data axis — and latency mode (RT-LDA) does not shard. ``None``
+    (default) serves single-host.
     """
 
     buckets: Tuple[int, ...] = (32, 64, 128, 256)
@@ -182,6 +199,7 @@ class LDAServeConfig:
     tick_period: float = 0.0  # background ticker cadence, s (0 = 1 ms)
     max_slot_wait: int = 0  # ticks before bucket spill (0 = never spill)
     kernels: str = "auto"  # Pallas kernel dispatch: auto | on | off
+    mesh_shape: Optional[Tuple[int, int]] = None  # (1, m) word shards
 
     def knobs(self) -> SamplerKnobs:
         return SamplerKnobs(
@@ -277,6 +295,102 @@ class _Bucket:
         return sum(r is not None for r in self.active)
 
 
+class CheckpointWatcher:
+    """Poll a model-checkpoint directory and push every new committed
+    step through ``reload_fn`` — the consuming half of the live
+    train→serve pipeline, shared by :class:`LDAEngine` and
+    ``serving.router.LDARouter``.
+
+    Failure policy (the old inline watcher swallowed *every* OSError/
+    ValueError/KeyError forever, so a corrupt checkpoint looked exactly
+    like an empty directory): a load failure is **benign** only while
+    nothing is committed yet (``FileNotFoundError`` with no committed
+    step dirs — the trainer simply hasn't written one). Anything else —
+    a committed step that fails to load (truncated leaf, bad manifest),
+    or repeated errors with committed steps present — is a real failure:
+    it is retried up to ``max_failures`` consecutive times with a logged
+    warning each, then the watcher gives up. The last error is surfaced
+    on :attr:`error` and returned by :meth:`stop` (and by the owners'
+    ``stop_watching()`` / ``watch_error``); a successful load clears it
+    and resets the retry budget.
+    """
+
+    def __init__(
+        self,
+        reload_fn: Callable[["FrozenLDAModel"], Any],
+        directory: str,
+        period: float = 1.0,
+        initial_step: Optional[int] = None,
+        max_failures: int = 8,
+    ):
+        self.reload_fn = reload_fn
+        self.directory = directory
+        self.period = period
+        self.max_failures = max_failures
+        self.error: Optional[Exception] = None
+        self.failures = 0  # consecutive
+        self.last_step = initial_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._loop, name="lda-ckpt-watcher", daemon=True
+        )
+
+    def start(self) -> "CheckpointWatcher":
+        self._thread.start()
+        return self
+
+    def is_alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def stop(self) -> Optional[Exception]:
+        """Stop polling; returns the last load error (None = healthy)."""
+        self._stop.set()
+        self._thread.join()
+        return self.error
+
+    def _loop(self) -> None:
+        from repro.train.checkpoint import committed_steps, load_lda_model
+
+        while not self._stop.is_set():
+            try:
+                n_wk, n_k, hyper, _meta, step = load_lda_model(
+                    self.directory
+                )
+            except (OSError, ValueError, KeyError) as exc:
+                if (isinstance(exc, FileNotFoundError)
+                        and not committed_steps(self.directory)):
+                    # benign: nothing committed yet — keep waiting, and
+                    # don't let an empty dir burn the retry budget
+                    self.failures = 0
+                else:
+                    self.failures += 1
+                    self.error = exc
+                    logger.warning(
+                        "checkpoint watch of %r: load failed (%d/%d): %s",
+                        self.directory, self.failures, self.max_failures,
+                        exc,
+                    )
+                    if self.failures >= self.max_failures:
+                        logger.warning(
+                            "checkpoint watch of %r: giving up after %d "
+                            "consecutive failures",
+                            self.directory, self.failures,
+                        )
+                        return
+                self._stop.wait(self.period)
+                continue
+            self.failures = 0
+            self.error = None
+            if self.last_step is None or step > self.last_step:
+                self.reload_fn(FrozenLDAModel(
+                    n_wk=jnp.asarray(n_wk, jnp.int32),
+                    n_k=jnp.asarray(n_k, jnp.int32),
+                    hyper=hyper,
+                ))
+                self.last_step = step
+            self._stop.wait(self.period)
+
+
 class LDAEngine:
     """Continuously-admitting batched frozen-model inference.
 
@@ -303,6 +417,24 @@ class LDAEngine:
         self.cfg = cfg
         self.backend = algorithms.get(cfg.algorithm)
         self._knobs = cfg.knobs()
+        self._mesh = None
+        if cfg.mesh_shape is not None:
+            if cfg.mode == "latency":
+                raise ValueError(
+                    "latency mode (RT-LDA) does not shard: drop "
+                    "mesh_shape or serve mode='throughput'"
+                )
+            if len(cfg.mesh_shape) != 2 or cfg.mesh_shape[0] != 1:
+                raise ValueError(
+                    f"serving mesh_shape must be (1, m) — word rows shard "
+                    f"over the model axis, replicas come from the router "
+                    f"— got {cfg.mesh_shape!r}"
+                )
+            from repro.utils import compat
+
+            self._mesh = compat.make_mesh(
+                tuple(cfg.mesh_shape), ("data", "model")
+            )
         self._current = self._build_slot(model, version=0)
         self._buckets = {
             length: _Bucket(length, cfg.max_batch, model.num_topics)
@@ -322,8 +454,7 @@ class LDAEngine:
         self._ticker: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
         # checkpoint watcher (watch_checkpoint_dir)
-        self._watcher: Optional[threading.Thread] = None
-        self._watch_stop = threading.Event()
+        self._watcher: Optional[CheckpointWatcher] = None
 
     # -- the current model slot --------------------------------------------
     @property
@@ -344,16 +475,30 @@ class LDAEngine:
 
     def _build_slot(self, model: FrozenLDAModel, version: int,
                     share_from: Optional[_ModelSlot] = None) -> _ModelSlot:
+        if self._mesh is not None and not isinstance(
+            model, ShardedFrozenLDAModel
+        ):
+            model = ShardedFrozenLDAModel.shard(model, self._mesh)
         # latency mode never runs backend sweeps — skip table builds
         # (zen_cdf's prepare_infer materializes a (W, K) CDF)
-        aux = None if self.cfg.mode == "latency" else (
-            self.backend.prepare_infer(
+        if self.cfg.mode == "latency":
+            aux = None
+        elif isinstance(model, ShardedFrozenLDAModel):
+            aux = sharded_prepare_infer(self.backend, model, self._knobs)
+        else:
+            aux = self.backend.prepare_infer(
                 model.n_wk, model.n_k, model.hyper, self._knobs
             )
-        )
         # the jitted per-bucket programs close over hyper only (counts
-        # and tables are traced arguments) — same hyper, same programs
-        share = share_from is not None and share_from.model.hyper == model.hyper
+        # and tables are traced arguments) — same hyper, same programs.
+        # Sharded programs additionally close over the static row layout
+        # (words_per_shard / W / shard count), so the caches only carry
+        # across reloads that keep it.
+        share = (
+            share_from is not None
+            and share_from.model.hyper == model.hyper
+            and layout_key(share_from.model) == layout_key(model)
+        )
         return _ModelSlot(
             model=model,
             aux=aux,
@@ -404,16 +549,21 @@ class LDAEngine:
         directory: str,
         period: float = 1.0,
         initial_step: Optional[int] = None,
+        max_failures: int = 8,
     ) -> None:
         """Poll a model-checkpoint directory and reload every new step.
 
         The consuming half of the live pipeline (``launch/train.py
-        --stream`` writes steps, this follows them): a daemon thread
-        checks ``directory`` every ``period`` seconds for a committed
-        ``save_lda_model`` checkpoint with a step newer than the last one
-        seen and hot-:meth:`reload`\\ s it. A missing or torn directory
-        is quietly retried. Idempotent while a watcher runs; stop with
-        :meth:`stop_watching`.
+        --stream`` writes steps, this follows them): a
+        :class:`CheckpointWatcher` daemon checks ``directory`` every
+        ``period`` seconds for a committed ``save_lda_model`` checkpoint
+        with a step newer than the last one seen and
+        hot-:meth:`reload`\\ s it. An empty directory is quietly
+        retried; a committed checkpoint that fails to load (truncated
+        leaf, torn manifest) is retried ``max_failures`` times with
+        logged warnings and then surfaced on :attr:`watch_error` (see
+        :class:`CheckpointWatcher` for the policy). Idempotent while a
+        watcher runs; stop with :meth:`stop_watching`.
 
         Args:
             directory: the ``checkpoint_dir`` a trainer writes model
@@ -423,46 +573,36 @@ class LDAEngine:
                 step the engine's construction model came from to avoid
                 one redundant reload); default reloads the first
                 checkpoint the watcher sees.
+            max_failures: consecutive real load failures before the
+                watcher gives up.
         """
-        from repro.train.checkpoint import load_lda_model
-
         with self._cv:
             if self._watcher is not None and self._watcher.is_alive():
                 return
-            self._watch_stop = threading.Event()
-            stop = self._watch_stop
+            self._watcher = CheckpointWatcher(
+                self.reload, directory, period=period,
+                initial_step=initial_step, max_failures=max_failures,
+            ).start()
 
-            def loop(last=initial_step):
-                while not stop.is_set():
-                    try:
-                        n_wk, n_k, hyper, _meta, step = load_lda_model(
-                            directory
-                        )
-                    except (OSError, ValueError, KeyError):
-                        step = None  # nothing committed yet / torn dir
-                    if step is not None and (last is None or step > last):
-                        self.reload(FrozenLDAModel(
-                            n_wk=jnp.asarray(n_wk, jnp.int32),
-                            n_k=jnp.asarray(n_k, jnp.int32),
-                            hyper=hyper,
-                        ))
-                        last = step
-                    stop.wait(period)
+    @property
+    def watch_error(self) -> Optional[Exception]:
+        """Last checkpoint-watcher load error (None = healthy / no
+        watcher). Non-None with a dead watcher means it gave up — the
+        engine keeps serving its current model, but the pipeline needs
+        an operator."""
+        watcher = self._watcher
+        return None if watcher is None else watcher.error
 
-            self._watcher = threading.Thread(
-                target=loop, name="lda-engine-watcher", daemon=True
-            )
-            self._watcher.start()
-
-    def stop_watching(self) -> None:
+    def stop_watching(self) -> Optional[Exception]:
         """Stop the checkpoint watcher (no-op if none is running). The
-        currently-loaded model keeps serving."""
+        currently-loaded model keeps serving. Returns the watcher's last
+        load error, None when it was healthy (or never ran)."""
         watcher = self._watcher
         if watcher is None:
-            return
-        self._watch_stop.set()
-        watcher.join()
+            return None
+        err = watcher.stop()
         self._watcher = None
+        return err
 
     # -- request intake ----------------------------------------------------
     def submit(
@@ -651,11 +791,22 @@ class LDAEngine:
             return req.theta
 
     def cancel(self, ticket: int) -> bool:
-        """Abandon a ticket: drop it from the ticket table and, if it is
-        still queued, from the admission queue (it will never decode).
+        """Abandon a ticket: drop it from the ticket table and from
+        wherever its request lives — the admission queue (it will never
+        decode) or, if it was already admitted, its bucket slot (the
+        slot is evacuated immediately).
 
-        An admitted request cannot be pulled out of its slot batch — it
-        finishes normally, but its result is discarded with the ticket.
+        Evacuating admitted requests matters beyond freeing a slot one
+        tick earlier: a bucket pins the model version its occupants were
+        admitted under, so a cancelled-but-still-decoding request used
+        to be a *zombie* — under an engine driven by cancel-then-reload
+        traffic it could keep its bucket on the old model arbitrarily
+        long, blocking admission there (``_admittable`` refuses
+        cross-version co-residency) while nobody was waiting for its
+        theta. Cancel and the stepping loop hold the same engine lock,
+        so the slot arrays are never mutated mid-sweep; a sweep already
+        dispatched just computes one masked-out garbage row.
+
         Call this for every ticket you stop waiting on (e.g. after a
         :meth:`result` timeout you don't intend to retry), or abandoned
         entries accumulate for the engine's lifetime.
@@ -669,7 +820,17 @@ class LDAEngine:
             req = self._tickets.pop(ticket, None)
             if req is None:
                 return False
-            if not req.done and not req.admitted:
+            if req.done:
+                return True
+            if req.admitted:
+                for bucket in self._buckets.values():
+                    for slot, r in enumerate(bucket.active):
+                        if r is req:
+                            bucket.active[slot] = None
+                            bucket.sweep_keys[slot] = None
+                            bucket.mask = bucket.mask.at[slot].set(False)
+                            return True
+            else:
                 self.queue = [r for r in self.queue if r.uid != ticket]
             return True
 
@@ -732,6 +893,23 @@ class LDAEngine:
             or any(b.num_active for b in self._buckets.values())
         )
 
+    @property
+    def load(self) -> int:
+        """Queued + in-flight request count — the admission-pressure
+        signal ``serving.router.LDARouter`` balances replicas on."""
+        with self._cv:
+            return len(self.queue) + sum(
+                b.num_active for b in self._buckets.values()
+            )
+
+    def warm(self) -> None:
+        """Compile every bucket's decode program before traffic arrives:
+        one minimal document per bucket width through the normal path,
+        so first-request latency never pays a jit trace."""
+        self.infer_batch(
+            [np.zeros(bl, np.int32) for bl in self.cfg.buckets]
+        )
+
     # -- admission ---------------------------------------------------------
     def _bucket_for(self, length: int) -> _Bucket:
         for bl in sorted(self._buckets):
@@ -790,7 +968,14 @@ class LDAEngine:
         l, k = bucket.length, bucket.slot_model.model.num_topics
         n = req.words.shape[0]
         words = np.zeros(l, np.int32)
-        words[:n] = req.words
+        placed_model = bucket.slot_model.model
+        if isinstance(placed_model, ShardedFrozenLDAModel):
+            # shard-space row ids, mapped at *placement* (not submit):
+            # req.words keep original ids, so a request admitted after a
+            # reload relabels through the new model's permutation
+            words[:n] = placed_model.relabel(req.words)
+        else:
+            words[:n] = req.words
         mask = np.zeros(l, bool)
         mask[:n] = True
         bucket.words = bucket.words.at[slot].set(jnp.asarray(words))
@@ -820,8 +1005,16 @@ class LDAEngine:
     def _sweep_fn(self, slot_model: _ModelSlot, length: int):
         """Throughput mode: one chain CGS sweep over a bucket's slots.
         Cached on the model slot (shared across reloads with equal
-        hyper — the counts are traced arguments)."""
+        hyper — the counts are traced arguments). Sharded slots get the
+        ``shard_map`` program instead — same signature, so the stepping
+        loop is layout-blind."""
         if length not in slot_model.sweep_fns:
+            if isinstance(slot_model.model, ShardedFrozenLDAModel):
+                slot_model.sweep_fns[length] = make_sharded_sweep_fn(
+                    self.backend, self._knobs, slot_model.model,
+                    slot_model.aux,
+                )
+                return slot_model.sweep_fns[length]
             backend, knobs = self.backend, self._knobs
             hyper = slot_model.model.hyper
 

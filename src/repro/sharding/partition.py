@@ -169,6 +169,37 @@ def param_shardings(params_shapes: Any, cfg: ArchConfig, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
+# row sharding for serving tables (LDA word-topic counts)
+# ---------------------------------------------------------------------------
+
+def shard_rows_balanced(
+    loads: np.ndarray, shards: int
+) -> Tuple[np.ndarray, int]:
+    """Load-balanced contiguous row layout for sharding a table over the
+    ``model`` axis: assign rows to ``shards`` bins by greedy LPT on
+    ``loads`` (the same heuristic ``core.graph.grid_partition`` uses for
+    word columns), then relabel so each bin's rows are contiguous and
+    every bin is padded to the max bin size.
+
+    Returns ``(perm, rows_per_shard)`` where ``perm[old_row]`` is the new
+    row index in the padded ``(shards * rows_per_shard, ...)`` layout.
+    Rows land in bin ``perm[r] // rows_per_shard``; pad rows (indices not
+    in ``perm``'s image) are left for the caller to zero-fill.
+    """
+    from repro.core.graph import _balanced_ranges
+
+    loads = np.asarray(loads, dtype=np.float64).reshape(-1)
+    assign = _balanced_ranges(loads, shards)
+    counts = np.bincount(assign, minlength=shards)
+    per = max(int(counts.max()), 1)
+    perm = np.empty(loads.shape[0], dtype=np.int64)
+    for b in range(shards):
+        ids = np.where(assign == b)[0]
+        perm[ids] = b * per + np.arange(ids.size)
+    return perm, per
+
+
+# ---------------------------------------------------------------------------
 # batch + cache shardings
 # ---------------------------------------------------------------------------
 

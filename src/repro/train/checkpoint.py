@@ -172,6 +172,40 @@ def load_lda_model(directory: str):
     return tree["n_wk"], tree["n_k"], hyper, meta, step
 
 
+def _parse_step(dirname: str) -> Optional[int]:
+    """``step_<n>`` -> n, or None for anything else (tmp dirs, stray
+    names like ``step_final``). Restores must never crash on a foreign
+    directory that happens to share the prefix."""
+    if not dirname.startswith("step_") or dirname.endswith(".tmp"):
+        return None
+    try:
+        return int(dirname[5:])
+    except ValueError:
+        return None
+
+
+def committed_steps(directory: str):
+    """All committed checkpoint dirs under ``directory`` as ``(step,
+    path)`` pairs, sorted **numerically by parsed step** — never
+    lexicographically by dirname, so step 10 restores after step 9 and
+    step 100 after step 99 (zero-padded names happen to sort either way,
+    but un-padded writers exist and the restore order must not depend on
+    the padding). Safe on a missing directory (returns [])."""
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return []
+    out = []
+    for d in names:
+        step = _parse_step(d)
+        full = os.path.join(directory, d)
+        if step is not None and os.path.exists(
+            os.path.join(full, "COMMITTED")
+        ):
+            out.append((step, full))
+    return sorted(out, key=lambda sp: sp[0])
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
@@ -184,16 +218,7 @@ class CheckpointManager:
         return path
 
     def _steps(self):
-        out = []
-        for d in sorted(os.listdir(self.directory)):
-            full = os.path.join(self.directory, d)
-            if (
-                d.startswith("step_")
-                and not d.endswith(".tmp")
-                and os.path.exists(os.path.join(full, "COMMITTED"))
-            ):
-                out.append((int(d[5:]), full))
-        return sorted(out)
+        return committed_steps(self.directory)
 
     def _gc(self):
         steps = self._steps()

@@ -106,6 +106,9 @@ class StreamingSession:
         self.n_wk = jnp.zeros((source.num_words, k), jnp.int32)
         self.n_k = jnp.zeros((k,), jnp.int32)
         self.windows_done = 0
+        # exact documents consumed — the resume cursor for sources whose
+        # final window may be truncated at EOF (supports_doc_resume)
+        self.docs_consumed = 0
         # rotation-regime assignment retention (host-side, uid-keyed)
         self._retain = bool(source.replays) and cfg.decay == 0.0
         self._retained: Dict[str, np.ndarray] = {}
@@ -194,6 +197,7 @@ class StreamingSession:
         if self._retain:
             self._retained[window.uid] = np.asarray(state.topic)
         self.windows_done = window.index + 1
+        self.docs_consumed += cw.num_docs
         return {
             "window": window.index,
             "uid": window.uid,
@@ -225,7 +229,14 @@ class StreamingSession:
             self._base_key = jax.random.key(0)
         self._maybe_restore()
         limit = cfg.num_iterations
-        for window in self.source.windows(start=self.windows_done):
+        src_kwargs = {}
+        if getattr(self.source, "supports_doc_resume", False):
+            # resume at the exact document cursor: a file source whose
+            # last window was truncated at EOF must neither re-read it
+            # nor skip documents appended since
+            src_kwargs["start_docs"] = self.docs_consumed
+        for window in self.source.windows(start=self.windows_done,
+                                          **src_kwargs):
             if limit and window.index >= limit:
                 break
             metrics = self.run_window(window)
@@ -292,6 +303,7 @@ class StreamingSession:
             "n_wk": np.asarray(jax.device_get(self.n_wk)),
             "n_k": np.asarray(jax.device_get(self.n_k)),
             "cursor": np.asarray(self.windows_done, np.int64),
+            "doc_cursor": np.asarray(self.docs_consumed, np.int64),
         }
         for uid, z in self._retained.items():
             tree[f"z:{uid}"] = z
@@ -313,6 +325,11 @@ class StreamingSession:
         self.n_wk = jnp.asarray(named["n_wk"], jnp.int32)
         self.n_k = jnp.asarray(named["n_k"], jnp.int32)
         self.windows_done = int(named["cursor"])
+        # pre-doc-cursor checkpoints: assume every window was full (the
+        # old arithmetic, still exact unless the run died mid-window)
+        self.docs_consumed = int(named.get(
+            "doc_cursor", self.windows_done * self.source.window_docs
+        ))
         self._retained = {
             name[2:]: np.asarray(arr, np.int32)
             for name, arr in named.items() if name.startswith("z:")

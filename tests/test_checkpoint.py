@@ -70,6 +70,32 @@ def test_gc_keeps_newest():
         assert steps == [3, 4]
 
 
+def test_step_ordering_numeric_across_digit_boundaries():
+    """Steps resolve numerically, never lexicographically: 9 -> 10 and
+    99 -> 100 survive un-padded dir names (where "step_100" < "step_99"
+    as strings), shuffled creation order, and a stray non-numeric
+    ``step_final`` dir that must be skipped, not crash the scan."""
+    from repro.train.checkpoint import committed_steps
+
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=100)
+        for s in (100, 9, 99, 10):  # shuffled creation order
+            mgr.save(s, _tree())
+        # un-padded writers exist: strip the zero padding off the two
+        # digit-boundary upper steps so lexicographic order inverts
+        for s in (99, 100):
+            os.rename(os.path.join(td, f"step_{s:08d}"),
+                      os.path.join(td, f"step_{s}"))
+        stray = os.path.join(td, "step_final")
+        os.makedirs(stray)
+        with open(os.path.join(stray, "COMMITTED"), "w") as f:
+            f.write("ok")
+
+        assert [s for s, _ in committed_steps(td)] == [9, 10, 99, 100]
+        got = mgr.restore_latest(_tree())
+        assert got is not None and got[2] == 100
+
+
 def test_lda_elastic_restore_rebuilds_counts(key, tiny_corpus, tiny_hyper):
     """The LDA checkpoint is (assignments, rng); counts rebuild identically
     for ANY partitioning — the elastic-rescale path (DESIGN.md §3.2)."""

@@ -213,6 +213,77 @@ def test_cancel_reaps_and_unqueues():
     assert eng.docs_done == 1 and not eng.queue
 
 
+def test_cancel_admitted_evacuates_slot_and_version_pin():
+    """A cancelled *admitted* request must not stay a zombie: its slot
+    empties immediately, which also releases the bucket's model-version
+    pin — the cancel-vs-admission race where a cancelled long chain kept
+    blocking post-reload admissions on a maxed-out bucket."""
+    model = _sharp_model()
+    model2 = _sharp_model(weight=50)
+    eng = LDAEngine(
+        model,
+        LDAServeConfig(buckets=(16,), max_batch=1, num_sweeps=500),
+        seed=0,
+    )
+    zombie = eng.submit_async(np.arange(6, dtype=np.int32))
+    eng.step()
+    assert eng.poll(zombie) == "admitted"
+    eng.reload(model2)
+    blocked = eng.submit_async(np.arange(6, 12, dtype=np.int32),
+                               num_sweeps=2)
+    eng.step()
+    # old-version occupant pins the only slot: no cross-version residency
+    assert eng.poll(blocked) == "queued"
+    assert eng.cancel(zombie) is True
+    eng.step()  # slot free -> admitted under the NEW version, same tick
+    req = eng.request(blocked)
+    assert req.admitted and req.model_version == 1
+    eng.result(blocked, timeout=60)
+    # the cancelled chain never completed and nothing lingers in-flight
+    assert eng.docs_done == 1 and not eng.queue
+    assert all(b.num_active == 0 for b in eng._buckets.values())
+
+
+def test_cancel_race_under_background_ticker():
+    """The threaded variant: cancels racing a live ticker's admissions
+    never strand slots or tickets — every surviving request completes,
+    every cancelled one is gone, and the engine fully drains."""
+    model = _sharp_model()
+    eng = LDAEngine(
+        model,
+        LDAServeConfig(buckets=(16,), max_batch=2, num_sweeps=20),
+        seed=0,
+    )
+    eng.start(0.0005)
+    try:
+        rng = np.random.default_rng(0)
+        tickets = [eng.submit_async(d) for d in _mixed_docs(rng, 24, hi=15)]
+        stop = threading.Event()
+
+        def cancel_evens():
+            for t in tickets[::2]:
+                eng.cancel(t)
+                time.sleep(0.002)
+            stop.set()
+
+        th = threading.Thread(target=cancel_evens)
+        th.start()
+        thetas = [eng.result(t, timeout=60) for t in tickets[1::2]]
+        th.join()
+    finally:
+        eng.stop()
+    assert all(t.shape == (model.num_topics,) for t in thetas)
+    for t in tickets[::2]:
+        with pytest.raises(KeyError):
+            eng.poll(t)
+    # drain completely: no zombie occupants left behind by the races
+    deadline = time.monotonic() + 30
+    while eng._pending() and time.monotonic() < deadline:
+        eng.step()
+    assert not eng.queue
+    assert all(b.num_active == 0 for b in eng._buckets.values())
+
+
 def test_out_of_order_completion():
     """A later-submitted short chain finishes before an earlier long one;
     results are retrievable in any order."""

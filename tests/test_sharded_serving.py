@@ -1,0 +1,296 @@
+"""Sharded model-parallel serving + the multi-engine router (DESIGN.md §5.4).
+
+The serve-path analogue of ``test_mesh_parity.py``: on a 2-device CPU mesh
+(subprocess — device count locks at first jax init) the sharded
+``infer_sweep`` dispatch must produce **bit-equal** thetas to the
+single-host engine for every native-infer backend, because per-slot keys
+are consumed at the full (B, L) layout and every draw is per-token (the
+``infer_sweep`` contract in ``algorithms/base.py``). The ticket-lifecycle
+invariants from the latency-serving and streaming suites (admitted-slot
+version pinning, zero dropped tickets under reload) are re-proven under
+sharded dispatch, and the router's admission contract (unique tickets,
+load spread, broadcast reload) is pinned single-process.
+"""
+import numpy as np
+import pytest
+
+from helpers import run_with_devices
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import LDAHyperParams
+from repro.serving import (
+    FrozenLDAModel,
+    LDAEngine,
+    LDARouter,
+    LDAServeConfig,
+    ShardedFrozenLDAModel,
+)
+
+SERVE_BACKENDS = ("zen", "zen_cdf", "zen_pallas")
+DOC_LENGTHS = (3, 9, 17, 1, 12, 30)
+
+
+def _model(seed=1, w=40, k=8):
+    n_wk = np.random.default_rng(seed).poisson(3.0, (w, k)).astype(np.int32)
+    return FrozenLDAModel(
+        n_wk=jnp.asarray(n_wk),
+        n_k=jnp.asarray(n_wk.sum(0).astype(np.int32)),
+        hyper=LDAHyperParams(num_topics=k, alpha=0.5, beta=0.1),
+    )
+
+
+def _docs(rng, w=40):
+    return [rng.integers(0, w, size=ln).astype(np.int32)
+            for ln in DOC_LENGTHS]
+
+
+# ---------------------------------------------------------------------------
+# 2-device mesh parity (subprocess)
+# ---------------------------------------------------------------------------
+
+_PARITY = """
+import warnings; warnings.filterwarnings('ignore')
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.types import LDAHyperParams
+from repro.serving import (FrozenLDAModel, LDAEngine, LDARouter,
+                           LDAServeConfig, ShardedFrozenLDAModel)
+
+assert len(jax.devices()) == 2
+rng = np.random.default_rng(0)
+W, K = 40, 8
+n_wk = np.random.default_rng(1).poisson(3.0, (W, K)).astype(np.int32)
+model = FrozenLDAModel(n_wk=jnp.asarray(n_wk),
+                       n_k=jnp.asarray(n_wk.sum(0).astype(np.int32)),
+                       hyper=LDAHyperParams(num_topics=K, alpha=0.5,
+                                            beta=0.1))
+docs = [rng.integers(0, W, size=l).astype(np.int32)
+        for l in (3, 9, 17, 1, 12, 30)]
+keys = [jax.random.key(100 + i) for i in range(len(docs))]
+algo = {algo!r}
+
+base = dict(buckets=(8, 32), max_batch=4, num_sweeps=5, algorithm=algo)
+single = LDAEngine(model, LDAServeConfig(**base), seed=0)
+t_single = np.stack([single.infer_batch([d], key=k)[0]
+                     for d, k in zip(docs, keys)])
+
+cfg = LDAServeConfig(mesh_shape=(1, 2), **base)
+sharded = LDAEngine(model, cfg, seed=0)
+sm = sharded.model
+assert isinstance(sm, ShardedFrozenLDAModel)
+assert sm.num_words == W and sm.num_shards == 2
+assert sm.n_wk.shape[0] == 2 * sm.words_per_shard
+# phi() inverts the relabeling: bit-equal to the single-host phi
+np.testing.assert_array_equal(np.asarray(sm.phi()),
+                              np.asarray(model.phi()))
+t_sharded = np.stack([sharded.infer_batch([d], key=k)[0]
+                      for d, k in zip(docs, keys)])
+np.testing.assert_array_equal(t_sharded, t_single)
+
+# the router composes with sharding: 2 replicas, each a sharded engine;
+# explicit per-request keys make routing irrelevant to the draws
+router = LDARouter(model, cfg, replicas=2, seed=0)
+t_router = np.stack([router.infer_batch([d], key=k)[0]
+                     for d, k in zip(docs, keys)])
+np.testing.assert_array_equal(t_router, t_single)
+print('PARITY_OK', algo)
+"""
+
+
+@pytest.mark.parametrize("algo", SERVE_BACKENDS)
+def test_sharded_serve_parity_2dev(algo):
+    out = run_with_devices(_PARITY.format(algo=algo), n_devices=2)
+    assert f"PARITY_OK {algo}" in out
+
+
+_RELOAD = """
+import warnings; warnings.filterwarnings('ignore')
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.types import LDAHyperParams
+from repro.serving import (FrozenLDAModel, LDAEngine, LDAServeConfig)
+
+hyper = LDAHyperParams(num_topics=8, alpha=0.5, beta=0.1)
+def mk(seed, scale):
+    # very different row masses => very different LPT permutations, so a
+    # relabel frozen at submit time would decode garbage after reload
+    rng = np.random.default_rng(seed)
+    n_wk = rng.poisson(scale, (40, 8)).astype(np.int32)
+    n_wk[rng.permutation(40)[:5]] += 200
+    return FrozenLDAModel(n_wk=jnp.asarray(n_wk),
+                          n_k=jnp.asarray(n_wk.sum(0).astype(np.int32)),
+                          hyper=hyper)
+
+m0, m1 = mk(1, 3.0), mk(2, 1.0)
+rng = np.random.default_rng(0)
+doc_a = rng.integers(0, 40, size=7).astype(np.int32)
+doc_b = rng.integers(0, 40, size=6).astype(np.int32)
+key_b = jax.random.key(77)
+
+cfg = LDAServeConfig(buckets=(8,), max_batch=1, num_sweeps=40,
+                     algorithm='zen_cdf', mesh_shape=(1, 2))
+eng = LDAEngine(m0, cfg, seed=0)
+ta = eng.submit_async(doc_a)
+eng.step()
+assert eng.poll(ta) == 'admitted'
+eng.reload(m1)
+tb = eng.submit_async(doc_b, key=key_b)
+eng.step()
+assert eng.poll(tb) == 'queued'  # old-version occupant pins the bucket
+ra, rb = eng.request(ta), eng.request(tb)  # refs survive the reap
+theta_a = eng.result(ta)
+theta_b = eng.result(tb)
+assert theta_a.shape == (8,)
+# A finished on the model it was admitted under; B on the reloaded one
+assert ra.model_version == 0 and rb.model_version == 1
+
+# zero dropped tickets, and B decoded under the NEW model's permutation:
+# bit-equal to a fresh sharded engine serving m1 with the same key
+fresh = LDAEngine(m1, cfg, seed=0)
+np.testing.assert_array_equal(theta_b, fresh.infer_batch([doc_b],
+                                                         key=key_b)[0])
+assert eng.model_version == 1
+print('RELOAD_OK')
+"""
+
+
+def test_sharded_reload_relabels_at_placement_2dev():
+    out = run_with_devices(_RELOAD, n_devices=2)
+    assert "RELOAD_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# single-process: config validation, 1-shard path, router contract
+# ---------------------------------------------------------------------------
+
+def test_mesh_shape_validation():
+    model = _model()
+    with pytest.raises(ValueError, match="latency"):
+        LDAEngine(model, LDAServeConfig(mode="latency", mesh_shape=(1, 1)))
+    with pytest.raises(ValueError, match=r"\(1, m\)"):
+        LDAEngine(model, LDAServeConfig(mesh_shape=(2, 1)))
+    with pytest.raises(ValueError, match=r"\(1, m\)"):
+        LDAEngine(model, LDAServeConfig(mesh_shape=(1, 2, 1)))
+
+
+def test_one_shard_mesh_matches_single_host():
+    """mesh_shape=(1, 1) runs the whole sharded machinery (relabel,
+    shard_map dispatch, psum combine) on one device — bit-equal to the
+    plain engine, so the sharded path is testable without a mesh."""
+    model = _model()
+    rng = np.random.default_rng(0)
+    docs = _docs(rng)
+    keys = [jax.random.key(100 + i) for i in range(len(docs))]
+    base = dict(buckets=(8, 32), max_batch=4, num_sweeps=5,
+                algorithm="zen_cdf")
+    single = LDAEngine(model, LDAServeConfig(**base), seed=0)
+    sharded = LDAEngine(model, LDAServeConfig(mesh_shape=(1, 1), **base),
+                        seed=0)
+    assert isinstance(sharded.model, ShardedFrozenLDAModel)
+    for d, k in zip(docs, keys):
+        np.testing.assert_array_equal(
+            sharded.infer_batch([d], key=k)[0],
+            single.infer_batch([d], key=k)[0],
+        )
+
+
+def test_sharded_model_relabel_and_phi():
+    model = _model()
+    mesh = LDAEngine(
+        model, LDAServeConfig(mesh_shape=(1, 1), algorithm="zen")
+    )._mesh
+    sm = ShardedFrozenLDAModel.shard(model, mesh)
+    # the permutation is a bijection [0, W) -> [0, W_pad)
+    assert len(set(sm.word_perm.tolist())) == model.num_words
+    ids = np.arange(model.num_words, dtype=np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(sm.n_wk)[sm.relabel(ids)], np.asarray(model.n_wk)
+    )
+    np.testing.assert_array_equal(np.asarray(sm.phi()),
+                                  np.asarray(model.phi()))
+
+
+def test_router_unique_tickets_and_load_spread():
+    model = _model()
+    router = LDARouter(
+        model,
+        LDAServeConfig(buckets=(8, 32), max_batch=2, num_sweeps=3,
+                       algorithm="zen"),
+        replicas=2, seed=0,
+    )
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, 40, size=6).astype(np.int32) for _ in range(8)]
+    tickets = [router.submit_async(d) for d in docs]
+    assert len(set(tickets)) == len(tickets)
+    # least-loaded admission alternates queue depth across replicas
+    assert all(e.load > 0 for e in router.engines)
+    thetas = np.stack([router.result(t) for t in tickets])
+    assert thetas.shape == (len(docs), model.num_topics)
+    np.testing.assert_allclose(thetas.sum(1), 1.0, rtol=1e-5)
+    assert router.docs_done == len(docs)
+    # every ticket was reaped: poll now raises
+    for t in tickets:
+        with pytest.raises(KeyError):
+            router.poll(t)
+
+
+def test_router_parity_with_explicit_keys():
+    """Explicit per-request keys make thetas routing-independent: the
+    router fleet reproduces a single engine bit-for-bit."""
+    model = _model()
+    cfg = LDAServeConfig(buckets=(8, 32), max_batch=2, num_sweeps=5,
+                         algorithm="zen")
+    router = LDARouter(model, cfg, replicas=3, seed=9)
+    single = LDAEngine(model, cfg, seed=0)
+    rng = np.random.default_rng(3)
+    docs = _docs(rng)
+    keys = [jax.random.key(500 + i) for i in range(len(docs))]
+    t_router = np.stack([router.infer_batch([d], key=k)[0]
+                         for d, k in zip(docs, keys)])
+    t_single = np.stack([single.infer_batch([d], key=k)[0]
+                         for d, k in zip(docs, keys)])
+    np.testing.assert_array_equal(t_router, t_single)
+
+
+def test_router_reload_broadcast_zero_drops():
+    """Reload mid-traffic broadcasts one version tag to every replica;
+    every outstanding ticket still completes (on its admitted version)."""
+    model = _model(seed=1)
+    model2 = _model(seed=2)
+    router = LDARouter(
+        model,
+        LDAServeConfig(buckets=(8,), max_batch=1, num_sweeps=30,
+                       algorithm="zen"),
+        replicas=2, seed=0,
+    )
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, 40, size=5).astype(np.int32) for _ in range(4)]
+    tickets = [router.submit_async(d) for d in docs]
+    for e in router.engines:
+        e.step()  # admit one per replica, pre-reload
+    v = router.reload(model2)
+    assert v == 1
+    assert [e.model_version for e in router.engines] == [1, 1]
+    thetas = [router.result(t) for t in tickets]
+    assert all(th.shape == (model.num_topics,) for th in thetas)
+    assert router.docs_done == len(docs)
+
+
+def test_router_cancel_delegates_and_frees_slot():
+    model = _model()
+    router = LDARouter(
+        model,
+        LDAServeConfig(buckets=(8,), max_batch=1, num_sweeps=50,
+                       algorithm="zen"),
+        replicas=1, seed=0,
+    )
+    rng = np.random.default_rng(0)
+    ta = router.submit_async(rng.integers(0, 40, 5).astype(np.int32))
+    router.engines[0].step()
+    assert router.poll(ta) == "admitted"
+    assert router.cancel(ta) is True
+    assert router.cancel(ta) is False  # reaped: idempotent False
+    # slot freed: a new request admits immediately
+    tb = router.submit_async(rng.integers(0, 40, 5).astype(np.int32))
+    router.engines[0].step()
+    assert router.poll(tb) == "admitted"

@@ -444,3 +444,98 @@ def test_live_pipeline_stream_to_follow(tiny_hyper):
     versions = [r.model_version for r in reqs]
     assert versions == sorted(versions)
     assert versions[-1] >= 1  # requests decoded under a reloaded model
+
+
+# ---------------------------------------------------------------------------
+# EOF-truncated final window: exact doc-cursor resume (libsvm tailing)
+# ---------------------------------------------------------------------------
+
+def test_libsvm_eof_truncated_window_kill_and_resume():
+    """Kill a libsvm stream run whose final window was truncated at EOF
+    (7 docs, window_docs=5 -> [5, 2]), append 4 more documents, resume.
+    The doc cursor — not ``windows_done * window_docs`` — decides where
+    reading restarts, so the resumed run reads exactly from doc 7:
+    nothing re-read, nothing skipped."""
+    from repro.core.types import LDAHyperParams
+
+    c1 = synthetic_corpus(3, num_docs=7, num_words=25, avg_doc_len=6)
+    c2 = synthetic_corpus(4, num_docs=4, num_words=25, avg_doc_len=6)
+    hyper = LDAHyperParams(num_topics=6)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "stream.libsvm")
+        save_libsvm(c1, path)
+        ckpt = os.path.join(td, "ckpt")
+        cfg = _stream_cfg(window_docs=5, train_checkpoint_dir=ckpt,
+                          train_checkpoint_every=1)
+
+        src = LibsvmStreamSource(path, window_docs=5, num_words=25)
+        killed = StreamingSession(src, hyper, cfg)
+        killed.run(jax.random.key(2))
+        assert killed.windows_done == 2
+        assert killed.docs_consumed == 7  # final window held only 2 docs
+
+        # the stream grows: 4 more documents arrive at the tail
+        tmp = os.path.join(td, "append.libsvm")
+        save_libsvm(c2, tmp)
+        with open(tmp) as f_in, open(path, "a") as f_out:
+            f_out.write(f_in.read())
+
+        # source-level resume contract: the doc cursor reads doc 7
+        # onward exactly; the old window arithmetic (start * window_docs
+        # = 10) would have silently skipped three appended documents
+        src = LibsvmStreamSource(path, window_docs=5, num_words=25)
+        wins = list(src.windows(start=2, start_docs=7))
+        assert [w.index for w in wins] == [2]
+        assert wins[0].corpus.num_docs == 4
+        np.testing.assert_array_equal(
+            np.bincount(np.asarray(wins[0].corpus.word), minlength=25),
+            np.bincount(np.asarray(c2.word), minlength=25),
+        )
+        naive = list(
+            LibsvmStreamSource(path, window_docs=5,
+                               num_words=25).windows(start=2)
+        )
+        assert sum(w.corpus.num_docs for w in naive) == 1  # skips 10
+
+        # session-level: resume from the elastic checkpoint and consume
+        # the appended tail, once
+        src = LibsvmStreamSource(path, window_docs=5, num_words=25)
+        resumed = StreamingSession(src, hyper, cfg)
+        resumed.run(jax.random.key(2))
+        assert resumed.windows_done == 3
+        assert resumed.docs_consumed == 11
+        # counts fold every consumed token in exactly once
+        assert int(np.asarray(resumed.n_wk).sum()) \
+            == c1.num_tokens + c2.num_tokens
+        np.testing.assert_array_equal(
+            np.asarray(resumed.n_k),
+            np.asarray(resumed.n_wk).sum(axis=0),
+        )
+
+
+def test_watcher_surfaces_truncated_checkpoint_error():
+    """A committed-but-corrupt checkpoint (truncated leaf) must not be
+    silently mistaken for an empty directory: the watcher retries up to
+    ``max_failures`` with logged warnings, gives up, keeps the serving
+    model untouched, and surfaces the error via ``watch_error`` /
+    ``stop_watching()``."""
+    m0, _m1, _corpus = _two_models(seed=6)
+    with tempfile.TemporaryDirectory() as td:
+        save_lda_model(td, np.asarray(m0.n_wk), np.asarray(m0.n_k),
+                       m0.hyper, step=2)
+        # truncate a leaf: the step dir stays COMMITTED but unloadable
+        leaf = os.path.join(td, "step_00000002", "leaf_00000.npy")
+        with open(leaf, "r+b") as f:
+            f.truncate(8)
+
+        eng = LDAEngine(m0, LDAServeConfig(buckets=(32,), max_batch=2))
+        eng.watch_checkpoint_dir(td, period=0.01, max_failures=3)
+        deadline = time.monotonic() + 10.0
+        while eng._watcher.is_alive() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert not eng._watcher.is_alive()  # gave up, did not spin
+        assert eng._watcher.failures == 3
+        assert eng.model_version == 0 and eng.reloads == 0
+        err = eng.watch_error
+        assert isinstance(err, Exception)
+        assert eng.stop_watching() is err  # surfaced on shutdown too
