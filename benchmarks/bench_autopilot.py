@@ -1,0 +1,187 @@
+"""Autopilot recovery benchmark (DESIGN.md §8): does measure→decide→act
+close the gap a mis-configured run leaves on the table?
+
+Two probes, each comparing three runs of the same workload:
+
+* **Training** — ``zen_sparse`` on a hot-vocabulary corpus (small
+  vocab, Zipf ``a < 1``), where doc rows stay short. Hand-tuned uses
+  auto row pads (re-resolved per sweep); the mis-configured run pins
+  explicit ``max_kw = max_kd = K`` — every doc row padded to the full
+  topic count, ~4x the work the counts justify; the third run starts
+  mis-configured with ``autopilot=True`` and must shrink the capacity
+  via a ``RowRepad`` decision from the measured row-nnz stats. Metric:
+  steady-state docs/sec (median per-iteration wall time over the last
+  half of the run). The cost model keeps the backend at ``zen_sparse``
+  here (doc-side is right for this shape), so the probe isolates the
+  capacity decision; the backend-switch decision itself is pinned by
+  ``tests/test_autopilot.py``.
+* **Serving** — an open-loop paced load against ``mode="latency"`` with
+  the admission ticker mis-set to 25x the arrival spacing, vs the
+  hand-tuned period, vs mis-set plus ``autopilot=True`` deriving
+  ``tick_period`` from observed inter-arrivals. Metric: p99 of
+  submit-to-done over the last half of the requests (after the
+  autopilot's first window has fired).
+
+Both probes report ``recovered``: the fraction of the mis→tuned gap the
+autopilot run closed (≥ 0.5 is the acceptance bar). Results also land in
+``BENCH_autopilot.json`` under the shared output dir.
+
+Scale knobs (env, for CI-sized runs): BENCH_AUTO_ITERS (train
+iterations), BENCH_AUTO_DOCS (serve requests), BENCH_AUTO_PACE
+(serve inter-arrival seconds).
+
+    PYTHONPATH=src:. python benchmarks/run.py --only autopilot
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_out_path, row
+
+ITERS = int(os.environ.get("BENCH_AUTO_ITERS", 12))
+SERVE_DOCS = int(os.environ.get("BENCH_AUTO_DOCS", 120))
+PACE = float(os.environ.get("BENCH_AUTO_PACE", 0.002))
+NUM_TOPICS = 128
+
+
+def _hot_vocab_corpus():
+    """Small vocab under Zipf a=0.8: every word is hot, so word rows
+    touch many topics while doc rows stay short (mean K_d « K) — the
+    regime where doc-side decomposition is right and a full-K doc-row
+    pad is maximally wasteful."""
+    from repro.data import synthetic_corpus
+
+    return synthetic_corpus(0, num_docs=800, num_words=64,
+                            avg_doc_len=32, zipf_a=0.8)
+
+
+def _train_run(corpus, **cfg_kw):
+    """One training run; returns (steady docs/sec, final backend name)."""
+    import jax
+
+    from repro.core.types import LDAHyperParams
+    from repro.train import RunConfig, TrainSession
+
+    cfg = RunConfig(num_iterations=ITERS, eval_every=0, **cfg_kw)
+    session = TrainSession(
+        corpus, LDAHyperParams(num_topics=NUM_TOPICS), cfg
+    )
+    stamps = [time.perf_counter()]
+    session.run(rng=jax.random.PRNGKey(0),
+                callback=lambda st, m: stamps.append(time.perf_counter()))
+    dts = np.diff(stamps)[len(stamps) // 2:]  # steady-state half
+    docs_per_sec = corpus.num_docs / float(np.median(dts))
+    return docs_per_sec, session.plan.row_pads
+
+
+def _train_probe(records):
+    K = NUM_TOPICS
+    corpus = _hot_vocab_corpus()
+    tuned, _ = _train_run(corpus, algorithm="zen_sparse")
+    mis, _ = _train_run(corpus, algorithm="zen_sparse",
+                        max_kw=K, max_kd=K)
+    auto, pads = _train_run(corpus, algorithm="zen_sparse",
+                            max_kw=K, max_kd=K,
+                            autopilot=True, autopilot_every=2)
+    gap = tuned - mis
+    recovered = (auto - mis) / gap if gap > 0 else float("nan")
+    row("autopilot_train_tuned", 1e6 / tuned,
+        f"{tuned:.1f} docs/s auto pads")
+    row("autopilot_train_mis", 1e6 / mis,
+        f"{mis:.1f} docs/s pads=({K},{K})")
+    row("autopilot_train_auto", 1e6 / auto,
+        f"{auto:.1f} docs/s settled pads={pads} "
+        f"recovered={recovered:.2f}")
+    records.append({
+        "name": "train", "tuned_docs_per_sec": tuned,
+        "mis_docs_per_sec": mis, "auto_docs_per_sec": auto,
+        "settled_pads": list(pads), "recovered": recovered,
+    })
+
+
+def _frozen_model():
+    import jax.numpy as jnp
+
+    from repro.core.types import LDAHyperParams
+    from repro.serving import FrozenLDAModel
+
+    rng = np.random.default_rng(0)
+    n_wk = rng.poisson(2.0, size=(400, NUM_TOPICS)).astype(np.int32)
+    return FrozenLDAModel(
+        n_wk=jnp.asarray(n_wk),
+        n_k=jnp.asarray(n_wk.sum(0).astype(np.int32)),
+        hyper=LDAHyperParams(num_topics=NUM_TOPICS),
+    )
+
+
+def _serve_run(model, docs, tick_period, autopilot):
+    """Open-loop paced load through the background ticker; returns the
+    p99 submit-to-done ms over the last half of the requests."""
+    from repro.observe import summarize_latencies
+    from repro.serving import LDAEngine, LDAServeConfig
+
+    cfg = LDAServeConfig(
+        buckets=(32, 64), max_batch=8, mode="latency", rtlda_sweeps=2,
+        tick_period=tick_period, autopilot=autopilot,
+        autopilot_window=16,
+    )
+    engine = LDAEngine(model, cfg, seed=0)
+    engine.warm()
+    engine.start()
+    try:
+        tickets = []
+        for d in docs:
+            tickets.append(engine.submit_async(d))
+            time.sleep(PACE)
+        reqs = [engine.request(t) for t in tickets]
+        for t in tickets:
+            engine.result(t)
+    finally:
+        engine.stop()
+    tail = reqs[len(reqs) // 2:]
+    stats = summarize_latencies(
+        (r.t_done - r.t_submit) * 1e3 for r in tail
+    )
+    return stats["p99"], engine.tick_period
+
+
+def _serve_probe(records):
+    model = _frozen_model()
+    rng = np.random.default_rng(1)
+    docs = [rng.integers(0, 400, size=int(ln)).astype(np.int32)
+            for ln in np.clip(rng.poisson(24, size=SERVE_DOCS), 4, 60)]
+    mis_period = PACE * 25  # ticker 25x slower than arrivals
+    tuned_p99, _ = _serve_run(model, docs, PACE, autopilot=False)
+    mis_p99, _ = _serve_run(model, docs, mis_period, autopilot=False)
+    auto_p99, settled = _serve_run(model, docs, mis_period, autopilot=True)
+    gap = mis_p99 - tuned_p99
+    recovered = (mis_p99 - auto_p99) / gap if gap > 0 else float("nan")
+    row("autopilot_serve_tuned", tuned_p99 * 1e3,
+        f"p99 {tuned_p99:.2f} ms tick={PACE * 1e3:.1f}ms")
+    row("autopilot_serve_mis", mis_p99 * 1e3,
+        f"p99 {mis_p99:.2f} ms tick={mis_period * 1e3:.1f}ms")
+    row("autopilot_serve_auto", auto_p99 * 1e3,
+        f"p99 {auto_p99:.2f} ms settled tick={settled * 1e3:.2f}ms "
+        f"recovered={recovered:.2f}")
+    records.append({
+        "name": "serve", "tuned_p99_ms": tuned_p99, "mis_p99_ms": mis_p99,
+        "auto_p99_ms": auto_p99, "settled_tick_period": settled,
+        "recovered": recovered,
+    })
+
+
+def main() -> None:
+    records = []
+    _train_probe(records)
+    _serve_probe(records)
+    with open(bench_out_path("BENCH_autopilot.json"), "w") as f:
+        json.dump(records, f, indent=2)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -97,7 +97,8 @@ def _closed_loop_latencies(engine, docs):
 
 def _frontier(model, docs):
     """Small-batch latency: chain mode per backend vs the RT-LDA path."""
-    from repro.serving import LDAEngine, LDAServeConfig, latency_percentile
+    from repro.observe import summarize_latencies
+    from repro.serving import LDAEngine, LDAServeConfig
 
     buckets = (64, 256)
     probes = [("latency", LDAServeConfig(
@@ -112,13 +113,11 @@ def _frontier(model, docs):
     for name, cfg in probes:
         engine = LDAEngine(model, cfg, seed=0)
         engine.infer_batch([np.zeros(bl, np.int32) for bl in buckets])
-        lats = _closed_loop_latencies(engine, docs)
-        p50 = latency_percentile(lats, 0.50)
-        p99 = latency_percentile(lats, 0.99)
+        stats = summarize_latencies(_closed_loop_latencies(engine, docs))
         row(
             f"frontier_{name}",
-            p50 * 1e3,  # us_per_call column = p50 in us
-            f"p99 {p99:.2f} ms",
+            stats["p50"] * 1e3,  # us_per_call column = p50 in us
+            f"p99 {stats['p99']:.2f} ms",
         )
 
 

@@ -154,7 +154,9 @@ def main() -> None:
         record("sparse_row", f"bt{tt.bt}_bs{tt.bs}", tt.us_per_call, t,
                False, bt=tt.bt, bs=tt.bs)
 
-    with open("BENCH_kernels.json", "w") as f:
+    from benchmarks.common import bench_out_path
+
+    with open(bench_out_path("BENCH_kernels.json"), "w") as f:
         json.dump(records, f, indent=2)
 
 

@@ -92,7 +92,9 @@ def main() -> None:
         f"batch_over_window={shrink:.1f}x")
     records.append({"name": "kd_state_shrink", "batch_over_window": shrink})
 
-    with open("BENCH_streaming.json", "w") as f:
+    from benchmarks.common import bench_out_path
+
+    with open(bench_out_path("BENCH_streaming.json"), "w") as f:
         json.dump(records, f, indent=2)
 
 

@@ -1,6 +1,7 @@
 """Shared benchmark helpers: timing + the CSV contract of run.py."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable
 
@@ -26,3 +27,15 @@ def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def bench_out_path(name: str) -> str:
+    """Where ``BENCH_*.json`` artifacts land: ``$BENCH_OUT_DIR``
+    (default ``benchmarks/results/``), created on demand. Benchmarks
+    must write machine-readable output through this — never the repo
+    root (``run.py --out-dir`` overrides the env)."""
+    out_dir = os.environ.get("BENCH_OUT_DIR") or os.path.join(
+        "benchmarks", "results"
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    return os.path.join(out_dir, name)

@@ -14,15 +14,28 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
            BENCH_kernels.json                            (bench_kernels)
   streaming windowed online vs batch: docs/sec + resident doc-side
            state; writes BENCH_streaming.json            (bench_streaming)
+  autopilot mis-configured vs hand-tuned vs autopilot recovery for
+           training and serving; writes BENCH_autopilot.json
+                                                         (bench_autopilot)
+
+Machine-readable ``BENCH_*.json`` artifacts all land under one output
+dir — ``--out-dir`` (or ``$BENCH_OUT_DIR``, default
+``benchmarks/results/``) — never the repo root.
 """
 import argparse
+import os
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section list (e.g. fig3,fig9)")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for BENCH_*.json artifacts "
+                         "(default $BENCH_OUT_DIR or benchmarks/results)")
     args = ap.parse_args()
+    if args.out_dir:
+        os.environ["BENCH_OUT_DIR"] = args.out_dir
     sections = {
         "fig3": lambda: __import__("benchmarks.bench_algorithms",
                                    fromlist=["main"]).main(),
@@ -43,6 +56,8 @@ def main() -> None:
         "kernels": lambda: __import__("benchmarks.bench_kernels",
                                       fromlist=["main"]).main(),
         "streaming": lambda: __import__("benchmarks.bench_streaming",
+                                        fromlist=["main"]).main(),
+        "autopilot": lambda: __import__("benchmarks.bench_autopilot",
                                         fromlist=["main"]).main(),
     }
     wanted = args.only.split(",") if args.only else list(sections)

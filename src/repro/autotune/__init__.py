@@ -1,0 +1,18 @@
+"""Self-tuning autopilot: decide from measured windows (DESIGN.md §8).
+
+``repro.observe`` measures; this package decides. The policies consume
+windows of telemetry records and emit *typed decisions* — they never
+touch an engine or a plan themselves. Actuation stays with the owner of
+the safety contract: ``TrainSession``'s ``autopilot`` schedule action
+applies training decisions at rebuild ticks (the same re-jit move as a
+repad), and ``LDAEngine`` applies serving decisions atomically between
+admission ticks (the same slot-swap discipline as hot reload).
+"""
+from repro.autotune.policy import (  # noqa: F401
+    BackendSwitch,
+    Decision,
+    RowRepad,
+    ServeAutopilot,
+    ServeRetune,
+    TrainAutopilot,
+)

@@ -12,7 +12,9 @@ through the async ticket front.
         [--algorithm zen] [--buckets 32,64,128,256] [--max-batch 32] \
         [--sweeps 10] [--rtlda-sweeps 2] [--burn-in -1] [--thin 1] \
         [--tick-period 0] [--max-slot-wait 0] [--eval] [--show 5] \
-        [--mesh-shape 1,2] [--replicas 1]
+        [--mesh-shape 1,2] [--replicas 1] \
+        [--autopilot] [--autopilot-window 16] \
+        [--metrics-out serve.jsonl] [--pace 0.002]
 
 Every document goes through ``submit_async`` -> ``result``, so the driver
 reports per-request latency percentiles (p50/p99 of submit-to-done) next
@@ -91,6 +93,19 @@ def main() -> None:
                          "e.g. 1,2 (data dim must be 1; throughput mode)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind the serving router")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write windowed serving telemetry JSONL here")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="derive tick_period / max_slot_wait / buckets "
+                         "from the observed arrival process")
+    ap.add_argument("--autopilot-window", type=int, default=0,
+                    help="arrivals per telemetry window (0 = default 64); "
+                         "smaller windows decide sooner on light loads")
+    ap.add_argument("--pace", type=float, default=0.0,
+                    help="> 0: open-loop load — sleep this many seconds "
+                         "between submits (an arrival process the "
+                         "autopilot can measure) instead of submitting "
+                         "the whole round at once")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -99,6 +114,7 @@ def main() -> None:
 
     from repro.data import synthetic_corpus
     from repro.data.corpus import load_libsvm
+    from repro.observe import summarize_latencies
     from repro.serving import (
         FrozenLDAModel,
         LDAEngine,
@@ -106,7 +122,6 @@ def main() -> None:
         LDAServeConfig,
         doc_completion_perplexity,
         docs_from_corpus,
-        latency_percentile,
     )
     from repro.train.checkpoint import load_lda_model
 
@@ -143,6 +158,9 @@ def main() -> None:
         max_slot_wait=args.max_slot_wait,
         mesh_shape=(tuple(int(d) for d in args.mesh_shape.split(","))
                     if args.mesh_shape else None),
+        metrics_out=args.metrics_out,
+        autopilot=args.autopilot,
+        autopilot_window=args.autopilot_window,
     )
     engine = LDARouter(model, cfg, replicas=args.replicas, seed=args.seed)
     plan = (f"rtlda_sweeps={cfg.rtlda_sweeps} (deterministic)"
@@ -173,23 +191,38 @@ def main() -> None:
     for rnd in range(max(1, args.rounds)):
         sweeps0 = engine.sweeps_run
         t0 = time.perf_counter()
-        tickets = [engine.submit_async(d) for d in docs]
+        tickets = []
+        for d in docs:
+            tickets.append(engine.submit_async(d))
+            if args.pace > 0:
+                time.sleep(args.pace)
         reqs = [engine.request(t) for t in tickets]  # refs survive the reap
         thetas = [engine.result(t) for t in tickets]
         dt = time.perf_counter() - t0
 
-        lats = sorted((r.t_done - r.t_submit) * 1e3 for r in reqs)
+        stats = summarize_latencies(
+            (r.t_done - r.t_submit) * 1e3 for r in reqs
+        )
         versions = sorted({r.model_version for r in reqs})
         tag = f"round {rnd}  " if args.rounds > 1 else ""
         print(f"{tag}served {len(docs)} docs in {dt:.3f}s "
               f"({len(docs) / dt:.1f} docs/sec, "
               f"{engine.sweeps_run - sweeps0} bucket dispatches)  "
               f"model versions {versions}")
-        print(f"latency ms: p50={latency_percentile(lats, 0.50):.2f} "
-              f"p99={latency_percentile(lats, 0.99):.2f} "
-              f"max={lats[-1]:.2f}")
+        print(f"latency ms: p50={stats['p50']:.2f} "
+              f"p99={stats['p99']:.2f} max={stats['max']:.2f}")
         if args.follow and rnd < args.rounds - 1:
             time.sleep(args.watch_period)
+
+    if args.autopilot:
+        # surface where the measured knobs settled (replica 0 speaks for
+        # a homogeneous fleet — every replica sees the same process)
+        e0 = engine.engines[0] if hasattr(engine, "engines") else engine
+        print(f"autopilot: tick_period={e0.tick_period * 1e3:.2f}ms "
+              f"max_slot_wait={e0.max_slot_wait} "
+              f"buckets={e0.bucket_widths} spills={e0.spills}")
+    if args.metrics_out:
+        print(f"telemetry: {args.metrics_out}")
 
     if args.follow:
         engine.stop_watching()

@@ -94,6 +94,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="synthetic corpus size (when --corpus is not given)")
     ap.add_argument("--synthetic-words", type=int, default=2000)
     ap.add_argument("--synthetic-len", type=int, default=80)
+    # -- observability + autopilot (DESIGN.md §8) -------------------------
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write per-iteration telemetry JSONL here")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="re-pick backend + row capacities from measured "
+                         "sparsity on the --rebuild-every cadence")
+    ap.add_argument("--autopilot-every", type=int, default=0,
+                    help="autopilot decision cadence "
+                         "(0 = --rebuild-every, else every 10)")
     # -- streaming mode (DESIGN.md §7) -----------------------------------
     ap.add_argument("--stream", action="store_true",
                     help="windowed online training (StreamingSession); "
@@ -230,6 +239,9 @@ def main() -> None:
                  or ("replay" if args.corpus else "drift"))
                 if args.stream else None
             ),
+            metrics_out=args.metrics_out,
+            autopilot=args.autopilot,
+            autopilot_every=args.autopilot_every,
         )
 
     if args.dump_config:
@@ -279,11 +291,20 @@ def main() -> None:
         if "row_pads" in metrics:
             kw, kd = metrics["row_pads"]
             line += f"  repad kw={kw} kd={kd}"
+        for rec in metrics.get("autopilot", ()):
+            line += (f"\n  autopilot {rec['decision']}"
+                     f"{' applied' if rec['applied'] else ' (no-op)'}: "
+                     f"{rec['reason']}")
         print(line)
 
     final = session.run(state=state, callback=cb)
     print(f"finished at iteration {int(final.iteration)}; "
           f"final llh {session.llh(final):.1f}")
+    if cfg.autopilot:
+        print(f"autopilot: final backend={session.plan.backend.name} "
+              f"row_pads={session.row_pads}")
+    if cfg.metrics_out:
+        print(f"telemetry: {cfg.metrics_out}")
     if cfg.checkpoint_dir:
         print(f"model checkpoint: {cfg.checkpoint_dir} "
               f"(serve with: python -m repro.launch.serve_lda "

@@ -63,6 +63,7 @@ is numpy, the oracle's is XLA; the count inputs are integer-identical)
 from __future__ import annotations
 
 import dataclasses
+import json
 import logging
 import threading
 import time
@@ -76,6 +77,9 @@ from repro import algorithms
 from repro.algorithms import SamplerKnobs
 from repro.core.inference import rtlda_assign
 from repro.core.types import LDAHyperParams
+# canonical home of the percentile math is the observability layer; the
+# import keeps the historical ``repro.serving.latency_percentile`` working
+from repro.observe.metrics import latency_percentile  # noqa: F401
 from repro.serving.sharded import (
     ShardedFrozenLDAModel,
     layout_key,
@@ -200,12 +204,39 @@ class LDAServeConfig:
     max_slot_wait: int = 0  # ticks before bucket spill (0 = never spill)
     kernels: str = "auto"  # Pallas kernel dispatch: auto | on | off
     mesh_shape: Optional[Tuple[int, int]] = None  # (1, m) word shards
+    # -- observability + autopilot (DESIGN.md §8): all inert by default ----
+    metrics_out: Optional[str] = None  # telemetry JSONL path (None = off)
+    autopilot: bool = False  # derive tick_period/max_slot_wait/buckets
+    autopilot_window: int = 0  # arrivals per decision window (0 = 64)
 
     def knobs(self) -> SamplerKnobs:
         return SamplerKnobs(
             sampling_method=self.sampling_method, max_kd=self.max_kd,
             kernels=self.kernels,
         )
+
+    # -- serialization (mirrors RunConfig: a serving setup is a file) ------
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        d = dataclasses.asdict(self)
+        d["buckets"] = list(d["buckets"])
+        if d["mesh_shape"] is not None:
+            d["mesh_shape"] = list(d["mesh_shape"])
+        return json.dumps(d, indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "LDAServeConfig":
+        d = json.loads(text)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(
+                f"unknown LDAServeConfig fields: {', '.join(unknown)}"
+            )
+        if d.get("buckets") is not None:
+            d["buckets"] = tuple(int(x) for x in d["buckets"])
+        if d.get("mesh_shape") is not None:
+            d["mesh_shape"] = tuple(int(x) for x in d["mesh_shape"])
+        return cls(**d)
 
 
 @dataclasses.dataclass
@@ -448,6 +479,32 @@ class LDAEngine:
         self.docs_done = 0
         self.sweeps_run = 0  # jitted bucket sweeps/decodes executed
         self.reloads = 0
+        self.spills = 0  # SLA bucket spills (max_slot_wait admissions)
+        # runtime SLA knobs: seeded from cfg, retuned in place by the
+        # autopilot — cfg itself stays frozen (it is the *requested*
+        # setup; these are the *current* values, see the properties below)
+        self._tick_period = cfg.tick_period or 0.001
+        self._max_slot_wait = cfg.max_slot_wait
+        self._pending_buckets: Optional[Tuple[int, ...]] = None
+        # observability + autopilot (DESIGN.md §8): built ONLY when
+        # enabled — off means no telemetry objects exist and every tick
+        # runs the exact pre-observability code path
+        self._telemetry = None
+        self._autopilot = None
+        if cfg.metrics_out or cfg.autopilot:
+            from repro.observe import JsonlSink, MetricsRegistry, ServeTelemetry
+
+            sink = JsonlSink(cfg.metrics_out) if cfg.metrics_out else None
+            arrivals = cfg.autopilot_window or 64
+            self._telemetry = ServeTelemetry(
+                MetricsRegistry(sink),
+                window_ticks=max(8, 4 * arrivals),
+                window_arrivals=arrivals,
+            )
+        if cfg.autopilot:
+            from repro.autotune import ServeAutopilot
+
+            self._autopilot = ServeAutopilot()
         # async front
         self._tickets: Dict[int, InferRequest] = {}
         self._cv = threading.Condition(threading.RLock())
@@ -719,6 +776,9 @@ class LDAEngine:
             self._instant.append(req)
         else:
             self.queue.append(req)
+        if self._telemetry is not None:
+            self._telemetry.record_submit(req.t_submit,
+                                          int(req.words.shape[0]))
         return req
 
     def _complete(self, req: InferRequest) -> None:
@@ -860,16 +920,19 @@ class LDAEngine:
         with self._cv:
             if self._ticker is not None and self._ticker.is_alive():
                 return
-            period = tick_period if tick_period is not None \
-                else (self.cfg.tick_period or 0.001)
+            if tick_period is not None:
+                self._tick_period = tick_period
             self._stop_evt = threading.Event()
 
             def loop():
+                # the period is re-read every iteration: the autopilot
+                # retunes ``self._tick_period`` in place and the ticker
+                # follows from the next wait on — no restart needed
                 while not self._stop_evt.is_set():
                     with self._cv:
                         if self._pending():
                             self.step()
-                    self._stop_evt.wait(period)
+                    self._stop_evt.wait(self._tick_period)
 
             self._ticker = threading.Thread(
                 target=loop, name="lda-engine-ticker", daemon=True
@@ -907,8 +970,88 @@ class LDAEngine:
         one minimal document per bucket width through the normal path,
         so first-request latency never pays a jit trace."""
         self.infer_batch(
-            [np.zeros(bl, np.int32) for bl in self.cfg.buckets]
+            [np.zeros(bl, np.int32) for bl in self.bucket_widths]
         )
+
+    # -- runtime SLA knobs (autopilot-visible; DESIGN.md §8.4) --------------
+    @property
+    def tick_period(self) -> float:
+        """The CURRENT ticker cadence (cfg seed, autopilot-retuned)."""
+        return self._tick_period
+
+    @property
+    def max_slot_wait(self) -> int:
+        """The CURRENT bucket-spill SLA knob (cfg seed, autopilot-retuned)."""
+        return self._max_slot_wait
+
+    @property
+    def bucket_widths(self) -> Tuple[int, ...]:
+        """The CURRENT bucket lengths, ascending."""
+        return tuple(sorted(self._buckets))
+
+    def _apply_pending_buckets(self) -> None:
+        """Swap in an autopilot-proposed bucket grid, but only once every
+        bucket has drained — the same discipline as a hot model reload:
+        in-flight slot state is never reshaped under a running decode.
+        Queued requests survive the swap (their words re-bucket at the
+        next admission; over-long ones truncate to the new widest)."""
+        if self._pending_buckets is None:
+            return
+        if any(b.num_active for b in self._buckets.values()):
+            return
+        widths = self._pending_buckets
+        self._pending_buckets = None
+        k = self._current.model.num_topics
+        self._buckets = {
+            length: _Bucket(length, self.cfg.max_batch, k)
+            for length in sorted(widths)
+        }
+        max_len = max(self._buckets)
+        for req in self.queue:
+            if req.words.shape[0] > max_len:
+                req.words = req.words[:max_len]
+                req.truncated = True
+
+    def _observe_tick(self, finished: List[InferRequest]) -> None:
+        """Measure this tick; when it closes a telemetry window, let the
+        autopilot derive new SLA knobs from the window's summary and
+        apply them (period/spill immediately — the next tick reads them;
+        buckets deferred to a full drain). Called under the engine lock
+        from :meth:`step`."""
+        summary = self._telemetry.record_tick(
+            queue_depth=len(self.queue),
+            occupancy=sum(b.num_active for b in self._buckets.values()),
+            finished=finished,
+            spills_total=self.spills,
+            tick_period=self._tick_period,
+            max_slot_wait=self._max_slot_wait,
+            bucket_widths=self.bucket_widths,
+            model_version=self._current.version,
+        )
+        if summary is None or self._autopilot is None:
+            return
+        decision = self._autopilot.decide(
+            summary,
+            tick_period=self._tick_period,
+            max_slot_wait=self._max_slot_wait,
+            buckets=self.bucket_widths,
+        )
+        if decision is None:
+            return
+        applied = False
+        if decision.tick_period is not None:
+            self._tick_period = float(decision.tick_period)
+            applied = True
+        if decision.max_slot_wait is not None:
+            self._max_slot_wait = int(decision.max_slot_wait)
+            applied = True
+        if (decision.buckets is not None
+                and tuple(sorted(decision.buckets)) != self.bucket_widths):
+            self._pending_buckets = tuple(sorted(decision.buckets))
+            applied = True
+        rec = decision.to_record()
+        rec["applied"] = applied
+        self._telemetry.emit_decision(rec)
 
     # -- admission ---------------------------------------------------------
     def _bucket_for(self, length: int) -> _Bucket:
@@ -936,8 +1079,8 @@ class LDAEngine:
         for req in self.queue:
             bucket = self._bucket_for(req.words.shape[0])
             slot = self._admittable(bucket)
-            if slot is None and self.cfg.max_slot_wait > 0 \
-                    and req.ticks_waited >= self.cfg.max_slot_wait:
+            if slot is None and self._max_slot_wait > 0 \
+                    and req.ticks_waited >= self._max_slot_wait:
                 # SLA spill: the preferred bucket has been saturated for
                 # max_slot_wait ticks — take any wider free slot instead
                 for bl in sorted(self._buckets):
@@ -947,6 +1090,7 @@ class LDAEngine:
                     s = self._admittable(wider)
                     if s is not None:
                         bucket, slot = wider, s
+                        self.spills += 1
                         break
             if slot is None:
                 req.ticks_waited += 1
@@ -1057,8 +1201,11 @@ class LDAEngine:
         request finishes in the same tick.
         """
         with self._cv:
+            self._apply_pending_buckets()
             finished = (self._latency_step() if self.cfg.mode == "latency"
                         else self._throughput_step())
+            if self._telemetry is not None:
+                self._observe_tick(finished)
             if finished and self._tickets:
                 self._cv.notify_all()
             return finished
@@ -1198,20 +1345,6 @@ class LDAEngine:
             if missing:
                 raise RuntimeError(f"engine did not finish requests {missing}")
             return np.stack([by_uid[u].theta for u in uids])
-
-
-def latency_percentile(sorted_vals: Sequence[float], q: float) -> float:
-    """Nearest-rank percentile of an ascending latency sample.
-
-    THE percentile definition for serving latency reporting —
-    ``launch/serve_lda.py`` and ``benchmarks/bench_infer.py`` both use
-    it, so their p50/p99 figures are comparable. Returns NaN on empty
-    input.
-    """
-    if not sorted_vals:
-        return float("nan")
-    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
-    return sorted_vals[i]
 
 
 # -- held-out evaluation ---------------------------------------------------

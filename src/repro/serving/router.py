@@ -61,6 +61,12 @@ class LDARouter:
         self._tickets: Dict[int, Tuple[LDAEngine, int]] = {}
         self._next_ticket = 0
         self._watcher: Optional[CheckpointWatcher] = None
+        # per-replica load records ride on replica 0's telemetry sink
+        # (all replicas share one cfg, so one JSONL per fleet, not N);
+        # None when observability is off — zero work on the submit path
+        self._fleet_telemetry = self.engines[0]._telemetry
+        self._load_emit_every = max(1, (cfg.autopilot_window or 64) // 2)
+        self._submits = 0
 
     # -- fleet state -------------------------------------------------------
     @property
@@ -102,6 +108,10 @@ class LDARouter:
             inner = engine.submit_async(words, **submit_kw)
             self._next_ticket += 1
             self._tickets[self._next_ticket] = (engine, inner)
+            if self._fleet_telemetry is not None:
+                self._submits += 1
+                if self._submits % self._load_emit_every == 0:
+                    self._fleet_telemetry.emit_router_loads(self.loads)
             return self._next_ticket
 
     def _route(self, ticket: int) -> Tuple[LDAEngine, int]:

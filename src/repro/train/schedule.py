@@ -93,6 +93,25 @@ class Schedule:
         self._actions.append(action)
         return self
 
+    def replace(self, action: ScheduledAction) -> "Schedule":
+        """Swap the same-named action in place, preserving its position
+        (and therefore its firing order). This is how a cadence changes
+        mid-run — the autopilot's actuation path depends on it. Raises
+        ``KeyError`` when no action with that name is registered."""
+        for i, a in enumerate(self._actions):
+            if a.name == action.name:
+                self._actions[i] = action
+                return self
+        raise KeyError(f"no schedule action named {action.name!r}")
+
+    def remove(self, name: str) -> "Schedule":
+        """Drop a registered action by name (``KeyError`` if absent)."""
+        for i, a in enumerate(self._actions):
+            if a.name == name:
+                del self._actions[i]
+                return self
+        raise KeyError(f"no schedule action named {name!r}")
+
     @property
     def actions(self) -> Tuple[ScheduledAction, ...]:
         return tuple(self._actions)

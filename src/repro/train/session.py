@@ -112,6 +112,13 @@ class RunConfig:
       streaming mode the cadences count *windows*, not iterations, and
       ``num_iterations`` bounds the absolute window cursor (0 = run to
       source exhaustion). Batch ``TrainSession`` ignores these fields.
+    * ``metrics_out``/``metrics_every`` — per-iteration telemetry JSONL
+      via ``repro.observe`` (path, record cadence). ``autopilot``/
+      ``autopilot_every`` — ``repro.autotune`` backend + row-capacity
+      re-pick from the measured counts on a cadence (DESIGN.md §8).
+      All four are inert by default: with ``metrics_out=None`` and
+      ``autopilot=False`` no telemetry is built and the schedule is
+      bit-identical to a pre-observability session (pinned by test).
     """
 
     # -- algorithm + sampler knobs (one SamplerKnobs derivation) ----------
@@ -154,6 +161,11 @@ class RunConfig:
     window_sweeps: int = 1  # CGS sweeps per window visit
     decay: float = 0.0  # online forgetting: counts *= (1-decay) per window
     stream_source: Optional[str] = None  # replay | libsvm:<path> | drift[:<seed>]
+    # -- observability + autopilot (DESIGN.md §8) --------------------------
+    metrics_out: Optional[str] = None  # telemetry JSONL path (None = off)
+    metrics_every: int = 1  # telemetry record cadence (iterations)
+    autopilot: bool = False  # measured backend/capacity re-pick when True
+    autopilot_every: int = 0  # decision cadence (0 = rebuild_every, else 10)
 
     def knobs(self) -> SamplerKnobs:
         return knobs_from(self)
@@ -228,6 +240,20 @@ class ExecutionPlan:
     @property
     def row_pads(self) -> Tuple[int, int]:
         """(max_kw, max_kd) currently in effect (0 = per-sweep auto)."""
+        raise NotImplementedError
+
+    def apply_row_pads(self, max_kw: int, max_kd: int) -> bool:
+        """Set explicit padded-row capacities (autopilot actuation).
+        Returns True when the widths changed (and any compiled step was
+        rebuilt); same re-jit move as :meth:`repad` with the targets
+        decided by policy instead of re-resolved from the counts."""
+        raise NotImplementedError
+
+    def set_backend(self, name: str, state) -> bool:
+        """Swap the sampler backend in place (autopilot actuation).
+        Returns True when the backend actually changed. The swap reuses
+        the repad machinery: rebuild whatever the old backend prepared
+        (aux tables, compiled step) under the new registry entry."""
         raise NotImplementedError
 
     def merge(self, state, topic_map):
@@ -356,6 +382,24 @@ class SingleBoxPlan(ExecutionPlan):
     @property
     def row_pads(self) -> Tuple[int, int]:
         return (self._knobs.max_kw, self._knobs.max_kd)
+
+    def apply_row_pads(self, max_kw: int, max_kd: int) -> bool:
+        if (self._knobs.max_kw, self._knobs.max_kd) == (max_kw, max_kd):
+            return False
+        # explicit widths stick: ``resolve_row_pads`` honors nonzero
+        # values, so the per-sweep auto-resolution stops overriding them
+        self._knobs = dataclasses.replace(
+            self._knobs, max_kw=int(max_kw), max_kd=int(max_kd)
+        )
+        return True
+
+    def set_backend(self, name: str, state: CGSState) -> bool:
+        if name == self.backend.name:
+            return False
+        self.backend = algorithms.get(name)
+        self._aux = self.backend.prepare(self.corpus, self.hyper,
+                                         self._knobs)
+        return True
 
     def merge(self, state: CGSState, topic_map) -> CGSState:
         tm = jnp.asarray(topic_map, jnp.int32)
@@ -527,6 +571,36 @@ class MeshPlan(ExecutionPlan):
     def row_pads(self) -> Tuple[int, int]:
         return (self.dcfg.max_kw, self.dcfg.max_kd)
 
+    def apply_row_pads(self, max_kw: int, max_kd: int) -> bool:
+        if (self.dcfg.max_kw, self.dcfg.max_kd) == (max_kw, max_kd):
+            return False
+        self.dcfg = dataclasses.replace(
+            self.dcfg, max_kw=int(max_kw), max_kd=int(max_kd)
+        )
+        self._build_step()
+        return True
+
+    def set_backend(self, name: str, state) -> bool:
+        if name == self.dcfg.algorithm:
+            return False
+        backend = algorithms.get(name)
+        if not backend.supports_shard_map:
+            raise ValueError(
+                f"backend {name!r} does not support shard_map cells; "
+                f"cannot swap onto a mesh plan"
+            )
+        self.backend = backend
+        self.dcfg = dataclasses.replace(self.dcfg, algorithm=name)
+        if backend.needs_row_pads and not (self.dcfg.max_kw
+                                           and self.dcfg.max_kd):
+            # coming from a padless backend: resolve capacities against
+            # the CURRENT counts before the new step compiles
+            from repro.core.distributed import resolve_dist_row_pads
+
+            self.dcfg = resolve_dist_row_pads(state, self.dcfg)
+        self._build_step()
+        return True
+
     def merge(self, state, topic_map):
         tm = jnp.asarray(topic_map, jnp.int32)
         state = state._replace(
@@ -584,6 +658,26 @@ class TrainSession:
             self.plan = SingleBoxPlan(corpus, hyper, cfg)
         else:
             self.plan = MeshPlan(corpus, hyper, cfg, mesh=mesh)
+        # observability + autopilot (DESIGN.md §8) — built ONLY when
+        # enabled: with metrics_out=None and autopilot=False nothing here
+        # exists and the schedule below is exactly the pre-PR one
+        self.telemetry = None
+        self._autopilot_policy = None
+        self._metrics_sink = None
+        if cfg.metrics_out or cfg.autopilot:
+            from repro.observe import JsonlSink, MetricsRegistry, TrainTelemetry
+
+            self._metrics_sink = (JsonlSink(cfg.metrics_out)
+                                  if cfg.metrics_out else None)
+            self.telemetry = TrainTelemetry(
+                MetricsRegistry(self._metrics_sink)
+            )
+        if cfg.autopilot:
+            from repro.autotune import TrainAutopilot
+
+            self._autopilot_policy = TrainAutopilot(
+                self._autopilot_candidates()
+            )
         self.schedule = self._build_schedule()
         self._last_model_save: Optional[int] = None
         self._train_ckpt = None
@@ -724,7 +818,12 @@ class TrainSession:
                 "rebuild", lambda ctx, st: self.plan.rebuild(st),
                 every=cfg.rebuild_every,
             ))
-            if self.backend.needs_row_pads and not (cfg.max_kw and cfg.max_kd):
+            # with the autopilot on, row capacity belongs to policy (its
+            # RowRepad decisions) — registering the measured re-pad too
+            # would have two owners fighting over the same knob
+            if (self.backend.needs_row_pads
+                    and not (cfg.max_kw and cfg.max_kd)
+                    and not cfg.autopilot):
                 def _repad(ctx, st):
                     if self.plan.repad(st):
                         ctx.metrics["row_pads"] = self.plan.row_pads
@@ -733,6 +832,11 @@ class TrainSession:
                 sched.add(ScheduledAction(
                     "repad", _repad, every=cfg.rebuild_every,
                 ))
+        if cfg.autopilot:
+            sched.add(ScheduledAction(
+                "autopilot", self._autopilot_action,
+                every=cfg.autopilot_every or cfg.rebuild_every or 10,
+            ))
         if cfg.merge_every > 0:
             sched.add(ScheduledAction(
                 "merge", lambda ctx, st: self.merge_duplicates(st),
@@ -763,7 +867,75 @@ class TrainSession:
                 lambda ctx, st: (self._save_train_ckpt(st), st)[1],
                 every=cfg.train_checkpoint_every,
             ))
+        if self.telemetry is not None:
+            # last, so the record carries whatever the earlier actions
+            # contributed this iteration (eval metrics, decisions)
+            sched.add(ScheduledAction(
+                "telemetry", self._telemetry_action,
+                every=max(1, cfg.metrics_every),
+            ))
         return sched
+
+    # -- autopilot actuation (DESIGN.md §8.4) --------------------------------
+    def _autopilot_candidates(self) -> Tuple[str, ...]:
+        """Backends the autopilot may pick among: the configured one plus
+        the three decomposition representatives (doc-side, word-side,
+        hybrid), restricted to mesh-capable ones on a mesh plan."""
+        cands = [self.cfg.algorithm]
+        for name in ("zen_sparse", "sparselda", "zen_hybrid"):
+            if name in cands or name not in algorithms.registered():
+                continue
+            if (self.cfg.mesh_shape is not None
+                    and not algorithms.get(name).supports_shard_map):
+                continue
+            cands.append(name)
+        return tuple(cands)
+
+    def _autopilot_action(self, ctx: ActionContext, state):
+        """Measure → decide → act, at a rebuild point. The safety
+        contract: counts are rebuilt exactly from the assignments FIRST,
+        so a backend swap or capacity change never bakes in count drift;
+        the swap itself is the plan's repad re-jit move."""
+        state = self.plan.rebuild(state)
+        plan = self.plan
+        if isinstance(plan, MeshPlan):
+            # mesh widths are frozen into the compiled step — always
+            # policy-owned when the backend uses padded rows
+            pads_tunable = plan.backend.needs_row_pads
+        else:
+            # single-box auto pads (0) re-resolve every sweep already;
+            # only explicit (possibly mis-sized) widths are worth tuning
+            pads_tunable = (plan.backend.needs_row_pads
+                            and all(p > 0 for p in plan.row_pads))
+        decisions = self._autopilot_policy.decide(
+            self.telemetry.window(),
+            current_backend=plan.backend.name,
+            current_pads=plan.row_pads,
+            num_topics=self.hyper.num_topics,
+            pads_tunable=pads_tunable,
+        )
+        from repro.autotune.policy import BackendSwitch, RowRepad
+
+        for d in decisions:
+            if isinstance(d, BackendSwitch):
+                applied = plan.set_backend(d.backend, state)
+                if applied:
+                    self.backend = plan.backend
+            elif isinstance(d, RowRepad):
+                applied = plan.apply_row_pads(d.max_kw, d.max_kd)
+            else:  # pragma: no cover - no other training decision types
+                applied = False
+            rec = d.to_record()
+            rec.update(iteration=int(state.iteration), applied=applied)
+            self.telemetry.emit_decision(rec)
+            ctx.metrics.setdefault("autopilot", []).append(rec)
+        return state
+
+    def _telemetry_action(self, ctx: ActionContext, state):
+        self.telemetry.record_iteration(
+            self.plan, state, int(state.iteration), ctx.metrics
+        )
+        return state
 
     # -- elastic training checkpoints ---------------------------------------
     def _save_train_ckpt(self, state) -> None:

@@ -1,0 +1,390 @@
+"""repro.autotune — the measure→decide→act layer (DESIGN.md §8).
+
+* policy units: backend re-pick from measured row density (the paper's
+  §3.2 cost argument applied to live stats), dwell hysteresis, row-pad
+  targets; serving period/wait/bucket derivations with hysteresis;
+* training integration: a mis-padded single-box run emits an applied
+  ``RowRepad`` and a word-heavy regime emits an applied
+  ``BackendSwitch``, both logged to the metrics JSONL;
+* the inertness pin: with ``autopilot=False`` and no ``metrics_out``
+  the session builds no telemetry, registers no extra actions, and its
+  final state is bit-identical to a metrics-on run of the same seed;
+* serving integration: under a paced load with a mis-set tick period
+  the engine's autopilot shrinks ``tick_period`` between admission
+  ticks and no ticket is lost;
+* ``LDAServeConfig`` JSON round-trip incl. the new observability fields
+  (unknown-field rejection preserved).
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autotune import (
+    BackendSwitch,
+    RowRepad,
+    ServeAutopilot,
+    ServeRetune,
+    TrainAutopilot,
+)
+from repro.autotune.policy import backend_cost
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_jit_memory():
+    # this module compiles many session/engine variants; drop its
+    # executables from the process-wide jit cache afterwards so the
+    # accumulated code memory doesn't destabilize the tail of a full
+    # suite run (XLA:CPU segfaults past a per-process compile load)
+    yield
+    jax.clear_caches()
+
+
+def _train_window(mean_kw, mean_kd, K, max_kw=None, max_kd=None):
+    """One train_iter record shaped like TrainTelemetry emits."""
+    return [{
+        "kind": "train_iter",
+        "word_rows": {"mean": mean_kw, "p50": mean_kw, "p99": mean_kw,
+                      "max": max_kw if max_kw is not None else mean_kw,
+                      "num_topics": K},
+        "doc_rows": {"mean": mean_kd, "p50": mean_kd, "p99": mean_kd,
+                     "max": max_kd if max_kd is not None else mean_kd,
+                     "num_topics": K},
+    }]
+
+
+# ---------------------------------------------------------------------------
+# training policy units
+# ---------------------------------------------------------------------------
+
+def test_backend_cost_model_matches_paper_classes():
+    # K dense, K_d doc-side, K_w word-side, min() hybrid (§3.2)
+    assert backend_cost("zen", 30.0, 5.0, 64) == 64.0
+    assert backend_cost("zen_sparse", 30.0, 5.0, 64) == 5.0
+    assert backend_cost("sparselda", 30.0, 5.0, 64) == 30.0
+    assert backend_cost("zen_hybrid", 30.0, 5.0, 64) == 5.0
+
+
+def test_switch_fires_only_past_ratio_with_dwell():
+    pilot = TrainAutopilot(("sparselda", "zen_sparse"), switch_ratio=0.8,
+                           dwell=2)
+    # hot vocab: word rows dense, doc rows short -> doc-side wins big
+    window = _train_window(mean_kw=34.0, mean_kd=6.6, K=64)
+    decisions = pilot.decide(window, current_backend="sparselda",
+                             current_pads=(0, 0), num_topics=64,
+                             pads_tunable=False)
+    assert [type(d) for d in decisions] == [BackendSwitch]
+    assert decisions[0].backend == "zen_sparse"
+    # dwell: the next two ticks are cooldown even with the same evidence
+    for _ in range(2):
+        assert pilot.decide(window, current_backend="zen_sparse",
+                            current_pads=(0, 0), num_topics=64,
+                            pads_tunable=False) == []
+    # after cooldown, the now-correct backend produces no decision
+    assert pilot.decide(window, current_backend="zen_sparse",
+                        current_pads=(0, 0), num_topics=64,
+                        pads_tunable=False) == []
+
+
+def test_switch_respects_ratio_margin():
+    pilot = TrainAutopilot(("sparselda", "zen_sparse"), switch_ratio=0.8)
+    # doc-side only ~10% cheaper: inside the margin, no flapping
+    window = _train_window(mean_kw=10.0, mean_kd=9.0, K=64)
+    assert pilot.decide(window, current_backend="sparselda",
+                        current_pads=(0, 0), num_topics=64,
+                        pads_tunable=False) == []
+
+
+def test_row_repad_targets_quantile_slack_lane_rounded():
+    pilot = TrainAutopilot(("zen_sparse",), pad_quantile="max", pad_slack=8)
+    window = _train_window(mean_kw=20.0, mean_kd=5.0, K=128,
+                           max_kw=50, max_kd=11)
+    (d,) = pilot.decide(window, current_backend="zen_sparse",
+                        current_pads=(128, 128), num_topics=128)
+    assert isinstance(d, RowRepad)
+    # max + 8 slack, rounded up to 8 lanes: 58->64, 19->24
+    assert (d.max_kw, d.max_kd) == (64, 24)
+    # targets clamp at K, and a matching current config is a no-op
+    window_hot = _train_window(mean_kw=120.0, mean_kd=5.0, K=128,
+                               max_kw=128, max_kd=11)
+    (d2,) = pilot.decide(window_hot, current_backend="zen_sparse",
+                         current_pads=(64, 24), num_topics=128)
+    assert d2.max_kw == 128
+    assert pilot.decide(window, current_backend="zen_sparse",
+                        current_pads=(64, 24), num_topics=128) == []
+    # pads_tunable=False suppresses capacity decisions entirely
+    assert pilot.decide(window, current_backend="zen_sparse",
+                        current_pads=(128, 128), num_topics=128,
+                        pads_tunable=False) == []
+
+
+def test_empty_or_padless_window_decides_nothing():
+    pilot = TrainAutopilot(("zen_sparse",))
+    assert pilot.decide([], current_backend="zen_sparse",
+                        current_pads=(0, 0), num_topics=64) == []
+    assert pilot.decide([{"kind": "decision"}],
+                        current_backend="zen_sparse",
+                        current_pads=(0, 0), num_topics=64) == []
+
+
+# ---------------------------------------------------------------------------
+# serving policy units
+# ---------------------------------------------------------------------------
+
+def _serve_summary(inter_p50_ms, count=16, wait_p90=0.0,
+                   doc_len=(24.0, 50.0, 60)):
+    p50, p99, mx = doc_len
+    return {
+        "kind": "serve_window",
+        "interarrival_ms": {"count": count, "p50": inter_p50_ms},
+        "wait_ticks_p90": wait_p90,
+        "doc_len": {"count": count, "p50": p50, "p99": p99, "max": mx},
+    }
+
+
+def test_serve_period_derivation_clamp_and_hysteresis():
+    pilot = ServeAutopilot(period_fraction=0.5, min_period=5e-4,
+                           max_period=0.1, hysteresis=0.25)
+    # 10ms arrivals, 50ms tick: retune to 5ms
+    d = pilot.decide(_serve_summary(10.0), tick_period=0.05,
+                     max_slot_wait=0, buckets=(32, 64))
+    assert isinstance(d, ServeRetune)
+    assert d.tick_period == pytest.approx(0.005)
+    assert d.buckets is None and d.max_slot_wait is None
+    # within 25% of current: no decision at all
+    assert pilot.decide(_serve_summary(10.0), tick_period=0.0045,
+                        max_slot_wait=0, buckets=(32, 64)) is None
+    # clamps: sub-ms arrivals floor at min_period, slow ones cap
+    d = pilot.decide(_serve_summary(0.1), tick_period=0.05,
+                     max_slot_wait=0, buckets=(32, 64))
+    assert d.tick_period == pytest.approx(5e-4)
+    d = pilot.decide(_serve_summary(5000.0), tick_period=0.001,
+                     max_slot_wait=0, buckets=(32, 64))
+    assert d.tick_period == pytest.approx(0.1)
+    # too few arrivals to estimate a process: no decision
+    assert pilot.decide(_serve_summary(10.0, count=3), tick_period=0.05,
+                        max_slot_wait=0, buckets=(32, 64)) is None
+
+
+def test_serve_wait_derivation_from_queueing_tail():
+    pilot = ServeAutopilot()
+    d = pilot.decide(_serve_summary(10.0, wait_p90=4.0), tick_period=0.005,
+                     max_slot_wait=0, buckets=(32, 64))
+    assert d.max_slot_wait == 4
+    # already set correctly, sub-threshold waits: nothing to do
+    assert pilot.decide(_serve_summary(10.0, wait_p90=4.0),
+                        tick_period=0.005, max_slot_wait=4,
+                        buckets=(32, 64)) is None
+    assert pilot.decide(_serve_summary(10.0, wait_p90=1.0),
+                        tick_period=0.005, max_slot_wait=0,
+                        buckets=(32, 64)) is None
+
+
+def test_serve_bucket_recut_on_truncation_or_waste():
+    pilot = ServeAutopilot()
+    # truncating: longest doc exceeds the widest bucket
+    d = pilot.decide(_serve_summary(10.0, doc_len=(24.0, 90.0, 120)),
+                     tick_period=0.005, max_slot_wait=0, buckets=(32, 64))
+    assert d.buckets == (24, 96, 120)
+    # wasteful: smallest bucket >= 4x p50
+    d = pilot.decide(_serve_summary(10.0, doc_len=(8.0, 30.0, 31)),
+                     tick_period=0.005, max_slot_wait=0,
+                     buckets=(64, 256))
+    assert d.buckets == (8, 32)
+    # a well-cut grid is left alone (bucket drains are expensive)
+    assert pilot.decide(_serve_summary(10.0, doc_len=(24.0, 50.0, 60)),
+                        tick_period=0.005, max_slot_wait=0,
+                        buckets=(32, 64)) is None
+    # retune_buckets=False suppresses the knob
+    assert ServeAutopilot(retune_buckets=False).decide(
+        _serve_summary(10.0, doc_len=(24.0, 90.0, 120)),
+        tick_period=0.005, max_slot_wait=0, buckets=(32, 64)) is None
+
+
+# ---------------------------------------------------------------------------
+# training integration (single-box)
+# ---------------------------------------------------------------------------
+
+def _hot_vocab():
+    from repro.data import synthetic_corpus
+
+    # tiny hot vocab under Zipf a=0.8: word rows touch ~K/2 topics while
+    # doc rows stay short -> doc-side decomposition wins by >2x
+    return synthetic_corpus(0, num_docs=120, num_words=24,
+                            avg_doc_len=8, zipf_a=0.8)
+
+
+def test_autopilot_switches_backend_and_logs(tmp_path):
+    from repro.core.types import LDAHyperParams
+    from repro.observe.metrics import read_jsonl
+    from repro.train import RunConfig, TrainSession
+
+    path = str(tmp_path / "train.jsonl")
+    cfg = RunConfig(algorithm="sparselda", num_iterations=6, eval_every=0,
+                    autopilot=True, autopilot_every=2, metrics_out=path)
+    session = TrainSession(_hot_vocab(), LDAHyperParams(num_topics=64), cfg)
+    assert session.schedule.names() == ("autopilot", "telemetry")
+    fired = []
+    session.run(rng=jax.random.PRNGKey(0),
+                callback=lambda st, m: fired.extend(m.get("autopilot", ())))
+    # the mis-picked word-side backend was swapped for doc-side
+    assert session.backend.name == "zen_sparse"
+    applied = [r for r in fired
+               if r["decision"] == "BackendSwitch" and r["applied"]]
+    assert applied and applied[0]["backend"] == "zen_sparse"
+    # ... and the decision record landed in the JSONL, alongside
+    # per-iteration telemetry
+    records = read_jsonl(path)
+    kinds = {r["kind"] for r in records}
+    assert "train_iter" in kinds
+    logged = [r for r in records if r["kind"] == "decision"]
+    assert any(r["decision"] == "BackendSwitch" and r["applied"]
+               for r in logged)
+    iters = [r for r in records if r["kind"] == "train_iter"]
+    assert iters[-1]["backend"] == "zen_sparse"
+    # first record has no prior stamp (null rate); the rest are finite
+    assert all(r["tokens_per_s"] is None or math.isfinite(r["tokens_per_s"])
+               for r in iters)
+    assert any(r["tokens_per_s"] for r in iters[1:])
+
+
+def test_autopilot_shrinks_mis_sized_pads(tmp_path):
+    from repro.core.types import LDAHyperParams
+    from repro.train import RunConfig, TrainSession
+
+    K = 64
+    cfg = RunConfig(algorithm="zen_sparse", num_iterations=4, eval_every=0,
+                    max_kw=K, max_kd=K, autopilot=True, autopilot_every=2)
+    session = TrainSession(_hot_vocab(), LDAHyperParams(num_topics=K), cfg)
+    fired = []
+    session.run(rng=jax.random.PRNGKey(0),
+                callback=lambda st, m: fired.extend(m.get("autopilot", ())))
+    repads = [r for r in fired if r["decision"] == "RowRepad"]
+    assert repads and repads[0]["applied"]
+    # doc rows can't exceed doc length (~8 here): the K-wide pad shrank
+    assert session.plan.row_pads[1] < K
+    assert session.plan.row_pads == (repads[-1]["max_kw"],
+                                     repads[-1]["max_kd"])
+
+
+# ---------------------------------------------------------------------------
+# the inertness pin: off by default means OFF
+# ---------------------------------------------------------------------------
+
+def test_autopilot_off_is_bit_identical_and_structure_free(
+        tmp_path, tiny_corpus, tiny_hyper):
+    from repro.train import RunConfig, TrainSession
+
+    base = dict(algorithm="zen_sparse", num_iterations=5, rebuild_every=2)
+    plain = TrainSession(tiny_corpus, tiny_hyper, RunConfig(**base))
+    # no telemetry objects, no extra schedule actions
+    assert plain.telemetry is None
+    assert plain.schedule.names() == ("rebuild", "repad")
+
+    metered = TrainSession(
+        tiny_corpus, tiny_hyper,
+        RunConfig(**base, metrics_out=str(tmp_path / "m.jsonl")),
+    )
+    assert metered.schedule.names() == ("rebuild", "repad", "telemetry")
+
+    st_plain = plain.run(rng=jax.random.PRNGKey(3))
+    st_metered = metered.run(rng=jax.random.PRNGKey(3))
+    # observation must not perturb the chain: bit-identical final state
+    np.testing.assert_array_equal(np.asarray(st_plain.topic),
+                                  np.asarray(st_metered.topic))
+    np.testing.assert_array_equal(np.asarray(st_plain.n_wk),
+                                  np.asarray(st_metered.n_wk))
+    np.testing.assert_array_equal(np.asarray(st_plain.n_kd),
+                                  np.asarray(st_metered.n_kd))
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+def _frozen_model(W=80, K=8):
+    import jax.numpy as jnp
+
+    from repro.core.types import LDAHyperParams
+    from repro.serving import FrozenLDAModel
+
+    rng = np.random.default_rng(0)
+    n_wk = rng.poisson(2.0, size=(W, K)).astype(np.int32)
+    return FrozenLDAModel(
+        n_wk=jnp.asarray(n_wk),
+        n_k=jnp.asarray(n_wk.sum(0).astype(np.int32)),
+        hyper=LDAHyperParams(num_topics=K),
+    )
+
+
+def test_engine_autopilot_retunes_tick_period_under_paced_load(tmp_path):
+    import time
+
+    from repro.observe.metrics import read_jsonl
+    from repro.serving import LDAEngine, LDAServeConfig
+
+    path = str(tmp_path / "serve.jsonl")
+    cfg = LDAServeConfig(
+        buckets=(16, 32), max_batch=4, mode="latency", rtlda_sweeps=1,
+        tick_period=0.05,  # mis-set: 25x the arrival spacing
+        autopilot=True, autopilot_window=12, metrics_out=path,
+    )
+    engine = LDAEngine(_frozen_model(), cfg, seed=0)
+    engine.warm()
+    engine.start()
+    try:
+        rng = np.random.default_rng(1)
+        tickets = []
+        for _ in range(40):
+            doc = rng.integers(0, 80, size=12).astype(np.int32)
+            tickets.append(engine.submit_async(doc))
+            time.sleep(0.002)
+        thetas = [engine.result(t, timeout=30.0) for t in tickets]
+    finally:
+        engine.stop()
+    # every ticket served (retunes apply between ticks, nothing dropped)
+    assert len(thetas) == 40
+    assert all(th.shape == (8,) for th in thetas)
+    # the measured arrival process pulled the period down
+    assert engine.tick_period < cfg.tick_period
+    records = read_jsonl(path)
+    assert any(r["kind"] == "serve_window" for r in records)
+    retunes = [r for r in records if r["kind"] == "decision"]
+    assert any(r["decision"] == "ServeRetune" and r["applied"]
+               for r in retunes)
+
+
+def test_engine_without_autopilot_keeps_configured_knobs():
+    from repro.serving import LDAEngine, LDAServeConfig
+
+    cfg = LDAServeConfig(buckets=(16, 32), max_batch=4, tick_period=0.01)
+    engine = LDAEngine(_frozen_model(), cfg, seed=0)
+    assert engine._telemetry is None and engine._autopilot is None
+    doc = np.arange(10, dtype=np.int32)
+    engine.result(engine.submit_async(doc))
+    assert engine.tick_period == 0.01
+    assert engine.bucket_widths == (16, 32)
+
+
+# ---------------------------------------------------------------------------
+# LDAServeConfig JSON round-trip (new fields included)
+# ---------------------------------------------------------------------------
+
+def test_serve_config_json_roundtrip():
+    from repro.serving import LDAServeConfig
+
+    cfg = LDAServeConfig(
+        buckets=(16, 64), max_batch=12, num_sweeps=7, burn_in=2, thin=2,
+        algorithm="zen_cdf", mode="latency", rtlda_sweeps=3,
+        tick_period=0.004, max_slot_wait=3, mesh_shape=(1, 2),
+        metrics_out="/tmp/serve.jsonl", autopilot=True, autopilot_window=32,
+    )
+    back = LDAServeConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert back.buckets == (16, 64) and back.mesh_shape == (1, 2)
+    # defaults survive; unknown fields still rejected
+    assert (LDAServeConfig.from_json(LDAServeConfig().to_json())
+            == LDAServeConfig())
+    with pytest.raises(ValueError, match="unknown LDAServeConfig fields"):
+        LDAServeConfig.from_json('{"max_batch": 4, "definitely_not": 1}')

@@ -152,6 +152,58 @@ def test_schedule_rejects_duplicates_and_bad_actions():
         sched.add(ScheduledAction("x", lambda ctx, s: s, every=3))
     with pytest.raises(ValueError, match="exclusive"):
         ScheduledAction("y", lambda ctx, s: s, every=2, at=5)
+    with pytest.raises(KeyError):
+        sched.replace(ScheduledAction("missing", lambda ctx, s: s, every=1))
+    with pytest.raises(KeyError):
+        sched.remove("missing")
+
+
+def test_schedule_replace_preserves_position_remove_drops():
+    sched = Schedule()
+    sched.add(ScheduledAction("a", lambda ctx, s: s, every=1))
+    sched.add(ScheduledAction("b", lambda ctx, s: s, every=2))
+    sched.add(ScheduledAction("c", lambda ctx, s: s, every=1))
+    sched.replace(ScheduledAction("b", lambda ctx, s: s, every=1))
+    assert sched.names() == ("a", "b", "c")  # position (= firing order) kept
+    assert sched.due(1) == ("a", "b", "c")   # the new cadence is live
+    sched.remove("b")
+    assert sched.names() == ("a", "c")
+
+
+def test_runtime_registered_action_and_midrun_cadence_change(
+        key, tiny_corpus, tiny_hyper):
+    """Satellite contract: actions registered AFTER session init fire on
+    their cadence, and a mid-run ``Schedule.replace`` retimes one
+    without disturbing the rest of the run (the autopilot's actuation
+    path depends on exactly this)."""
+    session = TrainSession(
+        tiny_corpus, tiny_hyper,
+        RunConfig(algorithm="zen", num_iterations=6),
+    )
+    state = session.init(key)
+    hits = []
+    session.schedule.add(ScheduledAction(
+        "probe", lambda ctx, s: (hits.append(int(s.iteration)), s)[1],
+        every=2,
+    ))
+    assert session.schedule.names() == ("probe",)
+
+    retimed = []
+
+    def on_iter(st, metrics):
+        # after iteration 3, tighten the probe cadence to every iteration
+        if int(st.iteration) == 3 and not retimed:
+            retimed.append(True)
+            session.schedule.replace(ScheduledAction(
+                "probe",
+                lambda ctx, s: (hits.append(int(s.iteration)), s)[1],
+                every=1,
+            ))
+
+    session.run(state=state, callback=on_iter)
+    # every=2 through iteration 3 (fires at 2), then every=1 from 4 on.
+    # actions see post-step state, so s.iteration is the firing tick.
+    assert hits == [2, 4, 5, 6]
 
 
 def test_session_schedule_registration_order(tmp_path, tiny_corpus,
@@ -196,6 +248,8 @@ def test_runconfig_json_roundtrip():
         train_checkpoint_dir="/tmp/t", train_checkpoint_every=50,
         window_docs=128, window_sweeps=3, decay=0.05,
         stream_source="libsvm:/tmp/c.libsvm",
+        metrics_out="/tmp/train.jsonl", metrics_every=2,
+        autopilot=True, autopilot_every=4,
     )
     assert RunConfig.from_json(cfg.to_json()) == cfg
     # mesh_shape survives as a tuple, default None survives as None
