@@ -1,0 +1,88 @@
+"""Model-quality trajectories per backend: coherence + held-out llh.
+
+The quality-scenario counterpart of the docs/sec benchmarks (ISSUE:
+backend/knob choices must be judged on quality curves, not just
+throughput). For each backend, one ``TrainSession`` run on a shared
+synthetic corpus records the eval + quality trajectory — llh,
+perplexity, UMass/NPMI coherence over the top-N words, and Wallach
+left-to-right held-out llh per token — via the session's own schedule
+actions (``eval_every`` / ``quality_every``). Emits CSV rows through
+the run.py contract plus ``BENCH_quality.json`` for CI:
+
+    PYTHONPATH=src:. python benchmarks/run.py --only quality
+
+Scale knobs (env, for CI-sized runs): BENCH_QUALITY_D (docs),
+BENCH_QUALITY_W (vocab), BENCH_QUALITY_K (topics), BENCH_QUALITY_ITERS
+(iterations), BENCH_QUALITY_EVERY (eval cadence), BENCH_QUALITY_BACKENDS
+(comma list, default "zen,zen_sparse").
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import bench_out_path, row
+
+NUM_DOCS = int(os.environ.get("BENCH_QUALITY_D", 200))
+NUM_WORDS = int(os.environ.get("BENCH_QUALITY_W", 300))
+NUM_TOPICS = int(os.environ.get("BENCH_QUALITY_K", 16))
+ITERS = int(os.environ.get("BENCH_QUALITY_ITERS", 12))
+EVERY = int(os.environ.get("BENCH_QUALITY_EVERY", 4))
+BACKENDS = os.environ.get("BENCH_QUALITY_BACKENDS", "zen,zen_sparse")
+
+
+def main() -> None:
+    import time
+
+    import jax
+
+    from repro.core.types import LDAHyperParams
+    from repro.data import synthetic_lda_corpus
+    from repro.train.session import RunConfig, TrainSession
+
+    corpus, _phi = synthetic_lda_corpus(
+        seed=0, num_docs=NUM_DOCS, num_words=NUM_WORDS,
+        num_topics=NUM_TOPICS, avg_doc_len=40,
+    )
+    hyper = LDAHyperParams(num_topics=NUM_TOPICS)
+    records = []
+    for backend in [b for b in BACKENDS.split(",") if b]:
+        cfg = RunConfig(
+            algorithm=backend, num_iterations=ITERS,
+            eval_every=EVERY, quality_every=EVERY,
+            quality_l2r_docs=4, quality_l2r_particles=10,
+        )
+        session = TrainSession(corpus, hyper, cfg)
+        traj = []
+
+        def cb(st, m):
+            if "llh" in m or "coherence_umass" in m:
+                traj.append({
+                    "iteration": int(st.iteration),
+                    **{k: m[k] for k in (
+                        "llh", "perplexity", "coherence_umass",
+                        "coherence_npmi", "l2r_llh", "l2r_per_token",
+                    ) if k in m},
+                })
+
+        t0 = time.perf_counter()
+        session.run(jax.random.key(0), callback=cb)
+        dt = time.perf_counter() - t0
+        last = traj[-1] if traj else {}
+        row(f"quality/{backend}", dt / max(1, ITERS) * 1e6,
+            f"umass={last.get('coherence_umass', float('nan')):.3f} "
+            f"npmi={last.get('coherence_npmi', float('nan')):.3f} "
+            f"l2r_tok={last.get('l2r_per_token', float('nan')):.3f} "
+            f"ppl={last.get('perplexity', float('nan')):.1f}")
+        records.append({
+            "name": backend, "iters": ITERS, "topics": NUM_TOPICS,
+            "docs": NUM_DOCS, "trajectory": traj,
+        })
+
+    with open(bench_out_path("BENCH_quality.json"), "w") as f:
+        json.dump(records, f, indent=2)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.py).
   autopilot mis-configured vs hand-tuned vs autopilot recovery for
            training and serving; writes BENCH_autopilot.json
                                                          (bench_autopilot)
+  quality  per-backend quality trajectories: UMass/NPMI coherence +
+           left-to-right held-out llh; writes BENCH_quality.json
+                                                         (bench_quality)
 
 Machine-readable ``BENCH_*.json`` artifacts all land under one output
 dir — ``--out-dir`` (or ``$BENCH_OUT_DIR``, default
@@ -59,6 +62,8 @@ def main() -> None:
                                         fromlist=["main"]).main(),
         "autopilot": lambda: __import__("benchmarks.bench_autopilot",
                                         fromlist=["main"]).main(),
+        "quality": lambda: __import__("benchmarks.bench_quality",
+                                      fromlist=["main"]).main(),
     }
     wanted = args.only.split(",") if args.only else list(sections)
     print("name,us_per_call,derived")

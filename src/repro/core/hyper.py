@@ -1,9 +1,22 @@
-"""Topic-duplicate merging (paper §4.3 "Merge duplicated topics").
+"""Hyper-parameter maintenance: duplicate-topic merging + Alg. 5 moves.
 
-The asymmetric prior already biases similar topics toward merging; on top of
-that, topics whose L1 distance between word distributions falls below a
-threshold are explicitly clustered and merged (union of counts, remapped
-assignments).
+Two families of model-structure moves live here:
+
+* Topic-duplicate merging (paper §4.3 "Merge duplicated topics"): the
+  asymmetric prior already biases similar topics toward merging; on top
+  of that, topics whose L1 distance between word distributions falls
+  below a threshold are explicitly clustered and merged (union of
+  counts, remapped assignments). ``duplicate_topic_map`` refuses to
+  collapse below ``min_topics`` surviving clusters — an
+  all-below-threshold distance matrix must not merge everything into
+  topic 0 (degenerate K=1 model).
+
+* Alg. 5 hyper-parameter optimization: ``minka_alpha_update`` is one
+  Minka fixed-point step on the scalar alpha concentration (the
+  asymmetric alpha_k shape stays count-derived via
+  ``LDAHyperParams.alpha_k``), ``anneal_beta`` geometrically anneals
+  beta toward a floor. ``TrainSession`` fires both as the "hyper"
+  schedule action on the ``hyper_every`` cadence (DESIGN.md §9.3).
 """
 from __future__ import annotations
 
@@ -22,15 +35,26 @@ def topic_l1_distances(n_wk: jax.Array) -> jax.Array:
     return jnp.sum(jnp.abs(col[:, :, None] - col[:, None, :]), axis=0)
 
 
-def duplicate_topic_map(n_wk: np.ndarray, threshold: float) -> np.ndarray:
+def duplicate_topic_map(
+    n_wk: np.ndarray, threshold: float, min_topics: int = 2
+) -> np.ndarray:
     """Map each topic to its cluster representative (lowest id wins).
 
     Host-side union-find over the below-threshold pairs; returns (K,) int32.
     A lower threshold removes more duplicates (paper's knob).
+
+    Pairs merge in ascending-distance order and the merging stops at
+    ``min_topics`` surviving clusters: a degenerate distance matrix
+    (every pair below threshold — e.g. a freshly initialized model with
+    near-uniform topics) keeps the closest duplicates merged but never
+    collapses the model below the floor. ``min_topics=1`` restores the
+    unguarded behavior.
     """
     dist = np.asarray(topic_l1_distances(jnp.asarray(n_wk)))
     k = dist.shape[0]
     parent = np.arange(k)
+    clusters = k
+    floor = max(1, min(int(min_topics), k))
 
     def find(x):
         while parent[x] != x:
@@ -39,10 +63,17 @@ def duplicate_topic_map(n_wk: np.ndarray, threshold: float) -> np.ndarray:
         return x
 
     ii, jj = np.where((dist < threshold) & (np.arange(k)[:, None] < np.arange(k)))
-    for a, b in zip(ii, jj):
+    # closest pairs first, so hitting the floor keeps the true duplicates
+    # merged and drops only the marginal ones (deterministic: distance,
+    # then pair ids break ties)
+    order = np.lexsort((jj, ii, dist[ii, jj]))
+    for a, b in zip(ii[order], jj[order]):
+        if clusters <= floor:
+            break
         ra, rb = find(a), find(b)
         if ra != rb:
             parent[max(ra, rb)] = min(ra, rb)
+            clusters -= 1
     return np.array([find(x) for x in range(k)], dtype=np.int32)
 
 
@@ -63,3 +94,78 @@ def merge_topics(
         n_kd @ onehot,
         n_k @ onehot,
     )
+
+
+# ---------------------------------------------------------------------------
+# Alg. 5 hyper-parameter optimization (Minka fixed point + beta anneal)
+# ---------------------------------------------------------------------------
+
+def minka_alpha_update(
+    n_kd: np.ndarray, alpha: float,
+    alpha_min: float = 1e-5, alpha_max: float = 1e3,
+) -> float:
+    """One Minka fixed-point step on the scalar alpha concentration.
+
+    The symmetric-Dirichlet fixed point (Minka 2000, "Estimating a
+    Dirichlet distribution", eq. 55) on the doc-topic counts::
+
+        alpha' = alpha * sum_{d,k} [psi(n_kd + a) - psi(a)]
+                       / (K * sum_d [psi(n_d + K a) - psi(K a)])
+
+    The asymmetric alpha_k *shape* stays derived from the topic counts
+    (``LDAHyperParams.alpha_k``, whose per-topic values sum to
+    ``K * alpha`` exactly), so updating the scalar updates the total
+    prior mass — the quantity Alg. 5's t2/t4 terms are scaled by.
+
+    Host-side; ``n_kd`` may carry all-zero padding rows (mesh layouts) —
+    ``psi(0 + a) - psi(a) == 0`` so they contribute nothing. Returns the
+    clamped new scalar (a degenerate window keeps the old value).
+    """
+    from scipy.special import digamma
+
+    n_kd = np.asarray(n_kd, np.float64)
+    a = float(alpha)
+    k = n_kd.shape[1]
+    n_d = n_kd.sum(axis=1)
+    num = float(np.sum(digamma(n_kd + a)) - n_kd.size * digamma(a))
+    den = float(k * (np.sum(digamma(n_d + k * a))
+                     - n_d.shape[0] * digamma(k * a)))
+    if not np.isfinite(num) or not np.isfinite(den) or den <= 0 or num <= 0:
+        return a
+    return float(np.clip(a * num / den, alpha_min, alpha_max))
+
+
+def anneal_beta(beta: float, factor: float, floor: float) -> float:
+    """Geometric beta annealing toward a floor: ``max(beta*factor, floor)``.
+
+    ``factor=1`` is the identity (annealing off). Shrinking beta as the
+    model sharpens concentrates phi on the words each topic actually
+    owns — the paper's accuracy-side counterpart to the efficiency
+    approximations the quality suite audits.
+    """
+    if factor == 1.0:
+        return float(beta)
+    return float(max(beta * factor, floor))
+
+
+def optimize_hyper(
+    hyper, n_kd: np.ndarray,
+    update_alpha: bool = True,
+    beta_anneal: float = 1.0,
+    beta_floor: float = 1e-4,
+):
+    """Apply one Alg. 5 hyper move; returns a new ``LDAHyperParams``.
+
+    The session's "hyper" schedule action calls this with the host
+    doc-topic counts; a no-op move returns ``hyper`` unchanged (same
+    object), so callers can cheaply detect whether the compiled steps
+    must rebuild.
+    """
+    import dataclasses
+
+    alpha = minka_alpha_update(n_kd, hyper.alpha) if update_alpha \
+        else hyper.alpha
+    beta = anneal_beta(hyper.beta, beta_anneal, beta_floor)
+    if alpha == hyper.alpha and beta == hyper.beta:
+        return hyper
+    return dataclasses.replace(hyper, alpha=alpha, beta=beta)

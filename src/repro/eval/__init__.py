@@ -1,0 +1,35 @@
+"""Model-quality evaluation subsystem (DESIGN.md §9).
+
+Perplexity alone cannot audit the paper's efficiency-vs-accuracy
+tradeoffs (unsynchronized model, sparse init, token exclusion); this
+package adds the two standard independent quality signals plus the
+hyper-parameter optimization that the quality curves are sensitive to:
+
+* ``repro.eval.coherence`` — topic coherence over the frozen model's
+  top-N words per topic: UMass (document co-occurrence) and NPMI
+  (sliding-window PMI), both computed host-side from the corpus.
+* ``repro.eval.left_to_right`` — Wallach-style particle-based
+  left-to-right held-out log-likelihood, next to the doc-completion
+  perplexity in ``repro.core.likelihood``; ``exhaustive_llh`` is the
+  exact-enumeration oracle the tests pin it against.
+* ``repro.eval.quality`` — ``QualityConfig``/``QualityEval``: one
+  evaluator the ``TrainSession`` "quality" schedule action, the
+  ``launch/compare.py --sessions`` table, and ``benchmarks/run.py
+  --only quality`` all share.
+
+The Alg. 5 hyper-parameter moves (Minka fixed-point alpha, beta
+annealing) live in ``repro.core.hyper`` and fire as the session's
+"hyper" schedule action — disabled they are pinned bit-identical to a
+no-hyper run.
+"""
+from repro.eval.coherence import (  # noqa: F401
+    CoherenceStats,
+    npmi_coherence,
+    top_topic_words,
+    umass_coherence,
+)
+from repro.eval.left_to_right import (  # noqa: F401
+    exhaustive_llh,
+    left_to_right_llh,
+)
+from repro.eval.quality import QualityConfig, QualityEval  # noqa: F401

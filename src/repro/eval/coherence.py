@@ -1,0 +1,185 @@
+"""Topic coherence: UMass and sliding-window NPMI over corpus statistics.
+
+Both metrics score a topic by how often its top-N words co-occur in the
+corpus, which correlates with human topic-quality judgments far better
+than held-out likelihood alone (Mimno et al. 2011; Röder et al. 2015 —
+gensim's ``CoherenceModel`` is the exemplar implementation).
+
+* UMass: document co-occurrence. For a topic's top words ordered by
+  descending count ``v_1..v_N``::
+
+      C_umass = sum_{m=2..N} sum_{l<m} log[(D(v_m, v_l) + 1) / D(v_l)]
+
+  where ``D(w)`` is the number of documents containing ``w`` and
+  ``D(w, w')`` the number containing both. Pairs whose denominator word
+  never occurs are skipped (a zero-count word can reach the top-N of an
+  empty topic).
+
+* NPMI: sliding-window probability estimation. ``p(w)`` is the fraction
+  of windows (length ``window``, stride 1, one whole-doc window for
+  shorter docs) containing ``w``::
+
+      npmi(w, w') = log[p(w, w') / (p(w) p(w'))] / (-log p(w, w'))
+
+  averaged over unordered top-word pairs; a never-co-occurring pair
+  contributes the limit value -1.
+
+Everything here is host-side numpy on the frozen counts — coherence is
+an evaluation read, never part of the sampling hot path.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+def top_topic_words(n_wk: np.ndarray, top_n: int) -> np.ndarray:
+    """Top-``top_n`` word ids per topic from frozen counts, (K, top_n).
+
+    Ordered by descending ``N_w|k``; ties break toward the lower word id
+    (stable sort), so the selection is deterministic across runs.
+    """
+    n_wk = np.asarray(n_wk)
+    top_n = min(int(top_n), n_wk.shape[0])
+    # stable argsort on (-count, word_id): lowest id wins ties
+    order = np.argsort(-n_wk.astype(np.int64), axis=0, kind="stable")
+    return order[:top_n].T.astype(np.int32)  # (K, top_n)
+
+
+class CoherenceStats:
+    """Corpus co-occurrence statistics shared by both coherence metrics.
+
+    Built once per corpus (the expensive part — grouping the edge list
+    into per-document token sequences and window sets) and queried per
+    eval tick with whatever top-word matrix the current model produces.
+    """
+
+    def __init__(self, word: np.ndarray, doc: np.ndarray, num_docs: int,
+                 window: int = 10):
+        word = np.asarray(word)
+        doc = np.asarray(doc)
+        order = np.argsort(doc, kind="stable")  # edge order kept within doc
+        w_sorted, d_sorted = word[order], doc[order]
+        bounds = np.searchsorted(d_sorted, np.arange(num_docs + 1))
+        self.docs: List[np.ndarray] = [
+            w_sorted[bounds[i]:bounds[i + 1]] for i in range(num_docs)
+        ]
+        self.num_docs = num_docs
+        self.window = max(1, int(window))
+        # word -> set of doc ids (UMass document co-occurrence)
+        self._word_docs: Dict[int, frozenset] = {}
+        for i, toks in enumerate(self.docs):
+            for w in np.unique(toks):
+                self._word_docs.setdefault(int(w), set()).add(i)  # type: ignore[arg-type]
+        self._word_docs = {w: frozenset(s) for w, s in self._word_docs.items()}
+        # sliding windows as sets (NPMI probability estimation)
+        self._windows: List[frozenset] = []
+        s = self.window
+        for toks in self.docs:
+            if len(toks) == 0:
+                continue
+            if len(toks) <= s:
+                self._windows.append(frozenset(int(t) for t in toks))
+            else:
+                for i in range(len(toks) - s + 1):
+                    self._windows.append(
+                        frozenset(int(t) for t in toks[i:i + s])
+                    )
+        self.num_windows = len(self._windows)
+        self._win_membership: Dict[int, frozenset] = {}
+
+    @classmethod
+    def from_corpus(cls, corpus, window: int = 10) -> "CoherenceStats":
+        """Build from a ``repro.core.types.Corpus`` (host transfer)."""
+        return cls(np.asarray(corpus.word), np.asarray(corpus.doc),
+                   corpus.num_docs, window=window)
+
+    # -- document co-occurrence (UMass) ---------------------------------
+    def doc_freq(self, w: int) -> int:
+        return len(self._word_docs.get(int(w), ()))
+
+    def co_doc_freq(self, w1: int, w2: int) -> int:
+        a = self._word_docs.get(int(w1))
+        b = self._word_docs.get(int(w2))
+        if not a or not b:
+            return 0
+        return len(a & b)
+
+    # -- window co-occurrence (NPMI) ------------------------------------
+    def _windows_with(self, w: int) -> frozenset:
+        got = self._win_membership.get(int(w))
+        if got is None:
+            got = frozenset(
+                i for i, win in enumerate(self._windows) if int(w) in win
+            )
+            self._win_membership[int(w)] = got
+        return got
+
+    def window_prob(self, w: int) -> float:
+        if self.num_windows == 0:
+            return 0.0
+        return len(self._windows_with(w)) / self.num_windows
+
+    def co_window_prob(self, w1: int, w2: int) -> float:
+        if self.num_windows == 0:
+            return 0.0
+        a, b = self._windows_with(w1), self._windows_with(w2)
+        return len(a & b) / self.num_windows
+
+
+def umass_coherence(
+    stats: CoherenceStats, top_words: np.ndarray
+) -> Tuple[float, np.ndarray]:
+    """UMass coherence per topic + mean over topics.
+
+    ``top_words`` is the (K, N) matrix from :func:`top_topic_words`,
+    rows ordered by descending count. Returns ``(mean, per_topic)``.
+    """
+    top_words = np.asarray(top_words)
+    per_topic = np.zeros(top_words.shape[0], np.float64)
+    for t, row in enumerate(top_words):
+        score = 0.0
+        for m in range(1, len(row)):
+            for l in range(m):
+                d_l = stats.doc_freq(row[l])
+                if d_l == 0:
+                    continue  # denominator word absent from the corpus
+                score += np.log(
+                    (stats.co_doc_freq(row[m], row[l]) + 1.0) / d_l
+                )
+        per_topic[t] = score
+    return float(per_topic.mean()), per_topic
+
+
+def npmi_coherence(
+    stats: CoherenceStats, top_words: np.ndarray
+) -> Tuple[float, np.ndarray]:
+    """Sliding-window NPMI coherence per topic + mean over topics.
+
+    Pairs are unordered (NPMI is symmetric); each topic's score is the
+    mean pairwise NPMI in [-1, 1], with never-co-occurring pairs pinned
+    to the -1 limit. Higher is better.
+    """
+    top_words = np.asarray(top_words)
+    per_topic = np.zeros(top_words.shape[0], np.float64)
+    for t, row in enumerate(top_words):
+        vals = []
+        for m in range(1, len(row)):
+            for l in range(m):
+                p_i = stats.window_prob(row[l])
+                p_j = stats.window_prob(row[m])
+                if p_i == 0.0 or p_j == 0.0:
+                    continue  # word absent: pair carries no evidence
+                p_ij = stats.co_window_prob(row[l], row[m])
+                if p_ij == 0.0:
+                    vals.append(-1.0)
+                    continue
+                if p_ij >= 1.0:
+                    vals.append(1.0)  # degenerate: every window has both
+                    continue
+                vals.append(
+                    float(np.log(p_ij / (p_i * p_j)) / (-np.log(p_ij)))
+                )
+        per_topic[t] = np.mean(vals) if vals else 0.0
+    return float(per_topic.mean()), per_topic

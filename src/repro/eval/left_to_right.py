@@ -1,0 +1,145 @@
+"""Wallach-style left-to-right held-out evaluation (particle estimate).
+
+Estimates ``log p(w_1..w_L | N_wk, N_k, hyper)`` for one held-out
+document under the frozen-model predictive process: topics follow the
+Polya-urn doc prior ``p(z_n = k | z_{<n}) ∝ count_{<n}(k) + alpha_k``
+and words follow the frozen ``phi_wk = (N_wk + beta)/(N_k + W beta)``.
+The exact marginal sums over K^L assignments; the left-to-right
+algorithm (Wallach et al. 2009, "Evaluation Methods for Topic Models",
+Alg. 1) replaces that sum with R particles swept position by position:
+
+    for n = 1..L:
+        resample z_{<n} for every particle (the full variant)
+        p_n^{(r)} = sum_k p(z=k | z^{(r)}_{<n}) phi[w_n, k]
+        draw z^{(r)}_n ∝ p(z=k | z^{(r)}_{<n}) phi[w_n, k]
+    log p(w) ≈ sum_n log mean_r p_n^{(r)}
+
+``exhaustive_llh`` computes the K^L enumeration exactly — the oracle
+the tests cross-check the particle estimate against on short documents.
+
+Host-side numpy throughout (evaluation read, seeded generator in, so a
+trajectory is bit-reproducible).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def _host_alpha_k(n_k: np.ndarray, hyper) -> np.ndarray:
+    """Numpy mirror of ``LDAHyperParams.alpha_k`` (frozen n_k)."""
+    k = hyper.num_topics
+    if not hyper.asymmetric_alpha:
+        return np.full(k, hyper.alpha, np.float64)
+    n_k = np.asarray(n_k, np.float64)
+    return (k * hyper.alpha) * (n_k + hyper.alpha_prime / k) / (
+        n_k.sum() + hyper.alpha_prime
+    )
+
+
+def _frozen_phi(n_wk: np.ndarray, n_k: np.ndarray, words: np.ndarray,
+                hyper) -> np.ndarray:
+    """(L, K) frozen word-topic probabilities for the doc's tokens."""
+    n_wk = np.asarray(n_wk, np.float64)
+    n_k = np.asarray(n_k, np.float64)
+    w_total = n_wk.shape[0]
+    return (n_wk[np.asarray(words)] + hyper.beta) / (
+        n_k + w_total * hyper.beta
+    )[None, :]
+
+
+def left_to_right_llh(
+    n_wk: np.ndarray,
+    n_k: np.ndarray,
+    words: np.ndarray,
+    hyper,
+    num_particles: int = 20,
+    rng: Optional[np.random.Generator] = None,
+    resample: bool = True,
+) -> float:
+    """Particle left-to-right estimate of ``log p(words | model)``.
+
+    Args:
+        n_wk: (W, K) frozen word-topic counts.
+        n_k: (K,) frozen topic totals.
+        words: (L,) token word ids of the held-out document.
+        hyper: ``LDAHyperParams`` (alpha_k derives from the frozen n_k).
+        num_particles: R; the estimator variance shrinks as 1/R.
+        rng: seeded ``np.random.Generator`` — pass one for reproducible
+            trajectories (default: fresh default_rng()).
+        resample: run the full variant (resweep ``z_{<n}`` before every
+            position). False = the cheaper O(L) variant; biased slightly
+            high on long docs but far faster.
+
+    Returns:
+        The scalar log-likelihood estimate (natural log).
+    """
+    rng = rng if rng is not None else np.random.default_rng()
+    words = np.asarray(words)
+    l = int(words.shape[0])
+    if l == 0:
+        return 0.0
+    k = hyper.num_topics
+    r = int(num_particles)
+    alpha_k = _host_alpha_k(n_k, hyper)
+    alpha_sum = float(alpha_k.sum())
+    phi = _frozen_phi(n_wk, n_k, words, hyper)  # (L, K)
+
+    z = np.zeros((r, l), np.int64)
+    counts = np.zeros((r, k), np.float64)
+    total = 0.0
+    for n in range(l):
+        if resample:
+            for m in range(n):
+                # remove position m, resample it from the conditional
+                np.subtract.at(counts, (np.arange(r), z[:, m]), 1.0)
+                probs = (counts + alpha_k) * phi[m][None, :]
+                z[:, m] = _categorical_rows(rng, probs)
+                np.add.at(counts, (np.arange(r), z[:, m]), 1.0)
+        weights = (counts + alpha_k) * phi[n][None, :]  # (R, K)
+        p_n = weights.sum(axis=1) / (n + alpha_sum)
+        total += float(np.log(max(p_n.mean(), 1e-300)))
+        z[:, n] = _categorical_rows(rng, weights)
+        np.add.at(counts, (np.arange(r), z[:, n]), 1.0)
+    return total
+
+
+def _categorical_rows(rng: np.random.Generator,
+                      weights: np.ndarray) -> np.ndarray:
+    """One categorical draw per row of an unnormalized (R, K) matrix."""
+    cdf = np.cumsum(weights, axis=1)
+    u = rng.random(weights.shape[0]) * cdf[:, -1]
+    return np.minimum(
+        (cdf < u[:, None]).sum(axis=1), weights.shape[1] - 1
+    ).astype(np.int64)
+
+
+def exhaustive_llh(n_wk: np.ndarray, n_k: np.ndarray, words: np.ndarray,
+                   hyper) -> float:
+    """Exact ``log p(words | model)`` by K^L enumeration (test oracle).
+
+    Feasible only for short documents; the left-to-right tests pin the
+    particle estimate against this on 3-token documents.
+    """
+    words = np.asarray(words)
+    l = int(words.shape[0])
+    if l == 0:
+        return 0.0
+    k = hyper.num_topics
+    assert k ** l <= 2_000_000, "enumeration oracle: document too long"
+    alpha_k = _host_alpha_k(n_k, hyper)
+    alpha_sum = float(alpha_k.sum())
+    phi = _frozen_phi(n_wk, n_k, words, hyper)  # (L, K)
+
+    total = 0.0
+    from itertools import product
+
+    for assign in product(range(k), repeat=l):
+        counts = np.zeros(k, np.float64)
+        p = 1.0
+        for n, zn in enumerate(assign):
+            p *= (counts[zn] + alpha_k[zn]) / (n + alpha_sum) * phi[n, zn]
+            counts[zn] += 1.0
+        total += p
+    return float(np.log(total))

@@ -1,0 +1,111 @@
+"""One quality evaluator for sessions, compare tables, and benchmarks.
+
+``QualityEval`` owns the corpus-side statistics (built once) and turns a
+frozen model snapshot ``(n_wk, n_k)`` into the standard quality record::
+
+    {"coherence_umass", "coherence_npmi", "l2r_llh", "l2r_per_token"}
+
+(the left-to-right keys only when ``l2r_docs > 0``). ``TrainSession``
+fires it as the "quality" schedule action on the ``quality_every``
+cadence, ``launch/compare.py --sessions`` prints the trajectories, and
+``benchmarks/bench_quality.py`` records them per backend into
+``BENCH_quality.json`` — so backend/knob choices are judged on quality
+curves, not just docs/sec.
+
+Determinism contract: with the same seed everything here is
+bit-reproducible — the coherence stats are a pure function of the
+corpus, and the left-to-right particles draw from a generator seeded
+from ``(seed, iteration, doc)`` so two identical runs produce identical
+trajectories (tested per backend in ``tests/test_eval_quality.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.eval.coherence import (
+    CoherenceStats,
+    npmi_coherence,
+    top_topic_words,
+    umass_coherence,
+)
+from repro.eval.left_to_right import left_to_right_llh
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityConfig:
+    """Knobs of one quality evaluation (see ``RunConfig`` mirrors)."""
+
+    top_n: int = 10  # words per topic entering the coherence pairs
+    npmi_window: int = 10  # sliding-window size (<=0 skips NPMI)
+    l2r_docs: int = 0  # held-out docs for left-to-right (0 = skip)
+    l2r_particles: int = 20  # particles per document
+    l2r_max_len: int = 32  # truncate eval docs to this many tokens
+    l2r_seed: int = 0  # base seed of the particle streams
+
+
+class QualityEval:
+    """Reusable evaluator: corpus stats built once, queried per tick."""
+
+    def __init__(self, corpus, hyper, cfg: QualityConfig):
+        self.hyper = hyper
+        self.cfg = cfg
+        self.stats = CoherenceStats.from_corpus(
+            corpus, window=max(1, cfg.npmi_window)
+        )
+        # left-to-right eval docs: the longest-first ``l2r_docs`` doc ids
+        # would bias toward heavy docs; take evenly spaced doc ids instead
+        # (deterministic, covers the corpus) and truncate long ones
+        self._l2r_docs: List[np.ndarray] = []
+        if cfg.l2r_docs > 0:
+            n = min(cfg.l2r_docs, corpus.num_docs)
+            ids = np.linspace(0, corpus.num_docs - 1, n).astype(int)
+            for d in ids:
+                toks = self.stats.docs[int(d)]
+                if len(toks) == 0:
+                    continue
+                self._l2r_docs.append(toks[: cfg.l2r_max_len])
+
+    def evaluate(self, n_wk: np.ndarray, n_k: np.ndarray,
+                 iteration: int = 0) -> Dict[str, float]:
+        """Score one frozen model snapshot; returns the quality record."""
+        cfg = self.cfg
+        n_wk = np.asarray(n_wk)
+        n_k = np.asarray(n_k)
+        top = top_topic_words(n_wk, cfg.top_n)
+        out: Dict[str, float] = {}
+        umass, _ = umass_coherence(self.stats, top)
+        out["coherence_umass"] = umass
+        if cfg.npmi_window > 0:
+            npmi, _ = npmi_coherence(self.stats, top)
+            out["coherence_npmi"] = npmi
+        if self._l2r_docs:
+            total = 0.0
+            tokens = 0
+            for i, toks in enumerate(self._l2r_docs):
+                rng = np.random.default_rng(
+                    (cfg.l2r_seed, int(iteration), i)
+                )
+                total += left_to_right_llh(
+                    n_wk, n_k, toks, self.hyper,
+                    num_particles=cfg.l2r_particles, rng=rng,
+                )
+                tokens += len(toks)
+            out["l2r_llh"] = total
+            out["l2r_per_token"] = total / max(1, tokens)
+        return out
+
+    @classmethod
+    def from_run_config(cls, corpus, hyper, run_cfg,
+                        ) -> Optional["QualityEval"]:
+        """Build from ``RunConfig`` quality fields; None when disabled."""
+        if run_cfg.quality_every <= 0:
+            return None
+        return cls(corpus, hyper, QualityConfig(
+            top_n=run_cfg.quality_top_n,
+            npmi_window=run_cfg.quality_npmi_window,
+            l2r_docs=run_cfg.quality_l2r_docs,
+            l2r_particles=run_cfg.quality_l2r_particles,
+        ))

@@ -14,7 +14,13 @@ Two modes, both going through the unified driver stack:
   wiring — and the eval trajectories print side by side
 
       PYTHONPATH=src python -m repro.launch.compare --sessions \
-          run_baseline.json run_opt.json [--topics 32] [--eval-every 5]
+          run_baseline.json run_opt.json [--topics 32] [--eval-every 5] \
+          [--quality-every 5]
+
+  ``--quality-every`` (or ``quality_every`` in either config) adds the
+  model-quality columns — UMass/NPMI coherence and left-to-right
+  held-out llh per token (``repro.eval``, DESIGN.md §9) — so a knob or
+  backend choice is judged on quality curves, not just docs/sec.
 """
 from __future__ import annotations
 
@@ -25,7 +31,12 @@ from repro.launch.roofline import roofline_terms
 
 
 def compare_sessions(args) -> None:
-    """Run two RunConfigs via TrainSession on one corpus; print llh/ppl."""
+    """Run two RunConfigs via TrainSession on one corpus; print the eval
+    trajectories side by side — llh/perplexity always, plus the quality
+    columns (UMass/NPMI coherence, left-to-right llh) whenever either
+    config runs the quality action (``quality_every`` / --quality-every)."""
+    import dataclasses
+
     import jax
 
     from repro.core.types import LDAHyperParams
@@ -42,27 +53,44 @@ def compare_sessions(args) -> None:
         with open(path) as f:
             cfg = RunConfig.from_json(f.read())
         if args.eval_every:
-            import dataclasses
-
             cfg = dataclasses.replace(cfg, eval_every=args.eval_every)
+        if args.quality_every:
+            cfg = dataclasses.replace(cfg, quality_every=args.quality_every)
         session = TrainSession(corpus, hyper, cfg)
         traj = []
         session.run(
             jax.random.key(args.seed),
             callback=lambda st, m: traj.append(
-                (int(st.iteration), m["llh"], m["perplexity"])
-            ) if "llh" in m else None,
+                dict(m, iteration=int(st.iteration))
+            ) if ("llh" in m or "coherence_umass" in m) else None,
         )
         runs[path] = traj
         plan = "single-box" if cfg.mesh_shape is None else \
             f"mesh {cfg.mesh_shape[0]}x{cfg.mesh_shape[1]}"
         print(f"# {path}: algorithm={cfg.algorithm} plan={plan}")
     a, b = runs[args.baseline], runs[args.optimized]
-    print("| iter | baseline llh | optimized llh | baseline ppl | optimized ppl |")
-    print("|---|---|---|---|---|")
-    for (ia, la, pa), (ib, lb, pb) in zip(a, b):
+    # quality columns appear when any tick of either run carried them
+    cols = [("llh", "llh", "{:.1f}"), ("perplexity", "ppl", "{:.2f}")]
+    for key, label, fmt in (
+        ("coherence_umass", "umass", "{:.3f}"),
+        ("coherence_npmi", "npmi", "{:.3f}"),
+        ("l2r_per_token", "l2r/tok", "{:.3f}"),
+    ):
+        if any(key in m for m in a + b):
+            cols.append((key, label, fmt))
+    header = "| iter |" + "".join(
+        f" baseline {label} | optimized {label} |" for _, label, _ in cols
+    )
+    print(header)
+    print("|---|" + "---|" * (2 * len(cols)))
+    for ma, mb in zip(a, b):
+        ia, ib = ma["iteration"], mb["iteration"]
         it = ia if ia == ib else f"{ia}/{ib}"
-        print(f"| {it} | {la:.1f} | {lb:.1f} | {pa:.2f} | {pb:.2f} |")
+        cells = []
+        for key, _, fmt in cols:
+            for m in (ma, mb):
+                cells.append(fmt.format(m[key]) if key in m else "-")
+        print(f"| {it} | " + " | ".join(cells) + " |")
 
 
 def main():
@@ -77,6 +105,9 @@ def main():
     ap.add_argument("--topics", type=int, default=32)
     ap.add_argument("--eval-every", type=int, default=0,
                     help="override both configs' eval cadence")
+    ap.add_argument("--quality-every", type=int, default=0,
+                    help="override both configs' quality-eval cadence "
+                         "(coherence + left-to-right columns)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--synthetic-docs", type=int, default=400)
     ap.add_argument("--synthetic-words", type=int, default=800)

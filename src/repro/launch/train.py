@@ -90,6 +90,23 @@ def build_parser() -> argparse.ArgumentParser:
                     help="eval cadence (llh/perplexity)")
     ap.add_argument("--target-perplexity", type=float, default=None,
                     help="stop once eval perplexity reaches this")
+    # -- model quality + Alg. 5 hyper opt (repro.eval, DESIGN.md §9) ------
+    ap.add_argument("--quality-every", type=int, default=0,
+                    help="model-quality eval cadence: UMass/NPMI "
+                         "coherence (+ left-to-right with --l2r-docs)")
+    ap.add_argument("--quality-top-n", type=int, default=10,
+                    help="top words per topic entering coherence")
+    ap.add_argument("--npmi-window", type=int, default=10,
+                    help="NPMI sliding-window size (0 = UMass only)")
+    ap.add_argument("--l2r-docs", type=int, default=0,
+                    help="held-out docs for left-to-right eval (0 = skip)")
+    ap.add_argument("--l2r-particles", type=int, default=20,
+                    help="particles per left-to-right document")
+    ap.add_argument("--hyper-every", type=int, default=0,
+                    help="Alg. 5 hyper-opt cadence: Minka fixed-point "
+                         "alpha + beta annealing (0 = off)")
+    ap.add_argument("--beta-anneal", type=float, default=1.0,
+                    help="beta *= this per hyper firing (1.0 = no anneal)")
     ap.add_argument("--synthetic-docs", type=int, default=1000,
                     help="synthetic corpus size (when --corpus is not given)")
     ap.add_argument("--synthetic-words", type=int, default=2000)
@@ -242,6 +259,13 @@ def main() -> None:
             metrics_out=args.metrics_out,
             autopilot=args.autopilot,
             autopilot_every=args.autopilot_every,
+            quality_every=args.quality_every,
+            quality_top_n=args.quality_top_n,
+            quality_npmi_window=args.npmi_window,
+            quality_l2r_docs=args.l2r_docs,
+            quality_l2r_particles=args.l2r_particles,
+            hyper_every=args.hyper_every,
+            hyper_beta_anneal=args.beta_anneal,
         )
 
     if args.dump_config:
@@ -288,6 +312,15 @@ def main() -> None:
             line += (f"  llh {metrics['llh']:.1f}"
                      f"  ppl {metrics['perplexity']:.1f}"
                      f"  change {metrics['change_rate']:.3f}")
+        if "coherence_umass" in metrics:
+            line += f"  umass {metrics['coherence_umass']:.3f}"
+        if "coherence_npmi" in metrics:
+            line += f"  npmi {metrics['coherence_npmi']:.3f}"
+        if "l2r_per_token" in metrics:
+            line += f"  l2r/tok {metrics['l2r_per_token']:.3f}"
+        if "hyper" in metrics:
+            line += (f"  hyper a={metrics['hyper']['alpha']:.4f}"
+                     f" b={metrics['hyper']['beta']:.4f}")
         if "row_pads" in metrics:
             kw, kd = metrics["row_pads"]
             line += f"  repad kw={kw} kd={kd}"

@@ -119,6 +119,20 @@ class RunConfig:
       All four are inert by default: with ``metrics_out=None`` and
       ``autopilot=False`` no telemetry is built and the schedule is
       bit-identical to a pre-observability session (pinned by test).
+    * ``quality_every`` + ``quality_*`` — model-quality evaluation
+      (``repro.eval``, DESIGN.md §9): UMass/NPMI topic coherence over
+      the top ``quality_top_n`` words per topic and (when
+      ``quality_l2r_docs > 0``) Wallach left-to-right held-out
+      log-likelihood, contributed to the iteration metrics as
+      ``coherence_umass``/``coherence_npmi``/``l2r_llh``/
+      ``l2r_per_token``. 0 disables (no evaluator is built).
+    * ``hyper_every``/``hyper_alpha``/``hyper_beta_anneal``/
+      ``hyper_beta_floor`` — Alg. 5 hyper-parameter optimization as a
+      schedule action: a Minka fixed-point step on the scalar alpha
+      concentration and geometric beta annealing toward a floor, fired
+      on the cadence; compiled steps rebuild when hypers change.
+      ``hyper_every=0`` disables and is pinned bit-identical to a
+      no-hyper run (same contract as the autopilot).
     """
 
     # -- algorithm + sampler knobs (one SamplerKnobs derivation) ----------
@@ -166,6 +180,17 @@ class RunConfig:
     metrics_every: int = 1  # telemetry record cadence (iterations)
     autopilot: bool = False  # measured backend/capacity re-pick when True
     autopilot_every: int = 0  # decision cadence (0 = rebuild_every, else 10)
+    # -- model-quality evaluation (repro.eval, DESIGN.md §9) ----------------
+    quality_every: int = 0  # coherence (+ left-to-right) cadence (0 = off)
+    quality_top_n: int = 10  # top words per topic for coherence
+    quality_npmi_window: int = 10  # NPMI sliding-window size (0 = UMass only)
+    quality_l2r_docs: int = 0  # left-to-right held-out docs (0 = skip l2r)
+    quality_l2r_particles: int = 20  # particles per left-to-right doc
+    # -- Alg. 5 hyper-parameter optimization (DESIGN.md §9.3) ---------------
+    hyper_every: int = 0  # Minka alpha + beta anneal cadence (0 = off)
+    hyper_alpha: bool = True  # run the Minka fixed-point alpha step
+    hyper_beta_anneal: float = 1.0  # beta *= this per firing (1.0 = off)
+    hyper_beta_floor: float = 1e-4  # annealing floor for beta
 
     def knobs(self) -> SamplerKnobs:
         return knobs_from(self)
@@ -258,6 +283,12 @@ class ExecutionPlan:
 
     def merge(self, state, topic_map):
         """Apply a duplicate-topic map (remap assignments, merge counts)."""
+        raise NotImplementedError
+
+    def set_hyper(self, hyper: LDAHyperParams) -> None:
+        """Swap the model hyper-parameters in place (the Alg. 5 "hyper"
+        action). Anything compiled against the old values — backend aux
+        tables, the mesh plan's jitted step/llh/rebuild — is rebuilt."""
         raise NotImplementedError
 
     def host_n_wk(self, state) -> np.ndarray:
@@ -400,6 +431,11 @@ class SingleBoxPlan(ExecutionPlan):
         self._aux = self.backend.prepare(self.corpus, self.hyper,
                                          self._knobs)
         return True
+
+    def set_hyper(self, hyper: LDAHyperParams) -> None:
+        self.hyper = hyper
+        # aux tables may encode beta/alpha (alias tables, frozen CDFs)
+        self._aux = self.backend.prepare(self.corpus, hyper, self._knobs)
 
     def merge(self, state: CGSState, topic_map) -> CGSState:
         tm = jnp.asarray(topic_map, jnp.int32)
@@ -601,6 +637,23 @@ class MeshPlan(ExecutionPlan):
         self._build_step()
         return True
 
+    def set_hyper(self, hyper: LDAHyperParams) -> None:
+        from repro.core.distributed import make_dist_llh, make_rebuild_counts
+
+        self.hyper = hyper
+        if self._data is None:
+            return  # pre-init: init() builds everything against self.hyper
+        # the compiled step, llh, and rebuild all close over hyper
+        self._llh_fn = make_dist_llh(
+            self.mesh, hyper, self.grid.words_per_shard,
+            self.grid.docs_per_shard,
+        )
+        self._rebuild_fn = make_rebuild_counts(
+            self.mesh, hyper, self.grid.words_per_shard,
+            self.grid.docs_per_shard,
+        )
+        self._build_step()
+
     def merge(self, state, topic_map):
         tm = jnp.asarray(topic_map, jnp.int32)
         state = state._replace(
@@ -678,6 +731,13 @@ class TrainSession:
             self._autopilot_policy = TrainAutopilot(
                 self._autopilot_candidates()
             )
+        # model-quality evaluator (repro.eval, DESIGN.md §9) — built ONLY
+        # when the cadence is on; corpus stats are computed once here
+        self._quality = None
+        if cfg.quality_every > 0:
+            from repro.eval import QualityEval
+
+            self._quality = QualityEval.from_run_config(corpus, hyper, cfg)
         self.schedule = self._build_schedule()
         self._last_model_save: Optional[int] = None
         self._train_ckpt = None
@@ -837,6 +897,12 @@ class TrainSession:
                 "autopilot", self._autopilot_action,
                 every=cfg.autopilot_every or cfg.rebuild_every or 10,
             ))
+        if cfg.hyper_every > 0:
+            # structural: evals/quality on the same iteration score the
+            # post-update hypers (same convention as rebuild/merge)
+            sched.add(ScheduledAction(
+                "hyper", self._hyper_action, every=cfg.hyper_every,
+            ))
         if cfg.merge_every > 0:
             sched.add(ScheduledAction(
                 "merge", lambda ctx, st: self.merge_duplicates(st),
@@ -855,6 +921,10 @@ class TrainSession:
                 return st
 
             sched.add(ScheduledAction("eval", _eval, every=cfg.eval_every))
+        if cfg.quality_every > 0:
+            sched.add(ScheduledAction(
+                "quality", self._quality_action, every=cfg.quality_every,
+            ))
         if cfg.checkpoint_dir and cfg.checkpoint_every > 0:
             sched.add(ScheduledAction(
                 "model_checkpoint",
@@ -929,6 +999,41 @@ class TrainSession:
             rec.update(iteration=int(state.iteration), applied=applied)
             self.telemetry.emit_decision(rec)
             ctx.metrics.setdefault("autopilot", []).append(rec)
+        return state
+
+    # -- model quality + Alg. 5 hyper actions (DESIGN.md §9) -----------------
+    def _quality_action(self, ctx: ActionContext, state):
+        """Score the frozen model snapshot (coherence + left-to-right)
+        into the iteration metrics; read-only, never touches state."""
+        n_wk, n_k = self.plan.model_arrays(state)
+        ctx.metrics.update(
+            self._quality.evaluate(n_wk, n_k, int(state.iteration))
+        )
+        return state
+
+    def _hyper_action(self, ctx: ActionContext, state):
+        """One Alg. 5 hyper move: Minka fixed-point alpha + beta anneal
+        against the CURRENT doc-topic counts. A changed hyper rebuilds
+        whatever the plan compiled against the old one (``set_hyper``);
+        an unchanged one is a recorded no-op."""
+        from repro.core.hyper import optimize_hyper
+
+        cfg = self.cfg
+        n_kd = np.asarray(jax.device_get(state.n_kd))
+        new_hyper = optimize_hyper(
+            self.hyper, n_kd,
+            update_alpha=cfg.hyper_alpha,
+            beta_anneal=cfg.hyper_beta_anneal,
+            beta_floor=cfg.hyper_beta_floor,
+        )
+        if new_hyper is not self.hyper:
+            self.hyper = new_hyper
+            self.plan.set_hyper(new_hyper)
+            if self._quality is not None:
+                self._quality.hyper = new_hyper  # l2r alpha_k follows
+            ctx.metrics["hyper"] = {
+                "alpha": new_hyper.alpha, "beta": new_hyper.beta,
+            }
         return state
 
     def _telemetry_action(self, ctx: ActionContext, state):

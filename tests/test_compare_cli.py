@@ -1,0 +1,120 @@
+"""launch/compare.py — both modes, end to end through main().
+
+* ``--sessions``: two RunConfig JSONs run on a shared synthetic corpus
+  via TrainSession; the printed trajectory table must parse and carry
+  the quality columns when ``--quality-every`` is set.
+* store diff (default): two dry-run JSON stores; the roofline-term
+  table must show the cells that moved and honor ``--min-ratio``.
+"""
+import json
+import re
+
+import pytest
+
+from repro.launch import compare
+from repro.train.session import RunConfig
+
+
+def _run_main(monkeypatch, capsys, argv):
+    monkeypatch.setattr("sys.argv", ["compare.py"] + argv)
+    compare.main()
+    return capsys.readouterr().out
+
+
+def _table_rows(out):
+    """Parse `| iter | ... |` body rows into lists of cell strings."""
+    rows = []
+    for line in out.splitlines():
+        if line.startswith("|") and not line.startswith("|---") \
+                and "iter" not in line:
+            rows.append([c.strip() for c in line.strip("|").split("|")])
+    return rows
+
+
+@pytest.fixture()
+def session_configs(tmp_path):
+    paths = []
+    for name, algo in [("base.json", "zen"), ("opt.json", "zen_sparse")]:
+        cfg = RunConfig(algorithm=algo, num_iterations=2, eval_every=1)
+        p = tmp_path / name
+        p.write_text(cfg.to_json())
+        paths.append(str(p))
+    return paths
+
+
+def test_sessions_mode_end_to_end(monkeypatch, capsys, session_configs):
+    base, opt = session_configs
+    out = _run_main(monkeypatch, capsys, [
+        "--sessions", base, opt, "--topics", "4",
+        "--synthetic-docs", "30", "--synthetic-words", "40",
+        "--synthetic-len", "12",
+    ])
+    assert "algorithm=zen " in out and "algorithm=zen_sparse" in out
+    header = next(l for l in out.splitlines() if l.startswith("| iter |"))
+    assert "baseline llh" in header and "optimized ppl" in header
+    assert "umass" not in header  # no quality flag -> no quality columns
+    rows = _table_rows(out)
+    assert [r[0] for r in rows] == ["1", "2"]
+    for r in rows:  # llh/ppl cells are floats for both runs
+        assert all(re.fullmatch(r"-?\d+\.\d+", c) for c in r[1:]), r
+
+
+def test_sessions_mode_quality_columns(monkeypatch, capsys, session_configs):
+    base, opt = session_configs
+    out = _run_main(monkeypatch, capsys, [
+        "--sessions", base, opt, "--topics", "4", "--quality-every", "2",
+        "--synthetic-docs", "30", "--synthetic-words", "40",
+        "--synthetic-len", "12",
+    ])
+    header = next(l for l in out.splitlines() if l.startswith("| iter |"))
+    for label in ("umass", "npmi"):
+        assert f"baseline {label}" in header and f"optimized {label}" in header
+    rows = _table_rows(out)
+    # iteration 1: eval only -> quality cells are "-"; iteration 2: filled
+    assert rows[0][0] == "1" and "-" in rows[0]
+    umass_col = 1 + 2 * 2  # after llh/ppl pairs: baseline umass
+    assert re.fullmatch(r"-?\d+\.\d+", rows[1][umass_col])
+
+
+def _store(flops, coll):
+    return {
+        "zenlda|4096x64|single": {
+            "ok": True, "flops_per_device": flops,
+            "bytes_per_device": 1e9, "collective_bytes_per_device": coll,
+        },
+    }
+
+
+def test_store_diff_mode(monkeypatch, capsys, tmp_path):
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    a.write_text(json.dumps(_store(2e12, 0.0)))
+    b.write_text(json.dumps(_store(1e12, 0.0)))
+    out = _run_main(monkeypatch, capsys, [str(a), str(b)])
+    # compute moved 2x -> row printed; collective is 0 -> skipped
+    row = next(l for l in out.splitlines() if "zenlda|4096x64|single" in l)
+    assert "compute" in row and " 2.00 |" in row
+    assert "collective" not in out
+
+
+def test_store_diff_min_ratio_filters(monkeypatch, capsys, tmp_path):
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    a.write_text(json.dumps(_store(1.02e12, 0.0)))
+    b.write_text(json.dumps(_store(1e12, 0.0)))
+    out = _run_main(monkeypatch, capsys, [str(a), str(b)])
+    assert "compute" not in out  # 1.02x under the default 1.05 gate
+    out = _run_main(monkeypatch, capsys,
+                    [str(a), str(b), "--min-ratio", "1.01"])
+    assert "compute" in out
+
+
+def test_store_diff_skips_failed_cells(monkeypatch, capsys, tmp_path):
+    a, b = tmp_path / "a.json", tmp_path / "b.json"
+    bad = _store(2e12, 0.0)
+    bad["zenlda|4096x64|single"]["ok"] = False
+    a.write_text(json.dumps(bad))
+    b.write_text(json.dumps(_store(1e12, 0.0)))
+    out = _run_main(monkeypatch, capsys, [str(a), str(b)])
+    assert "zenlda|4096x64|single" not in [
+        l.split("|")[1].strip() for l in out.splitlines()
+        if l.startswith("| zen")
+    ]

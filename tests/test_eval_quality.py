@@ -1,0 +1,334 @@
+"""Model-quality suite (repro.eval + the session's quality/hyper actions).
+
+Every metric lands with an independent oracle, not a smoke run:
+
+* UMass and NPMI coherence are pinned against hand-computed values on a
+  3-document corpus (doc frequencies and window sets enumerable by eye).
+* Left-to-right held-out llh is cross-checked against exhaustive K^L
+  enumeration on short documents (exact for L=1, tight tolerance for
+  L=3 with many particles).
+* The Minka alpha fixed point is pinned against the harmonic-sum
+  identity psi(n + a) - psi(a) = sum_{i<n} 1/(a + i) — no digamma in
+  the oracle.
+* The Alg. 5 "hyper" schedule action is pinned bit-identical to a
+  no-hyper run when disabled (the autopilot inertness contract), and
+  the quality trajectory is bit-reproducible per backend.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import algorithms
+from repro.core.hyper import anneal_beta, minka_alpha_update, optimize_hyper
+from repro.core.types import LDAHyperParams
+from repro.data import synthetic_lda_corpus
+from repro.eval import (
+    CoherenceStats,
+    QualityConfig,
+    QualityEval,
+    exhaustive_llh,
+    left_to_right_llh,
+    npmi_coherence,
+    top_topic_words,
+    umass_coherence,
+)
+from repro.train.session import RunConfig, TrainSession
+
+
+# ---------------------------------------------------------------------------
+# coherence: hand-computed oracles
+# ---------------------------------------------------------------------------
+
+def _tiny_stats(window=2):
+    # doc0 = [0, 1, 2], doc1 = [0, 1], doc2 = [2, 3]
+    word = np.array([0, 1, 2, 0, 1, 2, 3], np.int32)
+    doc = np.array([0, 0, 0, 1, 1, 2, 2], np.int32)
+    return CoherenceStats(word, doc, 3, window=window)
+
+
+def test_umass_hand_computed():
+    """D(0)=D(1)=D(2)=2, D(3)=1; D(0,1)=2, D(2,3)=1 — by eye."""
+    stats = _tiny_stats()
+    assert stats.doc_freq(0) == 2 and stats.doc_freq(3) == 1
+    assert stats.co_doc_freq(0, 1) == 2 and stats.co_doc_freq(2, 3) == 1
+    assert stats.co_doc_freq(0, 3) == 0
+    top = np.array([[0, 1], [2, 3]])
+    mean, per_topic = umass_coherence(stats, top)
+    # topic0: log((D(1,0)+1)/D(0)) = log(3/2); topic1: log((1+1)/2) = 0
+    np.testing.assert_allclose(per_topic, [math.log(1.5), 0.0], rtol=1e-12)
+    np.testing.assert_allclose(mean, math.log(1.5) / 2, rtol=1e-12)
+
+
+def test_umass_skips_absent_denominator():
+    """A zero-count word in the top-N must not divide by zero."""
+    stats = _tiny_stats()
+    top = np.array([[7, 0]])  # word 7 never occurs; D(7) = 0
+    mean, per_topic = umass_coherence(stats, top)
+    # the (0, 7) pair is skipped -> score 0, not -inf/nan
+    assert per_topic[0] == 0.0 and np.isfinite(mean)
+
+
+def test_npmi_hand_computed():
+    """Windows (size 2): {0,1},{1,2} from doc0; {0,1} doc1; {2,3} doc2."""
+    stats = _tiny_stats(window=2)
+    assert stats.num_windows == 4
+    np.testing.assert_allclose(stats.window_prob(0), 2 / 4)
+    np.testing.assert_allclose(stats.window_prob(1), 3 / 4)
+    np.testing.assert_allclose(stats.co_window_prob(0, 1), 2 / 4)
+    top = np.array([[0, 1], [2, 3]])
+    mean, per_topic = npmi_coherence(stats, top)
+    # (0,1): log((1/2)/((1/2)(3/4)))/(-log(1/2)) = log(4/3)/log 2
+    # (2,3): log((1/4)/((1/2)(1/4)))/(-log(1/4)) = log 2/(2 log 2) = 1/2
+    expect0 = math.log(4 / 3) / math.log(2)
+    np.testing.assert_allclose(per_topic, [expect0, 0.5], rtol=1e-12)
+    np.testing.assert_allclose(mean, (expect0 + 0.5) / 2, rtol=1e-12)
+
+
+def test_npmi_never_cooccurring_pair_is_minus_one():
+    stats = _tiny_stats(window=2)
+    mean, per_topic = npmi_coherence(stats, np.array([[0, 3]]))
+    assert per_topic[0] == -1.0
+
+
+def test_top_topic_words_order_and_ties():
+    n_wk = np.array([[5, 1], [9, 1], [5, 7], [0, 7]], np.int64)
+    top = top_topic_words(n_wk, 3)
+    # topic 0: counts [5,9,5,0] -> 1, then tie 5/5 -> lower word id first
+    np.testing.assert_array_equal(top[0], [1, 0, 2])
+    # topic 1: tie 7/7 -> word 2 before 3
+    np.testing.assert_array_equal(top[1], [2, 3, 0])
+
+
+# ---------------------------------------------------------------------------
+# left-to-right vs exhaustive enumeration
+# ---------------------------------------------------------------------------
+
+_LLH_MODEL = dict(
+    n_wk=np.array([[8, 1], [1, 8], [4, 4]], np.int64),
+    n_k=np.array([13, 13], np.int64),
+)
+
+
+def test_l2r_single_token_exact():
+    """L=1 has no assignment uncertainty: the estimate IS the exact
+    marginal, independent of particle count."""
+    hyper = LDAHyperParams(num_topics=2, alpha=0.3, beta=0.2)
+    words = np.array([1])
+    exact = exhaustive_llh(**_LLH_MODEL, words=words, hyper=hyper)
+    est = left_to_right_llh(**_LLH_MODEL, words=words, hyper=hyper,
+                            num_particles=3,
+                            rng=np.random.default_rng(0))
+    np.testing.assert_allclose(est, exact, rtol=1e-12)
+
+
+@pytest.mark.parametrize("asymmetric", [False, True])
+def test_l2r_matches_exhaustive_three_tokens(asymmetric):
+    """The tentpole oracle: particle estimate vs K^3 enumeration."""
+    hyper = LDAHyperParams(num_topics=2, alpha=0.3, beta=0.2,
+                           asymmetric_alpha=asymmetric)
+    words = np.array([0, 1, 2])
+    exact = exhaustive_llh(**_LLH_MODEL, words=words, hyper=hyper)
+    est = left_to_right_llh(**_LLH_MODEL, words=words, hyper=hyper,
+                            num_particles=4000,
+                            rng=np.random.default_rng(0))
+    assert abs(est - exact) < 0.05, (est, exact)
+
+
+def test_exhaustive_llh_two_tokens_hand_expansion():
+    """Cross-check the oracle itself on L=2 against the explicit
+    4-term sum written out by hand."""
+    hyper = LDAHyperParams(num_topics=2, alpha=0.5, beta=0.25,
+                           asymmetric_alpha=False)
+    n_wk = np.array([[2, 0], [1, 3]], np.int64)
+    n_k = np.array([3, 3], np.int64)
+    words = np.array([0, 1])
+    w_beta = 2 * 0.25
+    phi = [[(2 + .25) / (3 + w_beta), (0 + .25) / (3 + w_beta)],
+           [(1 + .25) / (3 + w_beta), (3 + .25) / (3 + w_beta)]]
+    a = [0.5, 0.5]
+    total = 0.0
+    for z0 in range(2):
+        for z1 in range(2):
+            p = (a[z0] / 1.0) * phi[0][z0]
+            p *= ((1.0 if z1 == z0 else 0.0) + a[z1]) / (1 + 1.0) * phi[1][z1]
+            total += p
+    got = exhaustive_llh(n_wk, n_k, words, hyper)
+    np.testing.assert_allclose(got, math.log(total), rtol=1e-12)
+
+
+def test_l2r_empty_doc():
+    hyper = LDAHyperParams(num_topics=2)
+    assert left_to_right_llh(**_LLH_MODEL, words=np.array([], np.int32),
+                             hyper=hyper,
+                             rng=np.random.default_rng(0)) == 0.0
+
+
+def test_l2r_seeded_reproducible():
+    hyper = LDAHyperParams(num_topics=2, alpha=0.3, beta=0.2)
+    words = np.array([0, 1, 2, 1])
+    a = left_to_right_llh(**_LLH_MODEL, words=words, hyper=hyper,
+                          num_particles=50, rng=np.random.default_rng(7))
+    b = left_to_right_llh(**_LLH_MODEL, words=words, hyper=hyper,
+                          num_particles=50, rng=np.random.default_rng(7))
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Minka fixed point + beta annealing (Alg. 5)
+# ---------------------------------------------------------------------------
+
+def test_minka_alpha_harmonic_sum_oracle():
+    """psi(n + a) - psi(a) == sum_{i<n} 1/(a + i) for integer n — the
+    oracle needs no digamma at all."""
+    n_kd = np.array([[3, 1], [2, 4], [0, 2]], np.int64)
+    alpha = 0.5
+    k = 2
+
+    def rising(n, a):
+        return sum(1.0 / (a + i) for i in range(int(n)))
+
+    num = sum(rising(n, alpha) for n in n_kd.ravel())
+    den = k * sum(rising(n, k * alpha) for n in n_kd.sum(axis=1))
+    expect = alpha * num / den
+    got = minka_alpha_update(n_kd, alpha)
+    np.testing.assert_allclose(got, expect, rtol=1e-10)
+
+
+def test_minka_alpha_padding_rows_inert():
+    """All-zero doc rows (mesh padding) must not move the update."""
+    n_kd = np.array([[3, 1], [2, 4]], np.int64)
+    padded = np.vstack([n_kd, np.zeros((5, 2), np.int64)])
+    np.testing.assert_allclose(
+        minka_alpha_update(n_kd, 0.4), minka_alpha_update(padded, 0.4),
+        rtol=1e-12,
+    )
+
+
+def test_minka_alpha_degenerate_keeps_value():
+    assert minka_alpha_update(np.zeros((3, 2), np.int64), 0.3) == 0.3
+
+
+def test_anneal_beta():
+    assert anneal_beta(0.01, 1.0, 1e-4) == 0.01
+    np.testing.assert_allclose(anneal_beta(0.01, 0.5, 1e-4), 0.005)
+    assert anneal_beta(0.01, 0.5, 0.008) == 0.008  # floor clamps
+
+
+def test_optimize_hyper_noop_returns_same_object():
+    hyper = LDAHyperParams(num_topics=2, alpha=0.3, beta=0.2)
+    out = optimize_hyper(hyper, np.zeros((2, 2), np.int64),
+                         update_alpha=True, beta_anneal=1.0)
+    assert out is hyper
+
+
+# ---------------------------------------------------------------------------
+# session integration: quality + hyper actions
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def quality_corpus():
+    corpus, _phi = synthetic_lda_corpus(
+        seed=0, num_docs=30, num_words=40, num_topics=4, avg_doc_len=20
+    )
+    return corpus
+
+
+_HYPER = LDAHyperParams(num_topics=4, alpha=0.1, beta=0.05)
+
+
+def test_quality_action_fires_on_cadence(quality_corpus):
+    cfg = RunConfig(algorithm="zen", num_iterations=4, quality_every=2,
+                    quality_l2r_docs=2, quality_l2r_particles=4)
+    session = TrainSession(quality_corpus, _HYPER, cfg)
+    assert "quality" in session.schedule.names()
+    ticks = []
+    session.run(jax.random.key(0), callback=lambda st, m: ticks.append(
+        (int(st.iteration), m)) if m else None)
+    assert [i for i, _ in ticks] == [2, 4]
+    for _, m in ticks:
+        for key in ("coherence_umass", "coherence_npmi", "l2r_llh",
+                    "l2r_per_token"):
+            assert key in m and np.isfinite(m[key]), m
+
+
+def test_quality_disabled_builds_nothing(quality_corpus):
+    session = TrainSession(quality_corpus, _HYPER,
+                           RunConfig(algorithm="zen", num_iterations=1))
+    assert session._quality is None
+    assert "quality" not in session.schedule.names()
+    assert "hyper" not in session.schedule.names()
+
+
+def test_hyper_disabled_bit_identical(quality_corpus):
+    """The Alg. 5 contract: hyper_every=0 is INERT — same schedule,
+    bit-identical assignments and counts as a config that never heard
+    of hyper optimization (whatever the other hyper knobs say)."""
+    base = TrainSession(quality_corpus, _HYPER,
+                        RunConfig(algorithm="zen", num_iterations=4))
+    off = TrainSession(quality_corpus, _HYPER, RunConfig(
+        algorithm="zen", num_iterations=4,
+        hyper_every=0, hyper_beta_anneal=0.5, hyper_alpha=False,
+    ))
+    assert base.schedule.names() == off.schedule.names()
+    fa = base.run(jax.random.key(0))
+    fb = off.run(jax.random.key(0))
+    np.testing.assert_array_equal(np.asarray(fa.topic), np.asarray(fb.topic))
+    np.testing.assert_array_equal(np.asarray(fa.n_wk), np.asarray(fb.n_wk))
+    assert off.hyper.beta == _HYPER.beta  # never annealed
+
+
+def test_hyper_action_updates_and_conserves(quality_corpus):
+    cfg = RunConfig(algorithm="zen", num_iterations=4, hyper_every=2,
+                    hyper_beta_anneal=0.9)
+    session = TrainSession(quality_corpus, _HYPER, cfg)
+    seen = []
+    final = session.run(jax.random.key(0), callback=lambda st, m: seen.append(
+        m["hyper"]) if "hyper" in m else None)
+    assert len(seen) == 2  # fired at 2 and 4
+    np.testing.assert_allclose(session.hyper.beta, _HYPER.beta * 0.9 ** 2,
+                               rtol=1e-12)
+    assert session.hyper.alpha != _HYPER.alpha  # Minka moved it
+    final.check_invariants(quality_corpus)  # counts still conserve
+    assert np.isfinite(session.llh(final))
+
+
+def test_quality_eval_reusable_and_deterministic(quality_corpus):
+    qe = QualityEval(quality_corpus, _HYPER,
+                     QualityConfig(top_n=5, l2r_docs=3, l2r_particles=6))
+    n_wk = np.random.default_rng(0).integers(
+        0, 9, (quality_corpus.num_words, 4))
+    n_k = n_wk.sum(axis=0)
+    a = qe.evaluate(n_wk, n_k, iteration=3)
+    b = qe.evaluate(n_wk, n_k, iteration=3)
+    assert a == b
+    # a different iteration reseeds the particles: coherence identical,
+    # l2r at most jitters within the estimator variance
+    c = qe.evaluate(n_wk, n_k, iteration=4)
+    assert c["coherence_umass"] == a["coherence_umass"]
+
+
+# ---------------------------------------------------------------------------
+# cross-backend quality determinism (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", algorithms.registered())
+def test_quality_trajectory_bit_reproducible(backend, quality_corpus):
+    """Same seed + same backend => bit-identical eval + quality
+    trajectory across two independent TrainSession.run() invocations
+    (extends the mesh-parity replay contract to the quality metrics)."""
+    cfg = RunConfig(algorithm=backend, num_iterations=2, eval_every=1,
+                    quality_every=1, quality_top_n=5,
+                    quality_l2r_docs=2, quality_l2r_particles=4)
+    trajs = []
+    for _ in range(2):
+        session = TrainSession(quality_corpus, _HYPER, cfg)
+        traj = []
+        session.run(jax.random.key(0),
+                    callback=lambda st, m: traj.append(
+                        (int(st.iteration), dict(m))))
+        trajs.append(traj)
+    assert trajs[0] == trajs[1]
+    # and the trajectory actually carries the quality keys
+    assert any("coherence_umass" in m for _, m in trajs[0])

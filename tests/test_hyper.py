@@ -40,3 +40,41 @@ def test_lower_threshold_merges_more():
     m_strict = duplicate_topic_map(n_wk, threshold=0.01)
     m_loose = duplicate_topic_map(n_wk, threshold=2.1)
     assert len(np.unique(m_loose)) <= len(np.unique(m_strict))
+
+
+def test_degenerate_all_below_threshold_keeps_min_topics():
+    """Regression: when EVERY pair is below threshold (e.g. a freshly
+    initialized near-uniform model), the map used to collapse the whole
+    model into topic 0.  The min-topic floor must keep >= 2 clusters."""
+    n_wk = np.full((20, 6), 3, np.int32)  # all topics identical
+    tmap = duplicate_topic_map(n_wk, threshold=10.0)
+    assert len(np.unique(tmap)) == 2  # floor holds, not 1
+    # floor respects K when min_topics > K
+    tiny = duplicate_topic_map(np.full((4, 2), 1, np.int32),
+                               threshold=10.0, min_topics=5)
+    assert len(np.unique(tiny)) == 2
+
+
+def test_degenerate_floor_merges_closest_pairs_first():
+    """With a floor of 2, the surviving split must separate the truly
+    distinct topic from the near-duplicates, not an arbitrary pair."""
+    # topics 0..2 identical, topic 3 far but still under a huge threshold
+    n_wk = np.array([[9, 9, 9, 0], [0, 0, 0, 9]], np.int32)
+    tmap = duplicate_topic_map(n_wk, threshold=100.0)
+    assert tmap[0] == tmap[1] == tmap[2] == 0  # duplicates merged
+    assert tmap[3] == 3  # the distinct topic survives as its own cluster
+
+
+def test_min_topics_one_restores_unguarded_collapse():
+    n_wk = np.full((20, 6), 3, np.int32)
+    tmap = duplicate_topic_map(n_wk, threshold=10.0, min_topics=1)
+    np.testing.assert_array_equal(tmap, np.zeros(6, np.int32))
+
+
+def test_floor_inert_on_normal_inputs():
+    """Non-degenerate matrices merge exactly as before the floor."""
+    n_wk = np.array([[5, 5, 0], [5, 5, 0], [0, 0, 10], [2, 2, 0]], np.int32)
+    np.testing.assert_array_equal(
+        duplicate_topic_map(n_wk, threshold=0.1),
+        duplicate_topic_map(n_wk, threshold=0.1, min_topics=1),
+    )

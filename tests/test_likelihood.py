@@ -1,4 +1,6 @@
 """Log-likelihood / perplexity metrics."""
+import math
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -51,6 +53,117 @@ def test_perplexity_definition(key, tiny_corpus, tiny_hyper):
     )
     # random assignment perplexity must be below vocab size, above 1
     assert 1.0 < ppl <= tiny_corpus.num_words * 2
+
+
+# ---------------------------------------------------------------------------
+# hand-computed pins on a 2-doc / 3-word / 2-topic corpus
+#
+# word = [0,1,1,2,2], doc = [0,0,1,1,1], z = [0,1,1,0,1]
+#   n_wk = [[1,0],[0,2],[1,1]]   n_kd = [[1,1],[1,2]]   n_k = [2,3]
+# Every expected value below is recomputed in-test with plain Python
+# loops over the definitions (footnote-6 predictive; collapsed joint) —
+# an oracle independent of the jax implementation.
+# ---------------------------------------------------------------------------
+
+def _pin_fixture(asymmetric):
+    import dataclasses as dc
+
+    import jax
+
+    from repro.core.types import CGSState, Corpus, LDAHyperParams
+
+    corpus = Corpus(word=jnp.array([0, 1, 1, 2, 2], jnp.int32),
+                    doc=jnp.array([0, 0, 1, 1, 1], jnp.int32),
+                    num_words=3, num_docs=2)
+    hyper = LDAHyperParams(num_topics=2, alpha=0.5, beta=0.25,
+                           alpha_prime=1.0, asymmetric_alpha=asymmetric)
+    state = CGSState(
+        topic=jnp.array([0, 1, 1, 0, 1], jnp.int32),
+        prev_topic=jnp.array([0, 1, 1, 0, 1], jnp.int32),
+        n_wk=jnp.array([[1, 0], [0, 2], [1, 1]], jnp.int32),
+        n_kd=jnp.array([[1, 1], [1, 2]], jnp.int32),
+        n_k=jnp.array([2, 3], jnp.int32),
+        rng=jax.random.key(0),
+    )
+    del dc
+    return corpus, hyper, state
+
+
+def _pin_reference(asymmetric):
+    """Pure-python re-derivation of both llh definitions."""
+    n_wk = [[1, 0], [0, 2], [1, 1]]
+    n_kd = [[1, 1], [1, 2]]
+    n_k = [2, 3]
+    n_d = [2, 3]
+    w, k, beta = 3, 2, 0.25
+    if asymmetric:
+        # alpha_k = K*alpha*(n_k + alpha'/K)/(N + alpha')
+        alpha_k = [2 * 0.5 * (n + 1.0 / 2) / (5 + 1.0) for n in n_k]
+    else:
+        alpha_k = [0.5, 0.5]
+    a_sum = sum(alpha_k)
+    pred = 0.0
+    for wd, d in zip([0, 1, 1, 2, 2], [0, 0, 1, 1, 1]):
+        p = sum(
+            (n_kd[d][t] + alpha_k[t]) / (n_d[d] + a_sum)
+            * (n_wk[wd][t] + beta) / (n_k[t] + w * beta)
+            for t in range(k)
+        )
+        pred += math.log(p)
+    lg = math.lgamma
+    word_part = (
+        k * lg(w * beta) - sum(lg(n + w * beta) for n in n_k)
+        + sum(lg(c + beta) for row in n_wk for c in row) - k * w * lg(beta)
+    )
+    doc_part = (
+        2 * lg(a_sum) - sum(lg(n + a_sum) for n in n_d)
+        + sum(lg(n_kd[d][t] + alpha_k[t]) for d in range(2) for t in range(k))
+        - 2 * sum(lg(a) for a in alpha_k)
+    )
+    return pred, word_part, doc_part
+
+
+def test_predictive_llh_hand_computed_symmetric():
+    corpus, hyper, state = _pin_fixture(asymmetric=False)
+    pred, _, _ = _pin_reference(asymmetric=False)
+    np.testing.assert_allclose(pred, -5.2430152746, rtol=1e-9)  # literal pin
+    got = float(predictive_llh(state, corpus, hyper))
+    np.testing.assert_allclose(got, pred, rtol=1e-5)
+
+
+def test_predictive_llh_hand_computed_asymmetric():
+    corpus, hyper, state = _pin_fixture(asymmetric=True)
+    pred, _, _ = _pin_reference(asymmetric=True)
+    np.testing.assert_allclose(pred, -5.2329003404, rtol=1e-9)  # literal pin
+    got = float(predictive_llh(state, corpus, hyper))
+    np.testing.assert_allclose(got, pred, rtol=1e-5)
+
+
+def test_joint_llh_hand_computed_symmetric():
+    corpus, hyper, state = _pin_fixture(asymmetric=False)
+    _, word, doc = _pin_reference(asymmetric=False)
+    np.testing.assert_allclose(word, -6.8775022358, rtol=1e-9)
+    np.testing.assert_allclose(doc, -4.8520302639, rtol=1e-9)
+    got = joint_llh(state, corpus, hyper)
+    np.testing.assert_allclose(float(got.word), word, rtol=5e-4)
+    np.testing.assert_allclose(float(got.doc), doc, rtol=5e-4)
+    np.testing.assert_allclose(float(got.total), word + doc, rtol=5e-4)
+
+
+def test_joint_llh_hand_computed_asymmetric():
+    corpus, hyper, state = _pin_fixture(asymmetric=True)
+    _, word, doc = _pin_reference(asymmetric=True)
+    np.testing.assert_allclose(doc, -4.8543047966, rtol=1e-9)
+    got = joint_llh(state, corpus, hyper)
+    np.testing.assert_allclose(float(got.word), word, rtol=5e-4)
+    np.testing.assert_allclose(float(got.doc), doc, rtol=5e-4)
+
+
+def test_perplexity_hand_computed():
+    corpus, hyper, state = _pin_fixture(asymmetric=False)
+    pred, _, _ = _pin_reference(asymmetric=False)
+    got = float(perplexity(state, corpus, hyper))
+    np.testing.assert_allclose(got, math.exp(-pred / 5), rtol=1e-5)
 
 
 def test_llh_improves_with_training(key, tiny_corpus, tiny_hyper):
